@@ -1,0 +1,36 @@
+"""Beyond-paper: DVFS x selection unified Pareto (DESIGN.md §9.4-9.5).
+
+Sweeps K over the DVFS-expanded system list (4 systems x 3 frequency
+levels = 12 virtual systems) and reports the energy/makespan frontier
+against selection-only scheduling."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import JSCC_SYSTEMS, SimConfig, make_npb_workload, sweep_k
+from repro.core.dvfs import dvfs_npb_workload
+
+KS = np.array([0.0, 0.05, 0.10, 0.20, 0.50])
+
+
+def run():
+    w_plain = make_npb_workload(JSCC_SYSTEMS)
+    w_dvfs = dvfs_npb_workload(JSCC_SYSTEMS, phis=(1.0, 0.8, 0.6))
+    t0 = time.perf_counter()
+    r_plain = sweep_k(w_plain, SimConfig(mode="paper", warm_start=True), KS)
+    r_dvfs = sweep_k(w_dvfs, SimConfig(mode="paper", warm_start=True), KS)
+    us = (time.perf_counter() - t0) * 1e6 / (2 * len(KS))
+    Ep = np.asarray(r_plain["total_energy"])
+    Ed = np.asarray(r_dvfs["total_energy"])
+    Mp = np.asarray(r_plain["makespan"])
+    Md = np.asarray(r_dvfs["makespan"])
+    rows = [("dvfs_sweep", us, f"systems=4x3phi;E0={Ep[0]/1e3:.0f}kJ")]
+    for i, k in enumerate(KS):
+        rows.append((
+            f"dvfs_K{int(k*100):02d}", 0.0,
+            f"sel_only:dE={100*(Ep[i]-Ep[0])/Ep[0]:+.1f}%,dT={100*(Mp[i]-Mp[0])/Mp[0]:+.1f}%;"
+            f"with_dvfs:dE={100*(Ed[i]-Ep[0])/Ep[0]:+.1f}%,dT={100*(Md[i]-Mp[0])/Mp[0]:+.1f}%"))
+    return rows

@@ -1,0 +1,28 @@
+"""Paper Figs 1-2: suite energy consumption and runtime vs the K parameter
+(Alg(0) .. Alg(85)) for the simultaneously-submitted NPB suite."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import JSCC_SYSTEMS, SimConfig, make_npb_workload, sweep_k
+
+KS = np.array([0.0, 0.05, 0.10, 0.15, 0.20, 0.30, 0.50, 0.85])
+
+
+def run():
+    w = make_npb_workload(JSCC_SYSTEMS)
+    t0 = time.perf_counter()
+    res = sweep_k(w, SimConfig(mode="paper", warm_start=True), KS)
+    E = np.asarray(res["total_energy"])
+    M = np.asarray(res["makespan"])
+    us = (time.perf_counter() - t0) * 1e6 / len(KS)
+    rows = [("fig1_2_sweep", us,
+             f"E0={E[0]/1e3:.1f}kJ;M0={M[0]:.1f}s")]
+    for i, k in enumerate(KS):
+        rows.append((
+            f"fig1_2_K{int(k*100):02d}", 0.0,
+            f"dE={100*(E[i]-E[0])/E[0]:+.1f}%;dT={100*(M[i]-M[0])/M[0]:+.1f}%"))
+    return rows

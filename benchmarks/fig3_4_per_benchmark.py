@@ -1,0 +1,30 @@
+"""Paper Figs 3-4: per-NPB-benchmark energy and runtime vs K."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import JSCC_SYSTEMS, SimConfig, make_npb_workload, sweep_k
+
+KS = np.array([0.0, 0.05, 0.10, 0.20, 0.50, 0.85])
+
+
+def run():
+    w = make_npb_workload(JSCC_SYSTEMS)
+    t0 = time.perf_counter()
+    res = sweep_k(w, SimConfig(mode="paper", warm_start=True), KS)
+    us = (time.perf_counter() - t0) * 1e6 / len(KS)
+    E = np.asarray(res["energy"])        # [K, J]
+    T = np.asarray(res["runtime"])       # [K, J]
+    names = [w.programs[p] for p in w.prog]
+    rows = [("fig3_4_sweep", us, f"programs={','.join(names)}")]
+    for j, name in enumerate(names):
+        dE = 100 * (E[:, j] - E[0, j]) / E[0, j]
+        dT = 100 * (T[:, j] - T[0, j]) / T[0, j]
+        rows.append((
+            f"fig3_4_{name}", 0.0,
+            "dE%=" + "/".join(f"{v:+.0f}" for v in dE)
+            + ";dT%=" + "/".join(f"{v:+.0f}" for v in dT)))
+    return rows

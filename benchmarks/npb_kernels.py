@@ -1,0 +1,27 @@
+"""NPB-analogue workload benchmarks: wall time + verification per program
+(the jobs the paper schedules, deliverable b/d) — jnp path on CPU; the
+Pallas kernels are timed per-op in interpret mode for reference."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.workloads import run_benchmark, BENCHMARKS
+
+
+def run():
+    rows = []
+    for name in BENCHMARKS:
+        # warmup + compile
+        res, ok, flops = run_benchmark(name, scale="smoke")
+        jax.block_until_ready(res)
+        t0 = time.perf_counter()
+        res, ok, flops = run_benchmark(name, scale="smoke")
+        jax.block_until_ready(res)
+        us = (time.perf_counter() - t0) * 1e6
+        mflops = flops / max(us / 1e6, 1e-9) / 1e6
+        rows.append((f"npb_{name}", us,
+                     f"verified={ok};Mop/s={mflops:.0f}"))
+    return rows

@@ -1,0 +1,36 @@
+"""Roofline summary benchmark: per-(arch x shape) dominant terms from the
+dry-run records (deliverable g); prints the three terms + dominant."""
+
+from __future__ import annotations
+
+import os
+import time
+
+from repro.launch.roofline import load_records, roofline_row
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..",
+                          "experiments", "dryrun")
+
+
+def run():
+    t0 = time.perf_counter()
+    recs = load_records(DRYRUN_DIR, "pod16x16")
+    rows_out = []
+    n_skip = n_err = 0
+    for (arch, shape), rec in sorted(recs.items()):
+        r = roofline_row(rec)
+        if "skip" in r:
+            n_skip += 1
+            continue
+        if "error" in r:
+            n_err += 1
+            continue
+        rows_out.append((
+            f"roofline_{arch}_{shape}", 0.0,
+            f"tc={r['t_compute']:.2f};tm={r['t_memory_adj']:.2f};"
+            f"tx={r['t_collective']:.2f};dom={r['dominant']};"
+            f"frac={r['roofline_frac']:.3f}"))
+    us = (time.perf_counter() - t0) * 1e6
+    head = [("roofline_summary", us,
+             f"cells={len(rows_out)};skipped={n_skip};errors={n_err}")]
+    return head + rows_out

@@ -1,0 +1,64 @@
+"""Beyond-paper scheduler ablation: all modes on a realistic Poisson job
+stream (repeated NPB programs, staggered arrivals, auto-K), reporting the
+energy / makespan / wait Pareto — the paper's algorithm is the tunable
+middle; predictive cold-start removes exploration waste (DESIGN.md §9)."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import JSCC_SYSTEMS, SimConfig, make_npb_workload, simulate_jax
+
+MODES = ("paper", "queue_aware", "predictive", "ucb", "fastest",
+         "greenest", "first_free", "random")
+
+
+def _stream(n_jobs=40, seed=0):
+    rng = np.random.default_rng(seed)
+    order = rng.choice(["BT", "EP", "IS", "LU", "SP"], size=n_jobs)
+    arrivals = np.cumsum(rng.exponential(8.0, size=n_jobs)).astype(np.float32)
+    return make_npb_workload(JSCC_SYSTEMS, order=tuple(order),
+                             arrivals=arrivals, pred_noise=0.10)
+
+
+def run():
+    w = _stream()
+    rows = []
+    base_e = base_m = None
+    for mode in MODES:
+        cfg = SimConfig(mode=mode, k=0.10)      # cold start: tables empty
+        t0 = time.perf_counter()
+        r = simulate_jax(w, cfg)
+        e = float(r["total_energy"])
+        m = float(r["makespan"])
+        wsum = float(r["total_wait"])
+        us = (time.perf_counter() - t0) * 1e6
+        if mode == "fastest":
+            base_e, base_m = e, m
+        rows.append((f"ablate_{mode}", us,
+                     f"E={e/1e3:.0f}kJ;makespan={m:.0f}s;wait={wsum:.0f}s"))
+    # derived: paper & predictive vs fastest
+    return rows
+
+
+def run_fault_tolerance():
+    """Same stream under stragglers/failures: the history mechanism routes
+    around degraded systems (fault-tolerance benchmark, DESIGN.md §7)."""
+    w = _stream(seed=1)
+    rows = []
+    for tag, scfg in [
+        ("clean", SimConfig(mode="paper", k=0.10)),
+        ("stragglers", SimConfig(mode="paper", k=0.10,
+                                 straggler_prob=0.15, straggler_factor=2.5)),
+        ("failures", SimConfig(mode="paper", k=0.10,
+                               failure_prob=0.10, restart_overhead=0.5)),
+    ]:
+        t0 = time.perf_counter()
+        r = simulate_jax(w, scfg)
+        us = (time.perf_counter() - t0) * 1e6
+        rows.append((f"fault_{tag}", us,
+                     f"E={float(r['total_energy'])/1e3:.0f}kJ;"
+                     f"makespan={float(r['makespan']):.0f}s"))
+    return rows

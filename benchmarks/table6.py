@@ -1,0 +1,34 @@
+"""Paper Table 6: NPB run parameters (cores and allocated CNs per system).
+
+Checks the node-count arithmetic against the paper's exact Table 6 and
+reports the phase-model's predicted runtimes for the allocations.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.systems import JSCC_SYSTEMS
+from repro.core.workload_model import NPB_NODES, NPB_CORES, npb_tables
+
+PAPER_TABLE6 = {
+    "BT": {"Broadwell": 5, "CascadeLake": 3, "KNL": 2, "Skylake": 4},
+    "EP": {"Broadwell": 5, "CascadeLake": 3, "KNL": 2, "Skylake": 4},
+    "IS": {"Broadwell": 8, "CascadeLake": 6, "KNL": 4, "Skylake": 8},
+    "LU": {"Broadwell": 8, "CascadeLake": 6, "KNL": 4, "Skylake": 8},
+    "SP": {"Broadwell": 8, "CascadeLake": 6, "KNL": 4, "Skylake": 8},
+}
+
+
+def run():
+    t0 = time.perf_counter()
+    ok = NPB_NODES == PAPER_TABLE6
+    # node counts must cover the requested cores
+    cover = all(
+        NPB_NODES[p][s.name] * s.cores_per_node >= NPB_CORES[p]
+        for p in NPB_NODES for s in JSCC_SYSTEMS)
+    C, T, N = npb_tables(JSCC_SYSTEMS)
+    us = (time.perf_counter() - t0) * 1e6
+    return [("table6_run_params", us,
+             f"matches_paper={ok};cores_covered={cover};"
+             f"T_range=[{T.min():.1f},{T.max():.1f}]s")]

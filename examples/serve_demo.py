@@ -1,0 +1,57 @@
+"""Serving demo: batched prefill + decode with the production decode path
+(grouped KV/state caches, one jitted step per token) on a reduced arch.
+
+    PYTHONPATH=src python examples/serve_demo.py --arch tinyllama-1.1b --tokens 16
+Works for hybrid/SSM archs too (mamba2-780m, jamba-v0.1-52b): their decode
+carries conv+SSD state instead of (or alongside) KV.
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config, smoke_reduce
+from repro.models import build_model
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama-1.1b", choices=ARCH_IDS)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--max-seq", type=int, default=64)
+    args = ap.parse_args()
+
+    cfg = smoke_reduce(get_config(args.arch))
+    api = build_model(cfg)
+    key = jax.random.key(0)
+    params = api.init_params(key)
+
+    cache = api.init_decode_cache(args.batch, args.max_seq)
+    step = jax.jit(api.decode_step, donate_argnums=(1,))
+
+    tok = jax.random.randint(key, (args.batch, 1), 2, cfg.vocab_size, jnp.int32)
+    out_tokens = [np.asarray(tok)[:, 0]]
+    # warmup/compile
+    logits, cache = step(params, cache, tok, jnp.int32(0))
+    t0 = time.perf_counter()
+    for pos in range(1, args.tokens):
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        logits, cache = step(params, cache, tok, jnp.int32(pos))
+        out_tokens.append(np.asarray(tok)[:, 0])
+    dt = time.perf_counter() - t0
+    rate = args.batch * (args.tokens - 1) / dt
+    print(f"arch={cfg.name} (reduced): decoded {args.tokens} tokens x "
+          f"batch {args.batch} -> {rate:.1f} tok/s on CPU")
+    print("sequences (greedy):")
+    seq = np.stack(out_tokens, axis=1)
+    for row in seq:
+        print(" ", row[:16].tolist())
+    assert np.isfinite(np.asarray(logits)).all()
+
+
+if __name__ == "__main__":
+    main()

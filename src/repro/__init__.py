@@ -1,0 +1,8 @@
+"""EcoSched: energy-efficient scheduling for shared-facility compute centers
+(Kiselev/Telegin/Shabanov 2021) on a multi-pod JAX substrate.
+
+Primary contribution lives in repro.core (profiles, algorithm, simulator,
+energy formalism); substrates in sibling subpackages.  See DESIGN.md.
+"""
+
+__version__ = "0.1.0"

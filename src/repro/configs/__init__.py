@@ -1,0 +1,10 @@
+from repro.configs.base import (
+    ModelConfig,
+    MoEConfig,
+    SSMConfig,
+    ShapeConfig,
+    SHAPES,
+    shape_applicable,
+    smoke_reduce,
+)
+from repro.configs.registry import ARCH_IDS, get_config, get_shape, all_cells

@@ -1,0 +1,14 @@
+from repro.core.systems import (
+    ComputeSystem, JSCC_SYSTEMS, JSCC_BY_NAME, TPU_SYSTEMS, ALL_SYSTEMS,
+    KNL, BROADWELL, SKYLAKE, CASCADE_LAKE,
+)
+from repro.core.workload_model import (
+    JobProfile, NPB_PROFILES, NPB_NODES, NPB_CORES, npb_tables,
+    predict_runtime, predict_energy, predict_phases, energy_coefficient,
+)
+from repro.core.profiles import ProfileStore, k_auto
+from repro.core.algorithm import select_system, MODES
+from repro.core.simulator import (
+    SimConfig, Workload, make_npb_workload, simulate_jax, simulate_py, sweep_k,
+)
+from repro.core import energy

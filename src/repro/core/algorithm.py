@@ -1,0 +1,119 @@
+"""The paper's energy-efficient selection algorithm + baselines + extensions.
+
+Paper §Algorithm (4 steps), for one job of program p:
+  1. Systems list = all systems able to run it.
+  2-3. Look up C[p, s] and T[p, s] from previous runs (0 if never run).
+  4. Pick the system with smallest C subject to the K threshold:
+         feasible = { s : T[p,s] <= min_s' T[p,s'] * (1 + K) }
+         choose     argmin_{s in feasible} C[p,s]      (tie -> smaller T)
+     If some systems are unexplored (C = T = 0), the job goes to the FIRST
+     RELEASED unexplored system (paper's exploration phase: 'each parallel
+     program will be submitted on the first released computing system' until
+     the tables fill).
+
+All selectors are branchless jnp functions of row vectors, so the simulator
+can scan/vmap them.  ``mode`` is static.
+
+Modes:
+  paper        — the algorithm above (faithful reproduction)
+  queue_aware  — beyond-paper (the paper's stated future work): feasibility
+                 tested on wait+run completion time instead of bare runtime
+  predictive   — beyond-paper cold start: unexplored entries are filled from
+                 the phase-model prediction (no exploration runs wasted)
+  ucb          — beyond-paper exploration: optimistic C bound instead of
+                 first-released ordering
+  fastest      — argmin T (classic performance-first)
+  greenest     — argmin C unconditionally (energy-first, no K guard)
+  first_free   — argmin availability (classic multi-cluster FIFO placement)
+  random       — uniform random system
+  oracle       — paper rule evaluated on the TRUE (C, T) tables
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BIG = 1e30
+
+MODES = ("paper", "queue_aware", "predictive", "ucb", "fastest",
+         "greenest", "first_free", "random", "oracle")
+
+
+def _paper_rule(c_row, t_row, k):
+    """argmin C s.t. T <= T_min*(1+K); tie-break on T. Rows must be fully
+    known (no zeros)."""
+    t_min = t_row.min()
+    feasible = t_row <= t_min * (1.0 + k)
+    # lexicographic: minimize (C, T) over feasible
+    score = jnp.where(feasible, c_row, BIG)
+    cbest = score.min()
+    tie = score <= cbest * (1 + 1e-9)
+    t_score = jnp.where(tie, t_row, BIG)
+    return jnp.argmin(t_score)
+
+
+def select_system(mode: str, *, c_row, t_row, runs_row, avail_row, k,
+                  c_pred_row=None, t_pred_row=None, key=None):
+    """Return selected system index (traced int32).
+
+    c_row/t_row: learned tables for this program [S];
+    runs_row: run counts [S]; avail_row: earliest start per system [S];
+    k: allowed runtime-increase fraction; *_pred: model predictions [S].
+    """
+    known = runs_row > 0
+    any_unknown = jnp.any(~known)
+
+    if mode == "paper":
+        # exploration: first released among unexplored systems
+        explore_score = jnp.where(~known, avail_row, BIG)
+        explore_idx = jnp.argmin(explore_score)
+        exploit_idx = _paper_rule(jnp.where(known, c_row, BIG),
+                                  jnp.where(known, t_row, BIG), k)
+        return jnp.where(any_unknown, explore_idx, exploit_idx)
+
+    if mode == "queue_aware":
+        # feasibility on completion = wait + T (paper's stated future work)
+        explore_score = jnp.where(~known, avail_row, BIG)
+        explore_idx = jnp.argmin(explore_score)
+        wait = avail_row - avail_row.min()
+        comp = jnp.where(known, t_row + wait, BIG)
+        exploit_idx = _paper_rule(jnp.where(known, c_row, BIG), comp, k)
+        return jnp.where(any_unknown, explore_idx, exploit_idx)
+
+    if mode == "predictive":
+        c_eff = jnp.where(known, c_row, c_pred_row)
+        t_eff = jnp.where(known, t_row, t_pred_row)
+        return _paper_rule(c_eff, t_eff, k)
+
+    if mode == "ucb":
+        # optimistic lower bound on C for unexplored systems: best known C
+        # scaled down => systems get tried when promising, not round-robin
+        c_floor = jnp.where(known, c_row, BIG).min() * 0.5
+        c_eff = jnp.where(known, c_row, c_floor)
+        t_eff = jnp.where(known, t_row, jnp.where(known, t_row, BIG).min())
+        return _paper_rule(c_eff, t_eff, k)
+
+    if mode == "fastest":
+        explore_score = jnp.where(~known, avail_row, BIG)
+        explore_idx = jnp.argmin(explore_score)
+        exploit_idx = jnp.argmin(jnp.where(known, t_row, BIG))
+        return jnp.where(any_unknown, explore_idx, exploit_idx)
+
+    if mode == "greenest":
+        explore_score = jnp.where(~known, avail_row, BIG)
+        explore_idx = jnp.argmin(explore_score)
+        exploit_idx = jnp.argmin(jnp.where(known, c_row, BIG))
+        return jnp.where(any_unknown, explore_idx, exploit_idx)
+
+    if mode == "first_free":
+        return jnp.argmin(avail_row)
+
+    if mode == "random":
+        return jax.random.randint(key, (), 0, c_row.shape[0])
+
+    if mode == "oracle":
+        # caller passes TRUE tables via c_pred/t_pred
+        return _paper_rule(c_pred_row, t_pred_row, k)
+
+    raise ValueError(f"unknown mode {mode!r}; known: {MODES}")

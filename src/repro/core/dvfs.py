@@ -1,0 +1,48 @@
+"""DVFS power-capping as an extra scheduling dimension (DESIGN.md §9.4).
+
+The paper cites frequency/voltage scaling ([7], [8]) as the second classic
+energy lever.  We model a frequency multiplier phi on the compute phases:
+runtime of compute phases scales 1/phi, dynamic compute power scales ~phi^3
+(voltage tracks frequency), idle/net/disk unchanged.  Each (system, phi)
+pair becomes a VIRTUAL system — the paper's algorithm then chooses over
+systems AND frequency levels with the same (C, T, K) machinery, unifying
+both energy levers under one decision rule (beyond-paper contribution).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.systems import ComputeSystem
+from repro.core.workload_model import (NPB_PROFILES, NPB_NODES,
+                                       predict_phases)
+
+
+def dvfs_variant(sys: ComputeSystem, phi: float) -> ComputeSystem:
+    """Virtual system at frequency multiplier phi (phi <= 1 = capped)."""
+    return dataclasses.replace(
+        sys,
+        name=f"{sys.name}@{int(phi * 100)}",
+        peak_flops_node=sys.peak_flops_node * phi,
+        cpu_w=sys.cpu_w * phi ** 3,
+    )
+
+
+def expand_with_dvfs(systems, phis=(1.0, 0.8, 0.6)):
+    """[CC1, CC2, ...] -> [CC1@100, CC1@80, ..., CC2@100, ...]."""
+    return tuple(dvfs_variant(s, p) for s in systems for p in phis)
+
+
+def dvfs_npb_workload(systems, phis=(1.0, 0.8, 0.6), **kw):
+    """NPB workload over the DVFS-expanded system list.  Node counts for a
+    virtual system follow its physical host (Table 6)."""
+    from repro.core.simulator import make_npb_workload
+    expanded = expand_with_dvfs(systems, phis)
+    # make_npb_workload reads NPB_NODES by system NAME; register virtuals
+    for s in expanded:
+        host = s.name.split("@")[0]
+        for prog in NPB_NODES:
+            NPB_NODES[prog].setdefault(s.name, NPB_NODES[prog][host])
+    return make_npb_workload(expanded, **kw)

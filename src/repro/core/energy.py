@@ -1,0 +1,36 @@
+"""The paper's energy formalism, verbatim (eqs. in §Problem).
+
+These functions operate on *measured/sampled* power traces (what SUPPZ's
+monitoring provides on real hardware; what our simulator and roofline model
+synthesize here).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def node_power(e_calc_sigma, e_disk, e_net):
+    """W^j(t) = E_CALC,Σ^j(t) + E_disk^j(t) + E_net^j(t)   — paper eq. (1).
+    Inputs are per-timepoint component powers (any matching shapes)."""
+    return e_calc_sigma + e_disk + e_net
+
+
+def average_power(w_jt, dt=1.0):
+    """W̄ = ∫ Σ_j W^j(t) dt / T   — paper eq. (2).
+    w_jt: [N_nodes, T_steps] power samples; dt: sample spacing (s)."""
+    w_jt = jnp.asarray(w_jt)
+    total = jnp.trapezoid(w_jt.sum(axis=0), dx=dt)
+    duration = (w_jt.shape[1] - 1) * dt
+    return total / jnp.maximum(duration, 1e-12)
+
+
+def energy_coefficient(w_avg, p_mops):
+    """C = W / P  [J/Mop]  — paper eq. (3); P in Mop/s (NPB's native unit,
+    see DESIGN.md §11 units note)."""
+    return w_avg / jnp.maximum(p_mops, 1e-12)
+
+
+def profile(k_percent, c):
+    """A power-consumption profile is the pair (K, C) — paper §Problem."""
+    return {"K": k_percent, "C": c}

@@ -1,0 +1,264 @@
+"""Discrete-event multi-system JMS simulator.
+
+Models the paper's SCC: several computing systems (CC_1..CC_S), each a pool
+of interchangeable nodes with per-node free-times; a global job queue routed
+by a meta-scheduler (repro.core.algorithm).  Jobs are programs with known
+per-system ground-truth (T, C, E) from the phase model.
+
+Two equivalent implementations:
+  - ``simulate_jax``: lax.scan over the job stream; jit-able and vmap-able
+    over the K sweep (Figs 1-4 are one vmapped call);
+  - ``simulate_py``: plain-Python mirror used for differential testing.
+
+Fault model (DESIGN.md §7): per-job deterministic pseudo-random straggler
+slowdowns and node-failure restarts (checkpoint-restart semantics: a failed
+job re-does ``restart_overhead`` of its work; energy scales accordingly).
+The learned (C, T) tables absorb these — the paper's history mechanism
+routes around chronically degraded systems automatically.
+
+Accounting notes: energy is attributed per job (allocated nodes over the
+job's span, paper eq. 2); idle energy of unallocated nodes is not attributed
+to the suite (the paper compares job-attributed energy).  Learned-table
+updates apply as each job is *placed* (the paper stores them at completion;
+for the paper's simultaneous-submission experiment the two coincide —
+distinct programs never wait on each other's profile entries).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.algorithm import select_system
+from repro.core.systems import ComputeSystem
+from repro.core.workload_model import (
+    NPB_PROFILES, NPB_NODES, npb_tables, predict_energy)
+
+BIG = 1e30
+
+
+@dataclass(frozen=True)
+class SimConfig:
+    mode: str = "paper"
+    k: float = 0.0                 # allowed runtime-increase fraction
+    straggler_prob: float = 0.0
+    straggler_factor: float = 2.0
+    failure_prob: float = 0.0
+    restart_overhead: float = 0.5
+    seed: int = 0
+    # True => profile tables pre-filled with ground truth (the paper's
+    # Figs 1-4 regime: 'all 5 previously run programs', Tables 3-4 full).
+    warm_start: bool = False
+
+
+@dataclass(frozen=True)
+class Workload:
+    """Static description of a job stream over P programs x S systems."""
+    prog: np.ndarray            # [J] int32 program ids
+    arrival: np.ndarray         # [J] f32 submit times
+    k_job: np.ndarray           # [J] f32 per-job K (fraction); NaN -> global k
+    n_req: np.ndarray           # [P, S] nodes needed
+    T_true: np.ndarray          # [P, S] runtime ground truth
+    C_true: np.ndarray          # [P, S] J/Mop ground truth
+    E_true: np.ndarray          # [P, S] Joules ground truth
+    T_pred: np.ndarray          # [P, S] phase-model predictions
+    C_pred: np.ndarray
+    n_nodes: np.ndarray         # [S] node counts
+    programs: tuple = ()        # names, for reports
+    systems: tuple = ()
+
+
+def make_npb_workload(systems, order=("BT", "EP", "IS", "LU", "SP"),
+                      arrivals=None, k_job=None, repeats: int = 1,
+                      pred_noise: float = 0.0, noise_seed: int = 0):
+    """The paper's experiment: NPB suite submitted (simultaneously by
+    default) to the four JSCC systems. ``repeats`` re-submits the suite."""
+    programs = tuple(sorted(set(order)))
+    pidx = {p: i for i, p in enumerate(programs)}
+    C, T, N = npb_tables(systems, programs)
+    mops = np.array([NPB_PROFILES[p].flops / 1e6 for p in programs])
+    E = C * mops[:, None]
+    rng = np.random.default_rng(noise_seed)
+    noise = (1.0 + pred_noise * rng.standard_normal(C.shape)) if pred_noise else 1.0
+    seq = list(order) * repeats
+    J = len(seq)
+    return Workload(
+        prog=np.array([pidx[p] for p in seq], np.int32),
+        arrival=np.zeros(J, np.float32) if arrivals is None
+        else np.asarray(arrivals, np.float32),
+        k_job=np.full(J, np.nan, np.float32) if k_job is None
+        else np.asarray(k_job, np.float32),
+        n_req=N, T_true=T, C_true=C, E_true=E,
+        T_pred=T * noise, C_pred=C * noise,
+        n_nodes=np.array([s.n_nodes for s in systems], np.int32),
+        programs=programs, systems=tuple(s.name for s in systems),
+    )
+
+
+def _fault_factor(key, j, scfg: SimConfig):
+    u = jax.random.uniform(jax.random.fold_in(key, j), (2,))
+    slow = jnp.where(u[0] < scfg.straggler_prob, scfg.straggler_factor, 1.0)
+    fail = jnp.where(u[1] < scfg.failure_prob, 1.0 + scfg.restart_overhead, 1.0)
+    return slow * fail
+
+
+def _simulate_core(w: Workload, scfg: SimConfig, kvec):
+    """lax.scan simulation core; kvec is the (possibly traced) per-job K."""
+    P, S = w.T_true.shape
+    max_n = int(w.n_nodes.max())
+    J = len(w.prog)
+    key = jax.random.key(scfg.seed)
+
+    node_exists = np.arange(max_n)[None, :] < w.n_nodes[:, None]   # [S, maxN]
+    free0 = jnp.where(jnp.asarray(node_exists), 0.0, BIG)
+    prog = jnp.asarray(w.prog)
+    arrival = jnp.asarray(w.arrival)
+    n_req = jnp.asarray(w.n_req)
+    T_true, C_true, E_true = map(jnp.asarray, (w.T_true, w.C_true, w.E_true))
+    T_pred, C_pred = jnp.asarray(w.T_pred), jnp.asarray(w.C_pred)
+
+    def step(carry, xs):
+        node_free, C_tab, T_tab, runs = carry
+        j, p, arr, k = xs
+
+        nreq_row = n_req[p]                                      # [S]
+        sorted_free = jnp.sort(node_free, axis=1)
+        kth = jnp.take_along_axis(
+            sorted_free, jnp.maximum(nreq_row - 1, 0)[:, None], axis=1)[:, 0]
+        avail = jnp.maximum(arr, kth)
+
+        sel = select_system(
+            scfg.mode, c_row=C_tab[p], t_row=T_tab[p], runs_row=runs[p],
+            avail_row=avail, k=k, c_pred_row=C_pred[p], t_pred_row=T_pred[p],
+            key=jax.random.fold_in(key, j))
+
+        factor = _fault_factor(key, j + 10_000, scfg)
+        T_act = T_true[p, sel] * factor
+        C_act = C_true[p, sel] * factor
+        E_act = E_true[p, sel] * factor
+        start = avail[sel]
+        finish = start + T_act
+
+        free_sel = node_free[sel]
+        ranks = jnp.argsort(jnp.argsort(free_sel))
+        mask = ranks < nreq_row[sel]
+        node_free = node_free.at[sel].set(jnp.where(mask, finish, free_sel))
+
+        n = runs[p, sel].astype(jnp.float32)
+        C_tab = C_tab.at[p, sel].set((C_tab[p, sel] * n + C_act) / (n + 1))
+        T_tab = T_tab.at[p, sel].set((T_tab[p, sel] * n + T_act) / (n + 1))
+        runs = runs.at[p, sel].add(1)
+
+        out = (sel, start, finish, start - arr, E_act, T_act)
+        return (node_free, C_tab, T_tab, runs), out
+
+    if scfg.warm_start:
+        carry0 = (free0, C_true, T_true, jnp.ones((P, S), jnp.int32))
+    else:
+        carry0 = (free0, jnp.zeros((P, S)), jnp.zeros((P, S)),
+                  jnp.zeros((P, S), jnp.int32))
+    xs = (jnp.arange(J), prog, arrival, kvec)
+    (node_free, C_tab, T_tab, runs), (sel, start, finish, wait, E, T_act) = \
+        jax.lax.scan(step, carry0, xs)
+
+    return {
+        "system": sel, "start": start, "finish": finish, "wait": wait,
+        "energy": E, "runtime": T_act,
+        "total_energy": E.sum(), "makespan": finish.max(),
+        "total_wait": wait.sum(),
+        "C_tab": C_tab, "T_tab": T_tab, "runs": runs,
+    }
+
+
+def simulate_jax(w: Workload, scfg: SimConfig):
+    """Run the sim; returns dict of per-job arrays + totals (all jnp)."""
+    kvec = jnp.where(jnp.isnan(jnp.asarray(w.k_job)),
+                     jnp.float32(scfg.k), jnp.asarray(w.k_job))
+    return _simulate_core(w, scfg, kvec)
+
+
+def sweep_k(w: Workload, scfg: SimConfig, ks):
+    """vmap the whole simulation over the K axis (Figs 1-4 in one call)."""
+    ks = jnp.asarray(ks, jnp.float32)
+    return jax.jit(jax.vmap(
+        lambda k: _simulate_core(w, scfg, jnp.full((len(w.prog),), k))))(ks)
+
+
+# ------------------------------------------------------------ python mirror
+
+def simulate_py(w: Workload, scfg: SimConfig):
+    """Reference implementation for differential tests (no faults path)."""
+    assert scfg.straggler_prob == 0 and scfg.failure_prob == 0, \
+        "python mirror covers the deterministic path"
+    P, S = w.T_true.shape
+    node_free = [list(np.zeros(int(n))) for n in w.n_nodes]
+    if scfg.warm_start:
+        C_tab, T_tab = w.C_true.copy(), w.T_true.copy()
+        runs = np.ones((P, S), np.int64)
+    else:
+        C_tab = np.zeros((P, S))
+        T_tab = np.zeros((P, S))
+        runs = np.zeros((P, S), np.int64)
+    out = []
+    for j, p in enumerate(w.prog):
+        arr = float(w.arrival[j])
+        kj = float(w.k_job[j])
+        k = scfg.k if np.isnan(kj) else kj
+        avail = np.empty(S)
+        for s in range(S):
+            free = sorted(node_free[s])
+            need = int(w.n_req[p, s])
+            avail[s] = max(arr, free[need - 1]) if need <= len(free) else BIG
+
+        known = runs[p] > 0
+        if scfg.mode in ("paper", "fastest", "greenest") and (~known).any():
+            cand = np.where(~known)[0]
+            sel = int(cand[np.argmin(avail[cand])])
+        elif scfg.mode == "first_free":
+            sel = int(np.argmin(avail))
+        else:
+            if scfg.mode == "paper":
+                c_row, t_row = C_tab[p], T_tab[p]
+            elif scfg.mode == "oracle":
+                c_row, t_row = w.C_pred[p], w.T_pred[p]
+            elif scfg.mode == "fastest":
+                sel = int(np.argmin(np.where(known, T_tab[p], BIG)))
+                c_row = None
+            elif scfg.mode == "greenest":
+                sel = int(np.argmin(np.where(known, C_tab[p], BIG)))
+                c_row = None
+            else:
+                raise NotImplementedError(scfg.mode)
+            if scfg.mode in ("paper", "oracle"):
+                t_min = t_row.min()
+                feas = t_row <= t_min * (1 + k)
+                score = np.where(feas, c_row, BIG)
+                best = score.min()
+                tie = score <= best * (1 + 1e-9)
+                sel = int(np.argmin(np.where(tie, t_row, BIG)))
+
+        T_act = float(w.T_true[p, sel])
+        E_act = float(w.E_true[p, sel])
+        C_act = float(w.C_true[p, sel])
+        start = float(avail[sel])
+        finish = start + T_act
+        need = int(w.n_req[p, sel])
+        idx = np.argsort(node_free[sel])[:need]
+        for i in idx:
+            node_free[sel][int(i)] = finish
+        n = runs[p, sel]
+        C_tab[p, sel] = (C_tab[p, sel] * n + C_act) / (n + 1)
+        T_tab[p, sel] = (T_tab[p, sel] * n + T_act) / (n + 1)
+        runs[p, sel] += 1
+        out.append((sel, start, finish, start - arr, E_act, T_act))
+
+    sel, start, finish, wait, E, T_act = map(np.array, zip(*out))
+    return {
+        "system": sel, "start": start, "finish": finish, "wait": wait,
+        "energy": E, "runtime": T_act,
+        "total_energy": E.sum(), "makespan": finish.max(),
+        "total_wait": wait.sum(),
+    }

@@ -1,0 +1,122 @@
+"""SUPPZ-style job-submission front-end (paper §Implementation).
+
+Mirrors the paper's integration of the algorithm into SUPPZ's ``mpirun``:
+
+- the submitted executable is identified by its HASH (the paper stores the
+  hash of the binary as the program's unique id);
+- the hash + submission arguments + measured (C, T) history live in a small
+  on-disk database (msgpack);
+- if the user names a resource type, the front-end only NOTIFIES (returns
+  the recommendation); otherwise the job is auto-queued on the selected
+  system;
+- K comes from the administrator, or automatically from the ordered time:
+  K = T_max / T (paper formula; as allowed-increase fraction).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import os
+from dataclasses import dataclass
+
+import msgpack
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.algorithm import select_system
+from repro.core.profiles import k_auto
+
+
+def program_id(executable_bytes: bytes) -> str:
+    """The paper's unique program identifier: hash of the executable."""
+    return hashlib.sha256(executable_bytes).hexdigest()[:16]
+
+
+@dataclass
+class Submission:
+    executable: bytes           # or its contents; hashed for identity
+    np_: int                    # processors requested ('np' in mpirun)
+    t_max: float                # ordered occupancy time (seconds)
+    resource_type: str | None = None   # user-pinned system (notify-only mode)
+    k: float | None = None      # admin K (fraction); None => auto
+
+
+@dataclass
+class Decision:
+    program: str
+    system: str
+    auto_queued: bool           # False => notification only (user pinned type)
+    k_used: float
+    explored: bool              # placement was an exploration run
+
+
+class SuppzFrontend:
+    """Persistent front-end over a set of systems (names fixed at init)."""
+
+    def __init__(self, db_path: str, system_names):
+        self.db_path = db_path
+        self.systems = list(system_names)
+        self.db = {"programs": {}}           # pid -> {"C": {}, "T": {}, "runs": {}, "submits": []}
+        if os.path.exists(db_path):
+            with open(db_path, "rb") as f:
+                self.db = msgpack.unpackb(f.read())
+
+    def _save(self):
+        tmp = self.db_path + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(msgpack.packb(self.db))
+        os.replace(tmp, self.db_path)
+
+    def _entry(self, pid: str):
+        return self.db["programs"].setdefault(
+            pid, {"C": {}, "T": {}, "runs": {}, "submits": []})
+
+    # ------------------------------------------------------------- submit
+    def submit(self, sub: Submission, availability=None) -> Decision:
+        pid = program_id(sub.executable)
+        ent = self._entry(pid)
+        ent["submits"].append({"np": sub.np_, "t_max": sub.t_max,
+                               "type": sub.resource_type})
+
+        c_row = np.array([ent["C"].get(s, 0.0) for s in self.systems])
+        t_row = np.array([ent["T"].get(s, 0.0) for s in self.systems])
+        runs = np.array([ent["runs"].get(s, 0) for s in self.systems])
+        avail = (np.zeros(len(self.systems)) if availability is None
+                 else np.asarray(availability, float))
+
+        # K: admin-specified, else auto from ordered time vs best history
+        if sub.k is not None:
+            k = sub.k
+        else:
+            t_hist = t_row[runs > 0].min() if (runs > 0).any() else 0.0
+            k = k_auto(sub.t_max, t_hist)
+
+        idx = int(select_system(
+            "paper",
+            c_row=jnp.asarray(c_row, jnp.float32),
+            t_row=jnp.asarray(t_row, jnp.float32),
+            runs_row=jnp.asarray(runs, jnp.int32),
+            avail_row=jnp.asarray(avail, jnp.float32),
+            k=jnp.float32(k),
+            c_pred_row=jnp.asarray(c_row, jnp.float32),
+            t_pred_row=jnp.asarray(t_row, jnp.float32),
+            key=jax.random.key(len(ent["submits"]))))
+
+        self._save()
+        return Decision(program=pid, system=self.systems[idx],
+                        auto_queued=sub.resource_type is None,
+                        k_used=k, explored=bool((runs == 0).any()))
+
+    # ---------------------------------------------------------- complete
+    def report_completion(self, executable: bytes, system: str,
+                          c: float, t: float):
+        """Store the measured profile after successful completion (running
+        average over repeats, as ProfileStore does)."""
+        pid = program_id(executable)
+        ent = self._entry(pid)
+        n = ent["runs"].get(system, 0)
+        ent["C"][system] = (ent["C"].get(system, 0.0) * n + c) / (n + 1)
+        ent["T"][system] = (ent["T"].get(system, 0.0) * n + t) / (n + 1)
+        ent["runs"][system] = n + 1
+        self._save()

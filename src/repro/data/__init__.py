@@ -1,0 +1,8 @@
+from repro.data.synthetic import (
+    DataConfig,
+    SyntheticStream,
+    host_batch,
+    device_batch,
+    EOS,
+    PAD,
+)

@@ -1,0 +1,8 @@
+# Pallas TPU kernels for the compute hot spots (DESIGN.md §3):
+#   flash_attention — blocked online-softmax attention (GQA index maps)
+#   ssd_scan        — Mamba-2 SSD chunk scan (state in VMEM scratch)
+#   ep              — NPB EP Gaussian-pair acceptance + annuli histogram
+#   is_hist         — NPB IS key histogram (one-hot lane reduction)
+#   stencil3d       — 7-point stencil with shifted-index-map halos
+# Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+# dispatch: Mosaic on TPU, jnp twin elsewhere), ref.py (pure-jnp oracle).

@@ -1,0 +1,3 @@
+from repro.kernels.ep.ops import ep_pairs
+from repro.kernels.ep.kernel import ep_pairs_pallas, N_ANNULI
+from repro.kernels.ep.ref import ep_pairs_ref

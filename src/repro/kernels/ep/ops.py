@@ -1,0 +1,20 @@
+"""jit'd dispatch wrapper for the EP kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.ep.kernel import ep_pairs_pallas
+from repro.kernels.ep.ref import ep_pairs_ref
+
+
+@partial(jax.jit, static_argnames=("block_n", "force"))
+def ep_pairs(u, *, block_n: int = 2048, force: str | None = None):
+    mode = force or ("pallas" if jax.default_backend() == "tpu" else "jnp")
+    if mode == "pallas":
+        return ep_pairs_pallas(u, block_n=block_n, interpret=False)
+    if mode == "pallas_interpret":
+        return ep_pairs_pallas(u, block_n=block_n, interpret=True)
+    return ep_pairs_ref(u)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for the EP Gaussian-pair kernel."""
+
+import jax.numpy as jnp
+
+from repro.kernels.ep.kernel import N_ANNULI
+
+
+def ep_pairs_ref(u):
+    """u: [2, n] uniforms in (-1,1). Returns (hist [10], sums [2])."""
+    x, y = u[0], u[1]
+    t = x * x + y * y
+    accept = (t <= 1.0) & (t > 0.0)
+    t_safe = jnp.where(accept, t, 1.0)
+    factor = jnp.sqrt(-2.0 * jnp.log(t_safe) / t_safe)
+    gx = jnp.where(accept, x * factor, 0.0)
+    gy = jnp.where(accept, y * factor, 0.0)
+    amax = jnp.maximum(jnp.abs(gx), jnp.abs(gy))
+    annulus = jnp.clip(amax.astype(jnp.int32), 0, N_ANNULI - 1)
+    hist = jnp.zeros((N_ANNULI,), jnp.float32).at[annulus].add(
+        accept.astype(jnp.float32))
+    return hist, jnp.stack([gx.sum(), gy.sum()])

@@ -1,0 +1,3 @@
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+from repro.kernels.flash_attention.ref import attention_ref

@@ -1,0 +1,116 @@
+"""Flash attention as a Pallas TPU kernel (BlockSpec VMEM tiling).
+
+TPU adaptation (DESIGN.md §3): block sizes are MXU/VREG aligned (multiples
+of 128 on the contracting/lane dims); the online-softmax running state
+(m, l, acc) lives in VMEM scratch across the k-grid dimension; the kv grid
+axis is innermost so k/v blocks stream through VMEM while the q block stays
+resident.  GQA is handled by an index map that points each query head at
+its kv group — no kv replication in HBM.
+
+Grid: (batch*heads, n_q_blocks, n_k_blocks)   [k innermost]
+  q   : [b*h,  sq, hd]   block (1, bq, hd) at (bh, iq)
+  k/v : [b*kv, sk, hd]   block (1, bk, hd) at (group(bh), ik)
+  out : [b*h,  sq, hd]   block (1, bq, hd) at (bh, iq)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  causal: bool, sm_scale: float, block_q: int, block_k: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * sm_scale          # [bq, hd]
+    k = k_ref[0].astype(jnp.float32)                     # [bk, hd]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [bq, bk]
+
+    if causal:
+        q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        k_pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + p.sum(axis=-1)
+    v = v_ref[0].astype(jnp.float32)                     # [bk, hd]
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + pv
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ik == pl.num_programs(2) - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, ...] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q, k, v, *, causal: bool = True,
+                         block_q: int = 128, block_k: int = 128,
+                         interpret: bool = True):
+    """q: [b, sq, h, hd]; k, v: [b, sk, kv, hd]. Returns [b, sq, h, hd].
+
+    ``interpret=True`` executes the kernel body in Python on CPU (the only
+    runtime available here); on real TPU pass interpret=False to lower via
+    Mosaic.
+    """
+    b, sq, h, hd = q.shape
+    _, sk, kv, _ = k.shape
+    rep = h // kv
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    assert sq % block_q == 0 and sk % block_k == 0
+
+    qr = q.transpose(0, 2, 1, 3).reshape(b * h, sq, hd)
+    kr = k.transpose(0, 2, 1, 3).reshape(b * kv, sk, hd)
+    vr = v.transpose(0, 2, 1, 3).reshape(b * kv, sk, hd)
+
+    grid = (b * h, sq // block_q, sk // block_k)
+
+    def q_map(bh, iq, ik):
+        return (bh, iq, 0)
+
+    def kv_map(bh, iq, ik):
+        b_idx = bh // h
+        h_idx = bh % h
+        return (b_idx * kv + h_idx // rep, ik, 0)
+
+    out = pl.pallas_call(
+        functools.partial(_flash_kernel, causal=causal, sm_scale=hd ** -0.5,
+                          block_q=block_q, block_k=block_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), q_map),
+            pl.BlockSpec((1, block_k, hd), kv_map),
+            pl.BlockSpec((1, block_k, hd), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, hd), q_map),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),       # m
+            pltpu.VMEM((block_q,), jnp.float32),       # l
+            pltpu.VMEM((block_q, hd), jnp.float32),    # acc
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, h, sq, hd).transpose(0, 2, 1, 3)

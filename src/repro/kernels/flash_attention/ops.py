@@ -1,0 +1,39 @@
+"""jit'd dispatch wrapper for flash attention.
+
+On TPU backends the Pallas/Mosaic kernel is used; elsewhere (this CPU
+container, and the 512-host-device dry-run) the numerically-identical
+blocked-jnp flash implementation from repro.models.attention is used —
+same FLOPs, same memory behaviour class, so roofline terms are unaffected
+(DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+from repro.models.attention import blocked_attention
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except Exception:
+        return False
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_k", "force"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, force: str | None = None):
+    """force: None (auto) | 'pallas' | 'pallas_interpret' | 'jnp'."""
+    mode = force or ("pallas" if _on_tpu() else "jnp")
+    if mode == "pallas":
+        return flash_attention_bhsd(q, k, v, causal=causal, block_q=block_q,
+                                    block_k=block_k, interpret=False)
+    if mode == "pallas_interpret":
+        return flash_attention_bhsd(q, k, v, causal=causal, block_q=block_q,
+                                    block_k=block_k, interpret=True)
+    return blocked_attention(q, k, v, causal=causal, block_q=block_q,
+                             block_k=block_k)

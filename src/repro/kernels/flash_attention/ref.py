@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+
+from repro.models.attention import plain_attention
+
+
+def attention_ref(q, k, v, *, causal: bool = True):
+    """q: [b, sq, h, hd]; k, v: [b, sk, kv, hd]. fp32 softmax reference."""
+    return plain_attention(q, k, v, causal=causal)

@@ -1,0 +1,3 @@
+from repro.kernels.is_hist.ops import key_histogram
+from repro.kernels.is_hist.kernel import key_histogram_pallas
+from repro.kernels.is_hist.ref import key_histogram_ref

@@ -1,0 +1,25 @@
+"""jit'd dispatch wrapper for the IS histogram kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.is_hist.kernel import key_histogram_pallas
+from repro.kernels.is_hist.ref import key_histogram_ref
+
+
+@partial(jax.jit, static_argnames=("n_buckets", "bucket_shift", "block_n", "force"))
+def key_histogram(keys, *, n_buckets: int, bucket_shift: int = 0,
+                  block_n: int = 4096, force: str | None = None):
+    mode = force or ("pallas" if jax.default_backend() == "tpu" else "jnp")
+    if mode == "pallas":
+        return key_histogram_pallas(keys, n_buckets=n_buckets,
+                                    bucket_shift=bucket_shift,
+                                    block_n=block_n, interpret=False)
+    if mode == "pallas_interpret":
+        return key_histogram_pallas(keys, n_buckets=n_buckets,
+                                    bucket_shift=bucket_shift,
+                                    block_n=block_n, interpret=True)
+    return key_histogram_ref(keys, n_buckets=n_buckets, bucket_shift=bucket_shift)

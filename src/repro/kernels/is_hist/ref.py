@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the IS key-histogram kernel."""
+
+import jax.numpy as jnp
+
+
+def key_histogram_ref(keys, *, n_buckets: int, bucket_shift: int):
+    bucket = (keys >> bucket_shift).astype(jnp.int32)
+    return jnp.zeros((n_buckets,), jnp.float32).at[bucket].add(1.0)

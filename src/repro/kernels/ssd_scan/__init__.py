@@ -1,0 +1,3 @@
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.kernels.ssd_scan.kernel import ssd_scan_pallas
+from repro.kernels.ssd_scan.ref import ssd_scan_ref

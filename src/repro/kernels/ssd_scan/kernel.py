@@ -1,0 +1,114 @@
+"""Mamba-2 SSD chunked scan as a Pallas TPU kernel.
+
+The SSD hot loop (arXiv:2405.21060 §6): per chunk, a quadratic intra-chunk
+term plus a recurrent inter-chunk state update.  TPU adaptation: the grid is
+(batch*heads, n_chunks) with the chunk axis innermost and the running state
+[p, n] living in VMEM scratch — it persists across the chunk grid dimension
+(same revisiting idiom as flash attention's (m, l, acc)), so the sequential
+recurrence never round-trips HBM.  The [Q, Q] decay/score tile stays in
+VMEM; per grid step the kernel streams one [Q, p] x-tile and one [Q, n]
+B/C-tile.  B/C are per-group (GVA): the index map points each head at its
+group — no replication in HBM.
+
+Grid: (b*h, l // Q)
+  x    : [b*h, l, p]    block (1, Q, p)
+  dt   : [b*h, l]       block (1, Q)      (already softplus'd)
+  dA   : [b*h, l]       block (1, Q)      (dt * A[head], A negative)
+  B, C : [b*g, l, n]    block (1, Q, n)   (g groups; head -> group map)
+  y    : [b*h, l, p]    block (1, Q, p)
+  state: [b*h, p, n]    block (1, p, n)   written at the last chunk
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, dA_ref, b_ref, c_ref, y_ref, st_out_ref,
+                state_ref, *, chunk: int):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0].astype(jnp.float32)          # [Q, p]
+    dt = dt_ref[0].astype(jnp.float32)        # [Q]
+    dA = dA_ref[0].astype(jnp.float32)        # [Q]
+    B = b_ref[0].astype(jnp.float32)          # [Q, n]
+    C = c_ref[0].astype(jnp.float32)          # [Q, n]
+
+    cum = jnp.cumsum(dA)                      # [Q]
+    # intra-chunk: y_diag[i] = sum_{j<=i} exp(cum_i - cum_j) dt_j (C_i.B_j) x_j
+    diff = cum[:, None] - cum[None, :]
+    row = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    L = jnp.where(row >= col, jnp.exp(diff), 0.0)
+    S = jax.lax.dot_general(C, B, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # [Q, Q]
+    M = S * L * dt[None, :]
+    y = jax.lax.dot_general(M, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # [Q, p]
+
+    # inter-chunk: y_off[i] = exp(cum_i) * C_i . state^T        [Q, p]
+    state = state_ref[...]                                        # [p, n]
+    y_off = jax.lax.dot_general(C, state, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    y = y + y_off * jnp.exp(cum)[:, None]
+    y_ref[0, ...] = y.astype(y_ref.dtype)
+
+    # state update: state' = state * exp(cum[-1]) + x^T (B * w[:, None])
+    w = jnp.exp(cum[-1] - cum) * dt                               # [Q]
+    upd = jax.lax.dot_general(x, B * w[:, None], (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)  # [p, n]
+    state_ref[...] = state * jnp.exp(cum[-1]) + upd
+
+    @pl.when(ci == pl.num_programs(1) - 1)
+    def _finish():
+        st_out_ref[0, ...] = state_ref[...]
+
+
+def ssd_scan_pallas(x, dt, dA, B, C, *, chunk: int = 256,
+                    interpret: bool = True):
+    """x: [bh, l, p]; dt/dA: [bh, l]; B, C: [bg, l, n] with bh = bg * rep
+    (heads grouped GVA-style).  Returns (y [bh, l, p] f32, state [bh, p, n])."""
+    bh, l, p = x.shape
+    bg, _, n = B.shape
+    rep = bh // bg
+    chunk = min(chunk, l)
+    assert l % chunk == 0
+    nc = l // chunk
+
+    def xm(i, c):
+        return (i, c, 0)
+
+    def dm(i, c):
+        return (i, c)
+
+    y, state = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=(bh, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), xm),
+            pl.BlockSpec((1, chunk), dm),
+            pl.BlockSpec((1, chunk), dm),
+            pl.BlockSpec((1, chunk, n), lambda i, c: (i // rep, c, 0)),
+            pl.BlockSpec((1, chunk, n), lambda i, c: (i // rep, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, p), xm),
+            pl.BlockSpec((1, p, n), lambda i, c: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, l, p), jnp.float32),
+            jax.ShapeDtypeStruct((bh, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, dA, B, C)
+    return y, state

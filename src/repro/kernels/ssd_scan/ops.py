@@ -1,0 +1,20 @@
+"""jit'd dispatch wrapper for the SSD chunk-scan kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_pallas
+from repro.kernels.ssd_scan.ref import ssd_scan_ref
+
+
+@partial(jax.jit, static_argnames=("chunk", "force"))
+def ssd_scan(x, dt, dA, B, C, *, chunk: int = 256, force: str | None = None):
+    mode = force or ("pallas" if jax.default_backend() == "tpu" else "jnp")
+    if mode == "pallas":
+        return ssd_scan_pallas(x, dt, dA, B, C, chunk=chunk, interpret=False)
+    if mode == "pallas_interpret":
+        return ssd_scan_pallas(x, dt, dA, B, C, chunk=chunk, interpret=True)
+    return ssd_scan_ref(x, dt, dA, B, C, chunk=chunk)

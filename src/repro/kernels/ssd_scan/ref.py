@@ -1,0 +1,66 @@
+"""Pure-jnp oracle for the SSD chunk-scan kernel (flat [bh, l, ...] layout,
+delegating to the model's chunked implementation)."""
+
+import jax.numpy as jnp
+
+from repro.models.mamba import ssd_chunked
+
+
+def ssd_scan_ref(x, dt, dA, B, C, *, chunk: int = 256):
+    """x: [bh, l, p]; dt/dA: [bh, l]; B, C: [bg, l, n], bh = bg * rep.
+    Returns (y [bh, l, p] f32, state [bh, p, n] f32)."""
+    bh, l, p = x.shape
+    bg, _, n = B.shape
+    rep = bh // bg
+    # reshape to the model layout [b=bg, l, h=rep, p] with per-head A folded
+    xm = x.reshape(bg, rep, l, p).transpose(0, 2, 1, 3)
+    dtm = dt.reshape(bg, rep, l).transpose(0, 2, 1)
+    # ssd_chunked takes A[h] and dt separately with dA = dt*A; recover A-like
+    # behaviour by passing dt'=dt and A'=dA/dt elementwise via a wrapper:
+    # simplest exact route: call with dt=dA/A ... instead we inline the same
+    # math using dA directly (copy of ssd_chunked with dA input).
+    y, st = _ssd_chunked_dA(xm, dtm,
+                            dA.reshape(bg, rep, l).transpose(0, 2, 1),
+                            B.reshape(bg, 1, l, n).transpose(0, 2, 1, 3),
+                            C.reshape(bg, 1, l, n).transpose(0, 2, 1, 3),
+                            chunk)
+    return (y.transpose(0, 2, 1, 3).reshape(bh, l, p),
+            st.reshape(bh, p, n))
+
+
+def _ssd_chunked_dA(x, dt, dA, B, C, chunk):
+    """ssd_chunked with dA supplied directly (instead of dt*A[h])."""
+    import jax
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    nc, q = l // chunk, chunk
+    rep = h // g
+    xf = x.astype(jnp.float32).reshape(b, nc, q, h, p)
+    dtf = dt.astype(jnp.float32).reshape(b, nc, q, h)
+    dAf = dA.astype(jnp.float32).reshape(b, nc, q, h)
+    Bf = B.astype(jnp.float32).reshape(b, nc, q, g, n)
+    Cf = C.astype(jnp.float32).reshape(b, nc, q, g, n)
+    cum = jnp.cumsum(dAf, axis=2)
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    L = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+    S = jnp.einsum("bcign,bcjgn->bcijg", Cf, Bf)
+    S = jnp.repeat(S, rep, axis=-1)
+    y_diag = jnp.einsum("bcijh,bcjhp->bcihp", S * L * dtf[:, :, None], xf)
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)
+    Bh = jnp.repeat(Bf, rep, axis=3)
+    states = jnp.einsum("bcqh,bcqhn,bcqhp->bchpn", decay_to_end * dtf, Bh, xf)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])
+
+    def step(prev, inp):
+        dec, st = inp
+        return prev * dec[:, :, None, None] + st, prev
+
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    final, prevs = jax.lax.scan(step, init,
+                                (jnp.moveaxis(chunk_decay, 1, 0),
+                                 jnp.moveaxis(states, 1, 0)))
+    prevs = jnp.moveaxis(prevs, 0, 1)
+    Ch = jnp.repeat(Cf, rep, axis=3)
+    y_off = jnp.einsum("bcqhn,bchpn->bcqhp", Ch, prevs) * jnp.exp(cum)[..., None]
+    return (y_diag + y_off).reshape(b, l, h, p), final

@@ -1,0 +1,3 @@
+from repro.kernels.stencil3d.ops import stencil7
+from repro.kernels.stencil3d.kernel import stencil7_pallas
+from repro.kernels.stencil3d.ref import stencil7_ref

@@ -1,0 +1,23 @@
+"""jit'd dispatch wrapper for the stencil kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.stencil3d.kernel import stencil7_pallas
+from repro.kernels.stencil3d.ref import stencil7_ref
+
+
+@partial(jax.jit, static_argnames=("coef_c", "coef_n", "bx", "force"))
+def stencil7(u, *, coef_c: float = -6.0, coef_n: float = 1.0, bx: int = 16,
+             force: str | None = None):
+    mode = force or ("pallas" if jax.default_backend() == "tpu" else "jnp")
+    if mode == "pallas":
+        return stencil7_pallas(u, coef_c=coef_c, coef_n=coef_n, bx=bx,
+                               interpret=False)
+    if mode == "pallas_interpret":
+        return stencil7_pallas(u, coef_c=coef_c, coef_n=coef_n, bx=bx,
+                               interpret=True)
+    return stencil7_ref(u, coef_c=coef_c, coef_n=coef_n)

@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for the 7-point stencil kernel."""
+
+import jax.numpy as jnp
+
+
+def stencil7_ref(u, *, coef_c: float = -6.0, coef_n: float = 1.0):
+    pad = lambda x: x  # Dirichlet-zero boundaries via jnp.pad shifts
+    up = jnp.pad(u[:-1], ((1, 0), (0, 0), (0, 0)))
+    dn = jnp.pad(u[1:], ((0, 1), (0, 0), (0, 0)))
+    yp = jnp.pad(u[:, 1:, :], ((0, 0), (0, 1), (0, 0)))
+    ym = jnp.pad(u[:, :-1, :], ((0, 0), (1, 0), (0, 0)))
+    zp = jnp.pad(u[:, :, 1:], ((0, 0), (0, 0), (0, 1)))
+    zm = jnp.pad(u[:, :, :-1], ((0, 0), (0, 0), (1, 0)))
+    return coef_c * u + coef_n * (up + dn + yp + ym + zp + zm)

@@ -1,0 +1,187 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --- the two lines above MUST run before any jax-importing module ---------
+# (jax locks the device count at first init; smoke tests and benches must
+#  NOT see 512 devices, so this override lives here and only here.)
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import numpy as np   # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import SHAPES, ARCH_IDS, get_config, shape_applicable  # noqa: E402
+from repro.models import build_model                        # noqa: E402
+from repro.launch.mesh import make_production_mesh          # noqa: E402
+from repro.launch.specs import build_all_specs, named       # noqa: E402
+from repro.optim import AdamWConfig                         # noqa: E402
+from repro.train import make_train_step                     # noqa: E402
+from repro.sharding import use_rules                        # noqa: E402
+from repro.utils.hlo import parse_collective_bytes          # noqa: E402
+from repro.utils.hlo_cost import analyze_hlo                # noqa: E402
+from repro.utils.tree import flatten_with_names             # noqa: E402
+
+DEFAULT_OUT = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "experiments", "dryrun")
+
+
+def _mem_dict(mem):
+    return {
+        "argument_bytes": mem.argument_size_in_bytes,
+        "output_bytes": mem.output_size_in_bytes,
+        "temp_bytes": mem.temp_size_in_bytes,
+        "generated_code_bytes": mem.generated_code_size_in_bytes,
+        "alias_bytes": mem.alias_size_in_bytes,
+    }
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             overrides: dict | None = None) -> dict:
+    """Lower + compile one (arch x shape x mesh) cell; return the record."""
+    t_all = time.time()
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.with_overrides(**overrides)
+    ok, reason = shape_applicable(cfg, shape)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "kind": shape.kind, "n_devices": 512 if multi_pod else 256,
+        "applicable": ok,
+    }
+    if not ok:
+        rec["skip_reason"] = reason
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    api = build_model(cfg)
+    sp = build_all_specs(api, shape, mesh, multi_pod=multi_pod)
+    n_params = int(sum(np.prod(x.shape) for _, x in
+                       flatten_with_names(sp["param_specs"])))
+    rec["n_params"] = n_params
+
+    with mesh, use_rules(mesh, sp["rules"]):
+        param_sh = named(mesh, sp["param_part"])
+        t0 = time.time()
+        if shape.kind == "train":
+            step = make_train_step(api, AdamWConfig(),
+                                   microbatches=cfg.microbatches)
+            opt_sh = named(mesh, sp["opt_part"])
+            batch_sh = named(mesh, sp["batch_part"])
+            f = jax.jit(step,
+                        in_shardings=(param_sh, opt_sh, batch_sh),
+                        out_shardings=(param_sh, opt_sh, None),
+                        donate_argnums=(0, 1))
+            lowered = f.lower(sp["param_specs"], sp["opt_specs"],
+                              sp["inputs"]["batch"])
+        elif shape.kind == "prefill":
+            batch_sh = named(mesh, sp["batch_part"])
+            f = jax.jit(api.prefill, in_shardings=(param_sh, batch_sh),
+                        out_shardings=None)
+            lowered = f.lower(sp["param_specs"], sp["inputs"]["batch"])
+        else:  # decode
+            cache_sh = named(mesh, sp["cache_part"])
+            bax = sp["rules"]["batch"] if shape.global_batch > 1 else None
+            tok_sh = NamedSharding(mesh, P(bax, None))
+            pos_sh = NamedSharding(mesh, P())
+            f = jax.jit(api.decode_step,
+                        in_shardings=(param_sh, cache_sh, tok_sh, pos_sh),
+                        out_shardings=(None, cache_sh),
+                        donate_argnums=(1,))
+            lowered = f.lower(sp["param_specs"], sp["inputs"]["cache"],
+                              sp["inputs"]["tokens"], sp["inputs"]["pos"])
+        rec["lower_s"] = round(time.time() - t0, 2)
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t0, 2)
+
+        rec["memory_analysis"] = _mem_dict(compiled.memory_analysis())
+        ca = compiled.cost_analysis()
+        ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+        rec["cost_analysis"] = {
+            "flops_per_device": float(ca.get("flops", 0.0)),
+            "bytes_per_device": float(ca.get("bytes accessed", 0.0)),
+        }
+        hlo = compiled.as_text()
+        rec["hlo_chars"] = len(hlo)
+        # raw single-body collective census (uncorrected, for reference)
+        rec["collectives_raw"] = parse_collective_bytes(hlo)
+        # trip-count-aware walk: corrected flops / HBM bytes / collective
+        # bytes per device (see utils/hlo_cost.py docstring for the model)
+        walk = analyze_hlo(hlo)
+        rec["hlo_walk"] = {
+            "mem_bytes_by_op": walk["mem_bytes_by_op"],
+            "flops_per_device": walk["flops"],
+            "mem_bytes_per_device": walk["mem_bytes"],
+            "attn_interior_bytes": walk["attn_interior_bytes"],
+            "coll_link_bytes_per_device": walk["coll_link_bytes"],
+            "coll_output_bytes_per_op": walk["coll_output_bytes_per_op"],
+        }
+    rec["total_s"] = round(time.time() - t_all, 2)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="every (arch x shape) on the selected mesh(es)")
+    ap.add_argument("--out", default=os.path.normpath(DEFAULT_OUT))
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg overrides key=value (e.g. remat_policy=dots)")
+    ap.add_argument("--tag", default="", help="suffix for output files")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.override:
+        k, v = kv.split("=", 1)
+        if v in ("true", "false"):
+            v = v == "true"
+        elif v.replace(".", "", 1).isdigit():
+            v = float(v) if "." in v else int(v)
+        overrides[k] = v
+
+    cells = []
+    archs = [args.arch] if args.arch else list(ARCH_IDS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    if args.all:
+        archs, shapes = list(ARCH_IDS), list(SHAPES)
+    for a in archs:
+        for s in shapes:
+            for mp in meshes:
+                cells.append((a, s, mp))
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for a, s, mp in cells:
+        mesh_name = "pod2x16x16" if mp else "pod16x16"
+        tag = f"__{args.tag}" if args.tag else ""
+        path = os.path.join(args.out, f"{a}__{s}__{mesh_name}{tag}.json")
+        try:
+            rec = run_cell(a, s, multi_pod=mp, overrides=overrides or None)
+            status = ("SKIP" if not rec.get("applicable")
+                      else f"ok lower={rec['lower_s']}s compile={rec['compile_s']}s")
+        except Exception as e:   # noqa: BLE001 — record and continue
+            rec = {"arch": a, "shape": s, "mesh": mesh_name,
+                   "error": repr(e), "traceback": traceback.format_exc()}
+            status = f"FAIL {e!r}"
+            failures += 1
+        with open(path, "w") as fh:
+            json.dump(rec, fh, indent=1)
+        print(f"[dryrun] {a:24s} {s:12s} {mesh_name:11s} {status}", flush=True)
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,212 @@
+"""Roofline analysis over dry-run records (EXPERIMENTS.md §Roofline).
+
+Terms per (arch x shape) cell, from the compiled single-pod artifact:
+    t_compute    = flops_per_device   / PEAK_FLOPS      (197 TF bf16, v5e)
+    t_memory     = mem_bytes_per_dev  / HBM_BW          (819 GB/s)
+    t_collective = coll_link_bytes    / ICI_LINK_BW     (50 GB/s/link)
+
+flops / bytes / collective bytes come from the trip-count-aware HLO walk
+(utils/hlo_cost.py), NOT from raw compiled.cost_analysis() — the latter
+counts while bodies once (under-reports scans ~n_layers-fold; both numbers
+are recorded in the dry-run JSONs for comparison).
+
+MODEL_FLOPS (the useful-work yardstick):
+    train    6 * N_active * tokens        (+ attention term, reported apart)
+    prefill  2 * N_active * tokens
+    decode   2 * N_active * batch
+N_active excludes embeddings/positions and counts MoE experts at top_k/E.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import numpy as np
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+HBM_PER_CHIP = 16e9    # v5e
+
+from repro.configs import SHAPES, ARCH_IDS, get_config
+from repro.models import build_model
+from repro.utils.tree import flatten_with_names
+
+
+def active_param_count(cfg) -> tuple[int, int]:
+    """(N_total_nonembed, N_active_nonembed) from the param spec tree."""
+    api = build_model(cfg)
+    specs = api.param_specs()
+    total = active = 0
+    moe_scale = (cfg.moe.top_k / cfg.moe.n_experts) if cfg.moe.n_experts else 1.0
+    for name, x in flatten_with_names(specs):
+        n = int(np.prod(x.shape))
+        top = name.split("/")[0]
+        if top in ("embed", "head") or name.endswith(("enc_pos", "dec_pos")):
+            continue
+        total += n
+        if "/moe/w" in name:
+            active += int(n * moe_scale)
+        else:
+            active += n
+    return total, active
+
+
+def model_flops(cfg, shape) -> float:
+    _, n_active = active_param_count(cfg)
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch          # decode: 1 token/seq
+
+
+def load_records(dryrun_dir: str, mesh: str = "pod16x16", tag: str = ""):
+    recs = {}
+    suffix = f"__{tag}" if tag else ""
+    for path in glob.glob(os.path.join(dryrun_dir, f"*__{mesh}{suffix}.json")):
+        rec = json.load(open(path))
+        if tag == "" and rec.get("arch") and "__" in os.path.basename(path):
+            base = os.path.basename(path)[:-5]
+            parts = base.split("__")
+            if len(parts) != 3:      # skip tagged variants
+                continue
+        recs[(rec["arch"], rec["shape"])] = rec
+    return recs
+
+
+def flash_kernel_traffic(cfg, shape, n_devices: int = 256) -> float:
+    """Analytic HBM bytes/device of the flash-attention Pallas kernel
+    (Q, K, V streamed + O written; K/V re-read per q-block is second-order
+    and folded into the pass factor).  Used to replace the CPU-artifact
+    attention-interior traffic in the kernel-adjusted memory term."""
+    if cfg.n_heads == 0 or shape.kind == "decode":
+        return 0.0
+    n_attn = len(cfg.attn_layer_ids())
+    if cfg.is_encoder_decoder:
+        n_attn = cfg.n_encoder_layers + 2 * cfg.n_layers
+    model_par = 16
+    h_loc = cfg.n_heads // model_par if cfg.n_heads % model_par == 0 else cfg.n_heads
+    kv_loc = (cfg.n_kv_heads // model_par
+              if cfg.n_kv_heads % model_par == 0 else cfg.n_kv_heads)
+    dp = n_devices // model_par
+    b_loc = max(1, shape.global_batch // dp)
+    passes = 4.0 if shape.is_training else 1.0   # fwd + remat-fwd + bwd(~2x)
+    hd = cfg.resolved_head_dim()
+    return (passes * n_attn * b_loc * shape.seq_len
+            * (2 * h_loc + 2 * kv_loc) * hd * 2.0)
+
+
+def roofline_row(rec, n_devices: int = 256) -> dict:
+    arch, shape_name = rec["arch"], rec["shape"]
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    if not rec.get("applicable", False):
+        return {"arch": arch, "shape": shape_name, "skip": rec.get("skip_reason", "")}
+    if "error" in rec:
+        return {"arch": arch, "shape": shape_name, "error": rec["error"]}
+    walk = rec["hlo_walk"]
+    t_c = walk["flops_per_device"] / PEAK_FLOPS
+    t_m = walk["mem_bytes_per_device"] / HBM_BW
+    # kernel-adjusted memory: attention tiles live in VMEM on TPU (Pallas
+    # flash kernel); replace their CPU-artifact HBM traffic with the
+    # kernel's true Q/K/V/O streams.
+    attn_interior = walk.get("attn_interior_bytes", 0.0)
+    mem_adj = (walk["mem_bytes_per_device"] - attn_interior
+               + flash_kernel_traffic(cfg, shape, n_devices))
+    t_m_adj = mem_adj / HBM_BW
+    t_x = walk["coll_link_bytes_per_device"] / LINK_BW
+    dom = max(("compute", t_c), ("memory", t_m_adj), ("collective", t_x),
+              key=lambda kv: kv[1])[0]
+    mf = model_flops(cfg, shape)
+    hlo_total = walk["flops_per_device"] * n_devices
+    bound = max(t_c, t_m_adj, t_x)
+    mem = rec["memory_analysis"]
+    hbm_gb = (mem["argument_bytes"] + mem["temp_bytes"]) / 1e9
+    return {
+        "arch": arch, "shape": shape_name,
+        "t_compute": t_c, "t_memory": t_m, "t_memory_adj": t_m_adj,
+        "t_collective": t_x,
+        "dominant": dom,
+        "model_flops": mf,
+        "hlo_flops_total": hlo_total,
+        "useful_ratio": mf / hlo_total if hlo_total else 0.0,
+        # roofline fraction: useful work rate vs peak if perfectly compute-bound
+        "roofline_frac": (mf / (n_devices * PEAK_FLOPS)) / bound if bound else 0.0,
+        "step_time_bound_s": bound,
+        "hbm_gb_per_device": hbm_gb,
+        "fits_hbm": hbm_gb <= HBM_PER_CHIP / 1e9,
+        "compile_s": rec.get("compile_s"),
+    }
+
+
+def improvement_note(row) -> str:
+    if "skip" in row or "error" in row:
+        return ""
+    d = row["dominant"]
+    if d == "collective":
+        return ("reduce TP collective volume: fewer psums per layer "
+                "(SP residuals / lower TP for this size / overlap)")
+    if d == "memory":
+        return ("cut HBM traffic: fuse attention interior (Pallas flash on "
+                "TPU keeps tiles in VMEM), tighter remat policy")
+    return "raise MXU utilization: larger per-device tiles, fewer pad ops"
+
+
+def markdown_table(rows) -> str:
+    hdr = ("| arch | shape | t_comp (s) | t_mem raw (s) | t_mem adj (s) | "
+           "t_coll (s) | dominant | MODEL_FLOPS | useful/HLO | roofline frac | "
+           "HBM GB/dev | fits |\n"
+           "|---|---|---|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        if "skip" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | SKIP | "
+                         f"— | — | — | — | {r['skip'][:60]} |")
+            continue
+        if "error" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | ERROR | "
+                         f"— | — | — | — | {r['error'][:60]} |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute']:.3f} | "
+            f"{r['t_memory']:.3f} | {r['t_memory_adj']:.3f} | "
+            f"{r['t_collective']:.3f} | {r['dominant']} | "
+            f"{r['model_flops']:.3g} | {r['useful_ratio']:.2f} | "
+            f"{r['roofline_frac']:.3f} | {r['hbm_gb_per_device']:.1f} | "
+            f"{'y' if r['fits_hbm'] else 'NO'} |")
+    return hdr + "\n".join(lines) + "\n"
+
+
+def pick_hillclimb_cells(rows):
+    """worst roofline fraction, most collective-bound, most paper-representative."""
+    ok = [r for r in rows if "skip" not in r and "error" not in r]
+    worst = min(ok, key=lambda r: r["roofline_frac"])
+    coll = max(ok, key=lambda r: r["t_collective"] / max(r["step_time_bound_s"], 1e-9))
+    return worst, coll
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    n_devices = 512 if args.mesh == "pod2x16x16" else 256
+    recs = load_records(args.dir, args.mesh, args.tag)
+    rows = [roofline_row(r, n_devices=n_devices)
+            for (a, s), r in sorted(recs.items())]
+    print(markdown_table(rows))
+    ok = [r for r in rows if "skip" not in r and "error" not in r]
+    if ok:
+        worst, coll = pick_hillclimb_cells(rows)
+        print(f"\nworst roofline frac: {worst['arch']} x {worst['shape']} "
+              f"({worst['roofline_frac']:.3f})")
+        print(f"most collective-bound: {coll['arch']} x {coll['shape']}")
+
+
+if __name__ == "__main__":
+    main()

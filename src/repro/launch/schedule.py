@@ -1,0 +1,72 @@
+"""Scheduler CLI: run the EcoSched simulator on a job stream.
+
+    PYTHONPATH=src python -m repro.launch.schedule --mode paper --k 0.1
+    PYTHONPATH=src python -m repro.launch.schedule --sweep-k 0,0.05,0.1,0.2
+    PYTHONPATH=src python -m repro.launch.schedule --mode predictive \
+        --jobs 40 --arrival-rate 0.125 --stragglers 0.1
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+from repro.core import (JSCC_SYSTEMS, SimConfig, make_npb_workload,
+                        simulate_jax, sweep_k)
+from repro.core.algorithm import MODES
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="paper", choices=MODES)
+    ap.add_argument("--k", type=float, default=0.1)
+    ap.add_argument("--sweep-k", default="",
+                    help="comma-separated K values (fractions)")
+    ap.add_argument("--jobs", type=int, default=0,
+                    help="random stream length (default: the paper's suite)")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="Poisson arrivals per second (0 = simultaneous)")
+    ap.add_argument("--stragglers", type=float, default=0.0)
+    ap.add_argument("--failures", type=float, default=0.0)
+    ap.add_argument("--cold", action="store_true",
+                    help="empty profile tables (exploration phase)")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    rng = np.random.default_rng(args.seed)
+    if args.jobs:
+        order = tuple(rng.choice(["BT", "EP", "IS", "LU", "SP"], args.jobs))
+        arrivals = (np.cumsum(rng.exponential(1 / args.arrival_rate, args.jobs))
+                    .astype(np.float32) if args.arrival_rate else None)
+    else:
+        order, arrivals = ("BT", "EP", "IS", "LU", "SP"), None
+    w = make_npb_workload(JSCC_SYSTEMS, order=order, arrivals=arrivals)
+    scfg = SimConfig(mode=args.mode, k=args.k, warm_start=not args.cold,
+                     straggler_prob=args.stragglers,
+                     failure_prob=args.failures, seed=args.seed)
+
+    if args.sweep_k:
+        ks = np.array([float(x) for x in args.sweep_k.split(",")])
+        res = sweep_k(w, scfg, ks)
+        E = np.asarray(res["total_energy"])
+        M = np.asarray(res["makespan"])
+        print("K,energy_J,makespan_s,dE%,dT%")
+        for i, k in enumerate(ks):
+            print(f"{k:.2f},{E[i]:.0f},{M[i]:.1f},"
+                  f"{100*(E[i]-E[0])/E[0]:+.1f},{100*(M[i]-M[0])/M[0]:+.1f}")
+        return
+
+    r = simulate_jax(w, scfg)
+    sel = np.asarray(r["system"])
+    print(f"mode={args.mode} K={args.k:.0%} jobs={len(w.prog)} "
+          f"warm={not args.cold}")
+    print(f"energy={float(r['total_energy'])/1e3:.1f} kJ  "
+          f"makespan={float(r['makespan']):.1f} s  "
+          f"total_wait={float(r['total_wait']):.1f} s")
+    counts = np.bincount(sel, minlength=len(w.systems))
+    print("placements:", {w.systems[i]: int(c) for i, c in enumerate(counts)})
+
+
+if __name__ == "__main__":
+    main()

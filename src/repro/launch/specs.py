@@ -1,0 +1,108 @@
+"""Input/cache/state sharding specs for the dry-run and launchers."""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.sharding.ctx import lm_rules
+from repro.sharding.params import tree_partition_specs, _fit
+
+
+def _axis_sizes(mesh):
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def batch_partition_specs(cfg: ModelConfig, shape: ShapeConfig, mesh, rules):
+    """PartitionSpec tree matching ModelApi.input_specs()['batch']."""
+    sizes = _axis_sizes(mesh)
+    b = shape.global_batch
+    bax = _fit(b, rules["batch"], sizes)
+    specs = {"tokens": P(bax, None)}
+    if shape.kind == "train":
+        specs["labels"] = P(bax, None)
+        specs["mask"] = P(bax, None)
+    if cfg.is_encoder_decoder:
+        specs["frame_embeds"] = P(bax, None, None)
+    if cfg.frontend == "vision":
+        specs["patch_embeds"] = P(bax, None, None)
+    return specs
+
+
+def cache_partition_specs(cfg: ModelConfig, shape: ShapeConfig, mesh, rules,
+                          cache_specs):
+    """PartitionSpec tree matching decode_cache_specs.
+
+    Attention KV caches [.., b, S, kv, hd]: batch on the data axes when it
+    divides; kv heads on 'model' when they divide, otherwise the SEQUENCE
+    dim goes on 'model' (flash-decode style partial softmax — XLA inserts
+    the combine collectives).  For global_batch=1 long-context, sequence is
+    sharded over (data, model) jointly.
+    """
+    sizes = _axis_sizes(mesh)
+    b = shape.global_batch
+    bax = _fit(b, rules["batch"], sizes)
+
+    def spec_for_leaf(path: str, x):
+        nd = len(x.shape)
+        name = path.split("/")[-1]
+        if name in ("k", "v", "self_k", "self_v", "mem_k", "mem_v"):
+            stacked = 1 if nd == 5 else 0
+            _, bdim, sdim, kvdim, _ = ((None,) + x.shape) if stacked == 0 else x.shape
+            kv_ax = _fit(x.shape[stacked + 2], rules["kv_heads"], sizes)
+            if kv_ax is not None:
+                seq_ax = None
+            else:
+                # sequence sharding fallback; join data axes when batch=1
+                seq_ax = (("data", "model") if (bax is None or b == 1)
+                          else "model")
+                seq_ax = _fit(x.shape[stacked + 1], seq_ax, sizes)
+            base = (bax, seq_ax, kv_ax, None)
+            return P(*([None] * stacked + list(base)))
+        if name == "conv":       # [G, b, K-1, conv_dim]
+            cd_ax = _fit(x.shape[-1], rules["ff"], sizes)
+            return P(*([None] * (nd - 3) + [bax, None, cd_ax]))
+        if name == "state":      # [G, b, h, p, n]
+            h_ax = _fit(x.shape[-3], rules["heads"], sizes)
+            return P(*([None] * (nd - 4) + [bax, h_ax, None, None]))
+        return P(*([None] * nd))
+
+    from repro.utils.tree import flatten_with_names
+    flat = flatten_with_names(cache_specs)
+    specs = [spec_for_leaf(name, x) for name, x in flat]
+    return jax.tree.unflatten(jax.tree.structure(cache_specs), specs)
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_all_specs(api, shape: ShapeConfig, mesh, *, multi_pod: bool):
+    """Returns dict with input specs (SDS) and sharding trees for the cell."""
+    cfg = api.cfg
+    rules = lm_rules(multi_pod, cfg.fsdp)
+    inputs = api.input_specs(shape)
+    out = {"rules": rules, "inputs": inputs}
+
+    pspecs = api.param_specs()
+    out["param_specs"] = pspecs
+    out["param_part"] = tree_partition_specs(pspecs, rules, mesh)
+
+    if shape.kind == "train":
+        from repro.optim import adamw_init_specs
+        ospecs = adamw_init_specs(pspecs)
+        opart = {
+            "master": out["param_part"], "m": out["param_part"],
+            "v": out["param_part"], "step": P(),
+        }
+        out["opt_specs"], out["opt_part"] = ospecs, opart
+        out["batch_part"] = batch_partition_specs(cfg, shape, mesh, rules)
+    elif shape.kind == "prefill":
+        out["batch_part"] = batch_partition_specs(cfg, shape, mesh, rules)
+    else:  # decode
+        out["cache_part"] = cache_partition_specs(
+            cfg, shape, mesh, rules, inputs["cache"])
+    return out

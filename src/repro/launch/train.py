@@ -1,0 +1,70 @@
+"""Production training launcher.
+
+On TPU fleets this builds the production mesh, shards params/opt/batch per
+repro.sharding rules and runs the fault-tolerant loop.  On this CPU
+container use ``--reduced`` (smoke-size model, real full stack) — the full
+configs are exercised via ``repro.launch.dryrun``.
+
+    PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+        --reduced --steps 20 --ckpt-dir /tmp/ecosched_train
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import ARCH_IDS, get_config, smoke_reduce
+from repro.configs.base import ShapeConfig, SHAPES
+from repro.models import build_model
+from repro.optim import AdamWConfig
+from repro.train import LoopConfig, run_training
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--shape", default="train_4k", choices=list(SHAPES))
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-size config (CPU-runnable)")
+    ap.add_argument("--batch", type=int, default=0, help="override batch")
+    ap.add_argument("--seq", type=int, default=0, help="override seq len")
+    ap.add_argument("--microbatches", type=int, default=0)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/ecosched_train")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--metrics", default="")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = smoke_reduce(cfg)
+    shape = SHAPES[args.shape]
+    if args.reduced:
+        shape = ShapeConfig("reduced", seq_len=args.seq or 64,
+                            global_batch=args.batch or 4, kind="train")
+    elif args.batch or args.seq:
+        shape = ShapeConfig("custom", seq_len=args.seq or shape.seq_len,
+                            global_batch=args.batch or shape.global_batch,
+                            kind="train")
+
+    mb = args.microbatches or (1 if args.reduced else cfg.microbatches)
+    api = build_model(cfg)
+    ocfg = AdamWConfig(lr_peak=args.lr, warmup_steps=max(args.steps // 20, 2),
+                      total_steps=args.steps)
+    lcfg = LoopConfig(steps=args.steps, ckpt_dir=args.ckpt_dir,
+                      ckpt_every=args.ckpt_every, microbatches=mb)
+    print(f"training {cfg.name}{' (reduced)' if args.reduced else ''} "
+          f"seq={shape.seq_len} batch={shape.global_batch} mb={mb} "
+          f"on {jax.device_count()} device(s)")
+    res = run_training(api, shape, ocfg, lcfg,
+                       metrics_path=args.metrics or None)
+    print(f"done: steps={res.final_step} resumed_from={res.resumed_from} "
+          f"loss {res.losses[0]:.3f} -> {res.losses[-1]:.3f} "
+          f"stragglers={len(res.straggler_events)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Uniform model API over decoder-only and encoder-decoder families.
+
+``build_model(cfg)`` returns a ``ModelApi`` whose methods are plain functions
+of (params, batch/cache) — jit/pjit-ready, no hidden state.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as T
+from repro.models import encdec as E
+
+
+@dataclass(frozen=True)
+class ModelApi:
+    cfg: ModelConfig
+    init_params: Callable
+    param_specs: Callable
+    train_loss: Callable            # (params, batch) -> (loss, metrics)
+    prefill: Callable               # (params, batch) -> logits [b, V]
+    decode_step: Callable           # (params, cache, tokens, pos) -> (logits, cache)
+    decode_cache_specs: Callable    # (batch, max_seq) -> pytree of SDS
+    init_decode_cache: Callable
+
+    def input_specs(self, shape: ShapeConfig, batch_override: int | None = None):
+        """ShapeDtypeStruct stand-ins for every model input of this shape cell
+        (global logical shapes; the launcher attaches shardings)."""
+        cfg = self.cfg
+        b = batch_override or shape.global_batch
+        s = shape.seq_len
+        i32 = jnp.int32
+        dt = jnp.dtype(cfg.dtype)
+        sds = jax.ShapeDtypeStruct
+        if shape.kind == "train":
+            batch = {"tokens": sds((b, s), i32),
+                     "labels": sds((b, s), i32),
+                     "mask": sds((b, s), i32)}
+            if cfg.is_encoder_decoder:
+                batch["frame_embeds"] = sds((b, cfg.encoder_seq, cfg.d_model), dt)
+            if cfg.frontend == "vision":
+                batch["patch_embeds"] = sds((b, cfg.n_patches, cfg.d_model), dt)
+            return {"batch": batch}
+        if shape.kind == "prefill":
+            batch = {"tokens": sds((b, s), i32)}
+            if cfg.is_encoder_decoder:
+                batch["frame_embeds"] = sds((b, cfg.encoder_seq, cfg.d_model), dt)
+            if cfg.frontend == "vision":
+                batch["patch_embeds"] = sds((b, cfg.n_patches, cfg.d_model), dt)
+            return {"batch": batch}
+        # decode: one new token against a seq_len cache
+        return {
+            "cache": self.decode_cache_specs(b, s),
+            "tokens": sds((b, 1), i32),
+            "pos": sds((), i32),
+        }
+
+
+def build_model(cfg: ModelConfig) -> ModelApi:
+    if cfg.is_encoder_decoder:
+        return ModelApi(
+            cfg=cfg,
+            init_params=lambda key: E.init_params(cfg, key),
+            param_specs=lambda: E.param_specs(cfg),
+            train_loss=lambda p, b: E.train_loss(cfg, p, b),
+            prefill=lambda p, b: E.prefill(cfg, p, b),
+            decode_step=lambda p, c, t, pos: E.decode_step(cfg, p, c, t, pos),
+            decode_cache_specs=lambda b, s: E.decode_cache_specs(cfg, b, s),
+            init_decode_cache=lambda b, s: E.init_decode_cache(cfg, b, s),
+        )
+    return ModelApi(
+        cfg=cfg,
+        init_params=lambda key: T.init_params(cfg, key),
+        param_specs=lambda: T.param_specs(cfg),
+        train_loss=lambda p, b: T.train_loss(cfg, p, b),
+        prefill=lambda p, b: T.prefill(cfg, p, b),
+        decode_step=lambda p, c, t, pos: T.decode_step(cfg, p, c, t, pos),
+        decode_cache_specs=lambda b, s: T.decode_cache_specs(cfg, b, s),
+        init_decode_cache=lambda b, s: T.init_decode_cache(cfg, b, s),
+    )

@@ -1,0 +1,285 @@
+"""GQA attention: blocked (flash-style) prefill/train path + decode path.
+
+Three implementations, numerically equivalent:
+  - ``plain_attention``  : einsum + causal mask, for short sequences (smoke).
+  - ``blocked_attention``: nested-scan online-softmax (flash algorithm in pure
+    jnp).  Never materializes [Sq, Sk]; working set is [bq, bk].  This is the
+    CPU/compile-path twin of the Pallas TPU kernel in
+    ``repro.kernels.flash_attention`` (ops.py dispatches between them).
+  - ``decode_attention`` : one query token vs a KV cache (logits are [b,h,1,S],
+    cheap; the cache may be sequence-sharded — XLA inserts the partial-softmax
+    collectives).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, apply_rope, rope_angles
+
+NEG_INF = -1e30
+
+
+def init_attn(cfg: ModelConfig, key, dtype, cross: bool = False):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim()
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(k1, d, (h, hd), dtype),
+        "wk": dense_init(k2, d, (kv, hd), dtype),
+        "wv": dense_init(k3, d, (kv, hd), dtype),
+        "wo": dense_init(k4, h * hd, (d,), dtype).reshape(h, hd, d),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h, hd), dtype)
+        p["bk"] = jnp.zeros((kv, hd), dtype)
+        p["bv"] = jnp.zeros((kv, hd), dtype)
+    return p
+
+
+def _project_q(p, x, cfg):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"], preferred_element_type=jnp.float32)
+    if "bq" in p:
+        q = q + p["bq"].astype(jnp.float32)
+    return q.astype(x.dtype)
+
+
+def _project_kv(p, x, cfg):
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"], preferred_element_type=jnp.float32)
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"], preferred_element_type=jnp.float32)
+    if "bk" in p:
+        k = k + p["bk"].astype(jnp.float32)
+        v = v + p["bv"].astype(jnp.float32)
+    return k.astype(x.dtype), v.astype(x.dtype)
+
+
+def _out_proj(p, o, x_dtype):
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"],
+                      preferred_element_type=jnp.float32).astype(x_dtype)
+
+
+# ------------------------------------------------------------------ cores
+
+def plain_attention(q, k, v, *, causal: bool, q_positions=None, k_positions=None):
+    """q: [b,sq,h,hd]; k,v: [b,sk,kv,hd]. fp32 softmax. Returns [b,sq,h,hd]."""
+    b, sq, h, hd = q.shape
+    _, sk, kv, _ = k.shape
+    rep = h // kv
+    scale = hd ** -0.5
+    qr = q.reshape(b, sq, kv, rep, hd).astype(jnp.float32) * scale
+    s = jnp.einsum("bqgrd,bpgd->bgrqp", qr, k.astype(jnp.float32))
+    if causal:
+        qp = jnp.arange(sq) if q_positions is None else q_positions
+        kp = jnp.arange(sk) if k_positions is None else k_positions
+        mask = qp[:, None] >= kp[None, :]
+        s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p_attn = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgrqp,bpgd->bqgrd", p_attn, v.astype(jnp.float32))
+    return o.reshape(b, sq, h, hd).astype(q.dtype)
+
+
+def blocked_attention(q, k, v, *, causal: bool, block_q: int = 512,
+                      block_k: int = 512, q_offset: int = 0,
+                      shard_blocks: bool = False):
+    """Flash-style online-softmax attention; O(bq*bk) working set.
+
+    q: [b,sq,h,hd]; k,v: [b,sk,kv,hd].  ``q_offset`` shifts query positions
+    (prefill continuation).  Requires sq % block_q == sk % block_k == 0.
+
+    ``shard_blocks``: shard the q-block row dim over the 'model' mesh axis —
+    sequence-sharded attention for archs whose head counts do not divide the
+    model axis (llama4's 40, qwen2's 12); k/v are replicated over 'model'
+    there anyway, so this buys /model_par attention parallelism with no
+    extra collectives (§Perf iteration 3).
+    """
+    from repro.sharding import annotate
+    b, sq, h, hd = q.shape
+    _, sk, kv, _ = k.shape
+    rep = h // kv
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, block_q, sk, block_k)
+    nq, nk = sq // block_q, sk // block_k
+    scale = hd ** -0.5
+
+    qb = q.reshape(b, nq, block_q, h, hd).transpose(1, 0, 2, 3, 4)
+    kb = k.reshape(b, nk, block_k, kv, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nk, block_k, kv, hd).transpose(1, 0, 2, 3, 4)
+    if shard_blocks:
+        qb = annotate(qb, (None, "batch", "seq_sp", None, None))
+        kb = annotate(kb, (None, "batch", None, None, None))
+        vb = annotate(vb, (None, "batch", None, None, None))
+    qpos = (jnp.arange(sq) + q_offset).reshape(nq, block_q)
+    kpos = jnp.arange(sk).reshape(nk, block_k)
+
+    @jax.named_scope("flash_attn_interior")
+    def q_step(_, qi):
+        q_blk, q_pos = qi                      # [b,bq,h,hd], [bq]
+        qr = q_blk.reshape(b, block_q, kv, rep, hd).astype(jnp.float32) * scale
+
+        def k_step(carry, ki):
+            m, l, acc = carry                  # [b,h,bq], [b,h,bq], [b,h,bq,hd]
+            k_blk, v_blk, k_pos = ki
+            s = jnp.einsum("bqgrd,bpgd->bgrqp", qr, k_blk.astype(jnp.float32))
+            s = s.reshape(b, h, block_q, block_k)
+            if causal:
+                mask = q_pos[:, None] >= k_pos[None, :]
+                s = jnp.where(mask[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p_blk = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p_blk.sum(axis=-1)
+            pv = jnp.einsum("bgrqp,bpgd->bgrqd",
+                            p_blk.reshape(b, kv, rep, block_q, block_k),
+                            v_blk.astype(jnp.float32)).reshape(b, h, block_q, hd)
+            acc_new = acc * alpha[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((b, h, block_q), NEG_INF, jnp.float32),
+                jnp.zeros((b, h, block_q), jnp.float32),
+                jnp.zeros((b, h, block_q, hd), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(k_step, init, (kb, vb, kpos))
+        o = acc / jnp.maximum(l, 1e-30)[..., None]          # [b,h,bq,hd]
+        return None, o.transpose(0, 2, 1, 3).astype(q.dtype)  # [b,bq,h,hd]
+
+    _, ob = jax.lax.scan(q_step, None, (qb, qpos))           # [nq,b,bq,h,hd]
+    return ob.transpose(1, 0, 2, 3, 4).reshape(b, sq, h, hd)
+
+
+def blocked_attention_tri(q, k, v, *, block_q: int = 512, block_k: int = 512,
+                          q_offset: int = 0):
+    """Causal blocked attention on a TRIANGULAR schedule: only the
+    nq(nq+1)/2 not-fully-masked (qi, ki<=qi) block pairs are computed
+    (§Perf iteration 2) — ~2x fewer tiles than the rectangular schedule.
+    Requires sq == sk and q_offset == 0 (the training/prefill case)."""
+    b, sq, h, hd = q.shape
+    _, sk, kv, _ = k.shape
+    assert sq == sk and q_offset == 0, "triangular schedule: self-causal only"
+    rep = h // kv
+    block_q = min(block_q, sq)
+    block_k = min(block_k, sk)
+    assert sq % block_q == 0 and sk % block_k == 0
+    assert block_q == block_k, "triangular schedule assumes square blocks"
+    nq = sq // block_q
+    scale = hd ** -0.5
+
+    qb = q.reshape(b, nq, block_q, h, hd).transpose(1, 0, 2, 3, 4)
+    kb = k.reshape(b, nq, block_k, kv, hd).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nq, block_k, kv, hd).transpose(1, 0, 2, 3, 4)
+
+    pairs = [(qi, ki) for qi in range(nq) for ki in range(qi + 1)]
+    qi_arr = jnp.asarray([p[0] for p in pairs], jnp.int32)
+    ki_arr = jnp.asarray([p[1] for p in pairs], jnp.int32)
+
+    @jax.named_scope("flash_attn_interior")
+    def step(carry, inp):
+        m, l, acc = carry            # [nq,b,h,bq], [nq,b,h,bq], [nq,b,h,bq,hd]
+        qi, ki = inp
+        q_blk = jax.lax.dynamic_index_in_dim(qb, qi, 0, keepdims=False)
+        k_blk = jax.lax.dynamic_index_in_dim(kb, ki, 0, keepdims=False)
+        v_blk = jax.lax.dynamic_index_in_dim(vb, ki, 0, keepdims=False)
+        qr = q_blk.reshape(b, block_q, kv, rep, hd).astype(jnp.float32) * scale
+        s = jnp.einsum("bqgrd,bpgd->bgrqp", qr, k_blk.astype(jnp.float32))
+        s = s.reshape(b, h, block_q, block_k)
+        q_pos = qi * block_q + jnp.arange(block_q)
+        k_pos = ki * block_k + jnp.arange(block_k)
+        s = jnp.where((q_pos[:, None] >= k_pos[None, :])[None, None], s, NEG_INF)
+
+        m_i = jax.lax.dynamic_index_in_dim(m, qi, 0, keepdims=False)
+        l_i = jax.lax.dynamic_index_in_dim(l, qi, 0, keepdims=False)
+        a_i = jax.lax.dynamic_index_in_dim(acc, qi, 0, keepdims=False)
+        m_new = jnp.maximum(m_i, s.max(axis=-1))
+        p_blk = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m_i - m_new)
+        l_new = l_i * alpha + p_blk.sum(axis=-1)
+        pv = jnp.einsum("bgrqp,bpgd->bgrqd",
+                        p_blk.reshape(b, kv, rep, block_q, block_k),
+                        v_blk.astype(jnp.float32)).reshape(b, h, block_q, hd)
+        a_new = a_i * alpha[..., None] + pv
+        m = jax.lax.dynamic_update_index_in_dim(m, m_new, qi, 0)
+        l = jax.lax.dynamic_update_index_in_dim(l, l_new, qi, 0)
+        acc = jax.lax.dynamic_update_index_in_dim(acc, a_new, qi, 0)
+        return (m, l, acc), None
+
+    init = (jnp.full((nq, b, h, block_q), NEG_INF, jnp.float32),
+            jnp.zeros((nq, b, h, block_q), jnp.float32),
+            jnp.zeros((nq, b, h, block_q, hd), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(step, init, (qi_arr, ki_arr))
+    o = acc / jnp.maximum(l, 1e-30)[..., None]           # [nq,b,h,bq,hd]
+    return (o.transpose(1, 0, 3, 2, 4)                   # [b,nq,bq,h,hd]
+            .reshape(b, sq, h, hd).astype(q.dtype))
+
+
+def decode_attention(q, cache_k, cache_v, *, length=None):
+    """q: [b,1,h,hd]; cache: [b,S,kv,hd]. Attends over positions < length
+    (length=None => whole cache)."""
+    b, _, h, hd = q.shape
+    _, S, kv, _ = cache_k.shape
+    rep = h // kv
+    scale = hd ** -0.5
+    qr = q.reshape(b, kv, rep, hd).astype(jnp.float32) * scale
+    s = jnp.einsum("bgrd,bpgd->bgrp", qr, cache_k.astype(jnp.float32))
+    if length is not None:
+        valid = jnp.arange(S) < length
+        s = jnp.where(valid[None, None, None], s, NEG_INF)
+    p_attn = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bgrp,bpgd->bgrd", p_attn, cache_v.astype(jnp.float32))
+    return o.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+# ------------------------------------------------------------- full layers
+
+def attn_forward(p, x, cfg: ModelConfig, *, causal=True, use_rope=True,
+                 positions=None, kv_x=None, return_kv=False):
+    """Training / prefill self- (or cross-) attention.
+
+    x: [b,s,d]; kv_x: source for K/V (cross-attention) or None (self).
+    Returns out [b,s,d]  (and (k,v) if return_kv).
+    """
+    b, s, _ = x.shape
+    q = _project_q(p, x, cfg)
+    k, v = _project_kv(p, kv_x if kv_x is not None else x, cfg)
+    if use_rope:
+        pos = jnp.arange(s) if positions is None else positions
+        sin, cos = rope_angles(pos, cfg.resolved_head_dim(), cfg.rope_theta)
+        q = apply_rope(q, sin, cos)
+        k = apply_rope(k, sin, cos)
+    sk = k.shape[1]
+    if cfg.use_flash != "never" and s >= 2048 and s % 512 == 0 and sk % 512 == 0:
+        if causal and cfg.attn_schedule == "tri" and s == sk:
+            o = blocked_attention_tri(q, k, v)
+        else:
+            o = blocked_attention(q, k, v, causal=causal,
+                                  shard_blocks=cfg.attn_seq_shard)
+    else:
+        o = plain_attention(q, k, v, causal=causal)
+    out = _out_proj(p, o, x.dtype)
+    if return_kv:
+        return out, (k, v)
+    return out
+
+
+def attn_decode(p, x, cfg: ModelConfig, cache_k, cache_v, pos, *,
+                use_rope=True, update_cache=True):
+    """One-token decode. x: [b,1,d]; cache: [b,S,kv,hd]; pos: scalar int.
+    Returns (out, new_cache_k, new_cache_v). Attends over positions <= pos."""
+    q = _project_q(p, x, cfg)
+    k_new, v_new = _project_kv(p, x, cfg)
+    if use_rope:
+        posv = jnp.asarray(pos)[None]
+        sin, cos = rope_angles(posv, cfg.resolved_head_dim(), cfg.rope_theta)
+        q = apply_rope(q, sin, cos)
+        k_new = apply_rope(k_new, sin, cos)
+    if update_cache:
+        cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k_new, pos, axis=1)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v_new, pos, axis=1)
+    o = decode_attention(q, cache_k, cache_v, length=pos + 1)
+    return _out_proj(p, o, x.dtype), cache_k, cache_v
+
+
+def attn_cross_decode(p, x, cfg: ModelConfig, mem_k, mem_v):
+    """Cross-attention decode against precomputed encoder K/V (no rope)."""
+    q = _project_q(p, x, cfg)
+    o = decode_attention(q, mem_k, mem_v, length=None)
+    return _out_proj(p, o, x.dtype)

@@ -1,0 +1,168 @@
+"""Encoder-decoder transformer (Whisper-medium backbone).
+
+The conv audio frontend is a STUB per the assignment: inputs carry
+precomputed frame embeddings [b, enc_seq, d_model].  Whisper specifics:
+LayerNorm (not RMSNorm), GELU MLPs with biases, learned absolute positions,
+no RoPE, pre-LN blocks, tied decoder embedding/output.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import attention as A
+from repro.sharding import annotate
+
+MAX_DEC_POSITIONS = 32_768
+
+
+def _init_layer(cfg: ModelConfig, key, dtype, cross: bool):
+    k1, k2, k3 = jax.random.split(key, 3)
+    lp = {
+        "norm1": L.init_norm(cfg, dtype),
+        "attn": A.init_attn(cfg, k1, dtype),
+        "norm_mlp": L.init_norm(cfg, dtype),
+        "mlp": L.init_mlp(cfg, k2, dtype),
+    }
+    if cross:
+        lp["norm_x"] = L.init_norm(cfg, dtype)
+        lp["xattn"] = A.init_attn(cfg, k3, dtype, cross=True)
+    return lp
+
+
+def init_params(cfg: ModelConfig, key):
+    dtype = jnp.dtype(cfg.dtype)
+    ke, kp1, kp2, kenc, kdec = jax.random.split(key, 5)
+    enc_layers = jax.vmap(lambda k: _init_layer(cfg, k, dtype, cross=False))(
+        jax.random.split(kenc, cfg.n_encoder_layers))
+    dec_layers = jax.vmap(lambda k: _init_layer(cfg, k, dtype, cross=True))(
+        jax.random.split(kdec, cfg.n_layers))
+    return {
+        "embed": L.init_embed(cfg, ke, dtype),
+        "head": L.init_lm_head(cfg, ke, dtype),
+        "enc_pos": (jax.random.normal(kp1, (cfg.encoder_seq, cfg.d_model),
+                                      jnp.float32) * 0.02).astype(dtype),
+        "dec_pos": (jax.random.normal(kp2, (MAX_DEC_POSITIONS, cfg.d_model),
+                                      jnp.float32) * 0.02).astype(dtype),
+        "enc_final_norm": L.init_norm(cfg, dtype),
+        "dec_final_norm": L.init_norm(cfg, dtype),
+        "enc_layers": enc_layers,
+        "dec_layers": dec_layers,
+    }
+
+
+def param_specs(cfg: ModelConfig):
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.key(0)))
+
+
+def _enc_layer(cfg, lp, x):
+    h = L.apply_norm(lp["norm1"], x, cfg)
+    x = x + A.attn_forward(lp["attn"], h, cfg, causal=False, use_rope=False)
+    h = L.apply_norm(lp["norm_mlp"], x, cfg)
+    return x + L.apply_mlp(lp["mlp"], h, cfg)
+
+
+def _dec_layer(cfg, lp, x, enc_out):
+    h = L.apply_norm(lp["norm1"], x, cfg)
+    x = x + A.attn_forward(lp["attn"], h, cfg, causal=True, use_rope=False)
+    h = L.apply_norm(lp["norm_x"], x, cfg)
+    x = x + A.attn_forward(lp["xattn"], h, cfg, causal=False, use_rope=False,
+                           kv_x=enc_out)
+    h = L.apply_norm(lp["norm_mlp"], x, cfg)
+    return x + L.apply_mlp(lp["mlp"], h, cfg)
+
+
+def _scan_layers(cfg, layer_fn, stacked, x):
+    body = layer_fn
+    if cfg.remat_policy != "none":
+        body = jax.checkpoint(body)
+
+    def f(x, lp):
+        return body(lp, x), None
+
+    x, _ = jax.lax.scan(f, x, stacked)
+    return x
+
+
+def encode(cfg: ModelConfig, params, frame_embeds):
+    x = frame_embeds.astype(jnp.dtype(cfg.dtype)) + params["enc_pos"]
+    x = annotate(x, ("batch", None, None))
+    x = _scan_layers(cfg, partial(_enc_layer, cfg), params["enc_layers"], x)
+    return L.apply_norm(params["enc_final_norm"], x, cfg)
+
+
+def decode_forward(cfg: ModelConfig, params, tokens, enc_out):
+    x = L.embed_tokens(params["embed"], tokens, cfg)
+    s = tokens.shape[1]
+    x = x + params["dec_pos"][:s]
+    x = annotate(x, ("batch", None, None))
+    x = _scan_layers(cfg, lambda lp, h: _dec_layer(cfg, lp, h, enc_out),
+                     params["dec_layers"], x)
+    return L.apply_norm(params["dec_final_norm"], x, cfg)
+
+
+def train_loss(cfg: ModelConfig, params, batch):
+    """batch: frame_embeds [b,F,d], tokens [b,s], labels [b,s], mask [b,s]."""
+    enc_out = encode(cfg, params, batch["frame_embeds"])
+    x = decode_forward(cfg, params, batch["tokens"], enc_out)
+    from repro.models.transformer import chunked_xent
+    nll, cnt = chunked_xent(cfg, params, x, batch["labels"], batch["mask"])
+    loss = nll / jnp.maximum(cnt, 1.0)
+    return loss, {"loss": loss, "aux": jnp.zeros((), jnp.float32), "tokens": cnt}
+
+
+def prefill(cfg: ModelConfig, params, batch):
+    enc_out = encode(cfg, params, batch["frame_embeds"])
+    x = decode_forward(cfg, params, batch["tokens"], enc_out)
+    logits = L.lm_logits(params["embed"], params["head"], x[:, -1:], cfg)
+    return logits[:, 0]
+
+
+def decode_cache_specs(cfg: ModelConfig, batch: int, max_seq: int):
+    dtype = jnp.dtype(cfg.dtype)
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim()
+    nl = cfg.n_layers
+    return {
+        "self_k": jax.ShapeDtypeStruct((nl, batch, max_seq, kv, hd), dtype),
+        "self_v": jax.ShapeDtypeStruct((nl, batch, max_seq, kv, hd), dtype),
+        # cross-attention memory (precomputed at prefill from encoder output)
+        "mem_k": jax.ShapeDtypeStruct((nl, batch, cfg.encoder_seq, kv, hd), dtype),
+        "mem_v": jax.ShapeDtypeStruct((nl, batch, cfg.encoder_seq, kv, hd), dtype),
+    }
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        decode_cache_specs(cfg, batch, max_seq))
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+    """One decoder token step. tokens: [b,1]. Returns (logits [b,V], cache)."""
+    x = L.embed_tokens(params["embed"], tokens, cfg)
+    x = x + jax.lax.dynamic_slice_in_dim(params["dec_pos"], pos, 1, axis=0)
+    x = annotate(x, ("batch", None, None))
+
+    def scan_fn(x, inp):
+        lp, sk, sv, mk, mv = inp
+        h = L.apply_norm(lp["norm1"], x, cfg)
+        h, sk, sv = A.attn_decode(lp["attn"], h, cfg, sk, sv, pos, use_rope=False)
+        x = x + h
+        h = L.apply_norm(lp["norm_x"], x, cfg)
+        x = x + A.attn_cross_decode(lp["xattn"], h, cfg, mk, mv)
+        h = L.apply_norm(lp["norm_mlp"], x, cfg)
+        x = x + L.apply_mlp(lp["mlp"], h, cfg)
+        return x, (sk, sv)
+
+    x, (new_sk, new_sv) = jax.lax.scan(
+        scan_fn, x,
+        (params["dec_layers"], cache["self_k"], cache["self_v"],
+         cache["mem_k"], cache["mem_v"]))
+    x = L.apply_norm(params["dec_final_norm"], x, cfg)
+    logits = L.lm_logits(params["embed"], params["head"], x, cfg)
+    new_cache = dict(cache, self_k=new_sk, self_v=new_sv)
+    return logits[:, 0], new_cache

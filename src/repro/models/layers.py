@@ -1,0 +1,146 @@
+"""Shared NN building blocks (pure-JAX pytrees, no flax).
+
+Conventions
+-----------
+- Params are nested dicts of jnp arrays; init fns are ``jax.eval_shape``-safe
+  (used by the dry-run to build ShapeDtypeStruct trees with no allocation).
+- Matmuls accumulate in fp32 (``preferred_element_type``); norms, softmax and
+  router math run in fp32 and cast back.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+
+def dense_init(key, in_dim, out_shape, dtype, scale=None):
+    """Truncated-normal fan-in init, eval_shape-safe."""
+    if scale is None:
+        scale = in_dim ** -0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, (in_dim, *out_shape), jnp.float32)
+            * scale).astype(dtype)
+
+
+# ----------------------------------------------------------------- norms
+
+def init_norm(cfg: ModelConfig, dtype):
+    p = {"scale": jnp.ones((cfg.d_model,), dtype)}
+    if cfg.norm_type == "layernorm":
+        p["bias"] = jnp.zeros((cfg.d_model,), dtype)
+    return p
+
+
+def apply_norm(p, x, cfg: ModelConfig):
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "layernorm":
+        mu = xf.mean(-1, keepdims=True)
+        xf = xf - mu
+        var = (xf * xf).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        var = (xf * xf).mean(-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- RoPE
+
+def rope_angles(positions, head_dim: int, theta: float):
+    """positions: int array [...]. Returns (sin, cos) of shape [..., head_dim//2]."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # [..., half]
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x, sin, cos):
+    """x: [..., seq, heads, head_dim]; sin/cos: [seq, head_dim//2] (or broadcastable)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    # broadcast sin/cos over head axis: [seq, 1, half]
+    s = sin[..., :, None, :]
+    c = cos[..., :, None, :]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    o1 = xf1 * c - xf2 * s
+    o2 = xf2 * c + xf1 * s
+    return jnp.concatenate([o1, o2], axis=-1).astype(x.dtype)
+
+
+# ----------------------------------------------------------------- MLPs
+
+def init_mlp(cfg: ModelConfig, key, dtype, d_ff: int | None = None):
+    d, f = cfg.d_model, (d_ff or cfg.d_ff)
+    k1, k2, k3 = jax.random.split(key, 3)
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        return {
+            "wi": dense_init(k1, d, (f,), dtype),          # gate proj
+            "wu": dense_init(k2, d, (f,), dtype),          # up proj
+            "wo": dense_init(k3, f, (d,), dtype),
+        }
+    # plain gelu MLP (whisper)
+    return {
+        "wi": dense_init(k1, d, (f,), dtype),
+        "bi": jnp.zeros((f,), dtype),
+        "wo": dense_init(k3, f, (d,), dtype),
+        "bo": jnp.zeros((d,), dtype),
+    }
+
+
+def apply_mlp(p, x, cfg: ModelConfig):
+    if cfg.mlp_type in ("swiglu", "geglu"):
+        g = jnp.einsum("...d,df->...f", x, p["wi"], preferred_element_type=jnp.float32)
+        u = jnp.einsum("...d,df->...f", x, p["wu"], preferred_element_type=jnp.float32)
+        act = jax.nn.silu(g) if cfg.mlp_type == "swiglu" else jax.nn.gelu(g, approximate=True)
+        h = (act * u).astype(x.dtype)
+        return jnp.einsum("...f,fd->...d", h, p["wo"],
+                          preferred_element_type=jnp.float32).astype(x.dtype)
+    h = jnp.einsum("...d,df->...f", x, p["wi"], preferred_element_type=jnp.float32)
+    h = jax.nn.gelu(h + p["bi"].astype(jnp.float32), approximate=True).astype(x.dtype)
+    o = jnp.einsum("...f,fd->...d", h, p["wo"], preferred_element_type=jnp.float32)
+    return (o + p["bo"].astype(jnp.float32)).astype(x.dtype)
+
+
+# ------------------------------------------------------------ embeddings
+
+def init_embed(cfg: ModelConfig, key, dtype):
+    p = {"table": dense_init(key, cfg.d_model, (cfg.vocab_size,), jnp.float32).T.astype(dtype)}
+    # table: [V, d]
+    return p
+
+
+def embed_tokens(p, tokens, cfg: ModelConfig):
+    out = jnp.take(p["table"], tokens, axis=0)
+    if cfg.name.startswith("gemma"):
+        out = out * jnp.asarray(cfg.d_model ** 0.5, out.dtype)
+    return out
+
+
+def lm_logits(embed_params, head_params, x, cfg: ModelConfig):
+    """Final projection to vocab. Tied => reuse the embedding table."""
+    table = embed_params["table"] if cfg.tie_embeddings else head_params["w"]
+    return jnp.einsum("...d,vd->...v", x, table, preferred_element_type=jnp.float32)
+
+
+def init_lm_head(cfg: ModelConfig, key, dtype):
+    if cfg.tie_embeddings:
+        return {}
+    return {"w": dense_init(key, cfg.d_model, (cfg.vocab_size,), dtype).T}  # [V, d]
+
+
+# ----------------------------------------------------------------- loss
+
+def softmax_xent(logits_f32, labels, mask):
+    """logits: [..., V] fp32; labels int; mask 0/1 same shape as labels.
+    Returns (mean_loss, token_count)."""
+    logits_f32 = logits_f32 - jax.lax.stop_gradient(
+        logits_f32.max(axis=-1, keepdims=True))
+    logz = jnp.log(jnp.exp(logits_f32).sum(axis=-1))
+    gold = jnp.take_along_axis(logits_f32, labels[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * mask
+    cnt = jnp.maximum(mask.sum(), 1.0)
+    return nll.sum() / cnt, cnt

@@ -1,0 +1,205 @@
+"""Mamba-2 mixer (SSD — state-space duality, arXiv:2405.21060), pure JAX.
+
+Chunked SSD prefill: within-chunk quadratic term + inter-chunk state
+recurrence (lax.scan over chunks) — O(L·Q) work, O(L/Q) sequential steps.
+Decode: O(1) per token state update.  All state math in fp32.
+
+Layout conventions:
+  u  : [b, l, d_model]
+  x  : [b, l, h, p]     (h = d_inner/head_dim SSD heads, p = head_dim)
+  B,C: [b, l, g, n]     (g groups, n = ssm state)
+  dt : [b, l, h]
+  state (decode): [b, h, p, n]
+  conv buffer   : [b, K-1, conv_dim]  with conv_dim = d_inner + 2*g*n
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+
+
+def _dims(cfg: ModelConfig):
+    ssm = cfg.ssm
+    d_inner = ssm.expand * cfg.d_model
+    h = d_inner // ssm.head_dim
+    conv_dim = d_inner + 2 * ssm.n_groups * ssm.state
+    return d_inner, h, conv_dim
+
+
+def init_mamba(cfg: ModelConfig, key, dtype):
+    ssm = cfg.ssm
+    d = cfg.d_model
+    d_inner, h, conv_dim = _dims(cfg)
+    proj_out = 2 * d_inner + 2 * ssm.n_groups * ssm.state + h
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(k1, d, (proj_out,), dtype),
+        "conv_w": (jax.random.normal(k2, (ssm.conv_kernel, conv_dim), jnp.float32)
+                   * (ssm.conv_kernel ** -0.5)).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "A_log": jnp.zeros((h,), jnp.float32),        # A = -exp(A_log) = -1 init
+        "D": jnp.ones((h,), jnp.float32),
+        "norm_scale": jnp.ones((d_inner,), dtype),
+        "out_proj": dense_init(k4, d_inner, (d,), dtype),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    ssm = cfg.ssm
+    d_inner, h, _ = _dims(cfg)
+    gn = ssm.n_groups * ssm.state
+    z, x, bc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + 2 * gn], axis=-1)
+    return z, x, bc, dt
+
+
+def _causal_conv(xbc, w, b, prev=None):
+    """Depthwise causal conv1d. xbc: [b,l,c]; w: [K,c]; prev: [b,K-1,c] or None.
+    Returns (out [b,l,c], tail [b,K-1,c])."""
+    k = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[-1]), xbc.dtype)
+    xp = jnp.concatenate([prev, xbc], axis=1)                   # [b, l+K-1, c]
+    out = jnp.zeros_like(xbc, shape=xbc.shape).astype(jnp.float32)
+    for i in range(k):
+        out = out + xp[:, i:i + xbc.shape[1]].astype(jnp.float32) * w[i].astype(jnp.float32)
+    out = out + b.astype(jnp.float32)
+    tail = xp[:, xp.shape[1] - (k - 1):]
+    return jax.nn.silu(out).astype(xbc.dtype), tail
+
+
+def _gated_norm(y, z, scale, eps):
+    """RMSNormGated(y * silu(z)) over the channel dim."""
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    var = (yf * yf).mean(-1, keepdims=True)
+    return (yf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32))
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int):
+    """Chunked SSD scan.  x:[b,l,h,p] dt:[b,l,h] A:[h] B,C:[b,l,g,n].
+    Returns (y [b,l,h,p] fp32, final_state [b,h,p,n] fp32)."""
+    b, l, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert l % chunk == 0, (l, chunk)
+    nc, q = l // chunk, chunk
+    rep = h // g
+
+    xf = x.astype(jnp.float32).reshape(b, nc, q, h, p)
+    dtf = dt.astype(jnp.float32).reshape(b, nc, q, h)
+    Bf = B.astype(jnp.float32).reshape(b, nc, q, g, n)
+    Cf = C.astype(jnp.float32).reshape(b, nc, q, g, n)
+
+    dA = dtf * A                                    # [b,nc,q,h]  (A negative)
+    cum = jnp.cumsum(dA, axis=2)                    # inclusive cumsum within chunk
+
+    # --- intra-chunk (diagonal block) term
+    # decay L[i,j] = exp(cum_i - cum_j) for i >= j
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]        # [b,nc,i,j,h]
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    L = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+    # scores S[i,j] per head = C_i . B_j  (group-broadcast over heads)
+    S = jnp.einsum("bcign,bcjgn->bcijg", Cf, Bf)                # [b,nc,i,j,g]
+    S = jnp.repeat(S, rep, axis=-1)                             # [b,nc,i,j,h]
+    M = S * L * dtf[:, :, None, :, :]                           # weight dt_j
+    y_diag = jnp.einsum("bcijh,bcjhp->bcihp", M, xf)
+
+    # --- chunk summary states: state_c = sum_j exp(cum_last - cum_j) dt_j B_j x_j
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)             # [b,nc,q,h]
+    Bh = jnp.repeat(Bf, rep, axis=3)                            # [b,nc,q,h,n]
+    states = jnp.einsum("bcqh,bcqhn,bcqhp->bchpn",
+                        decay_to_end * dtf, Bh, xf)             # [b,nc,h,p,n]
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                     # [b,nc,h]
+
+    # --- inter-chunk recurrence (sequential scan over chunks)
+    def step(prev, inp):
+        dec, st_chunk = inp                                     # [b,h], [b,h,p,n]
+        new = prev * dec[:, :, None, None] + st_chunk
+        return new, prev                                        # emit state *entering* the chunk
+
+    init = jnp.zeros((b, h, p, n), jnp.float32)
+    final_state, prev_states = jax.lax.scan(
+        step, init,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(states, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)               # [b,nc,h,p,n]
+
+    # --- off-diagonal term: y_off[i] = exp(cum_i) * C_i . prev_state
+    Ch = jnp.repeat(Cf, rep, axis=3)                            # [b,nc,q,h,n]
+    y_off = jnp.einsum("bcqhn,bchpn->bcqhp", Ch, prev_states) * \
+        jnp.exp(cum)[..., None]
+
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y, final_state
+
+
+def mamba_forward(p, u, cfg: ModelConfig, *, return_state: bool = False):
+    """Full mixer forward (train / prefill). u: [b,l,d]. Returns out [b,l,d]
+    (and (conv_tail, ssd_state) if return_state)."""
+    ssm = cfg.ssm
+    d_inner, h, conv_dim = _dims(cfg)
+    zxbcdt = jnp.einsum("bld,dk->blk", u, p["in_proj"],
+                        preferred_element_type=jnp.float32).astype(u.dtype)
+    z, x, bc, dt = _split_proj(cfg, zxbcdt)
+    xbc = jnp.concatenate([x, bc], axis=-1)
+    xbc, conv_tail = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    x, bc = xbc[..., :d_inner], xbc[..., d_inner:]
+    gn = ssm.n_groups * ssm.state
+    B = bc[..., :gn].reshape(*bc.shape[:2], ssm.n_groups, ssm.state)
+    C = bc[..., gn:].reshape(*bc.shape[:2], ssm.n_groups, ssm.state)
+    xh = x.reshape(*x.shape[:2], h, ssm.head_dim)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, state = ssd_chunked(xh, dtv, A, B, C, ssm.chunk)
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(*y.shape[:2], d_inner)
+    y = _gated_norm(y, z, p["norm_scale"], cfg.norm_eps).astype(u.dtype)
+    out = jnp.einsum("blk,kd->bld", y, p["out_proj"],
+                     preferred_element_type=jnp.float32).astype(u.dtype)
+    if return_state:
+        return out, (conv_tail, state)
+    return out
+
+
+def mamba_decode(p, u, cfg: ModelConfig, conv_buf, state):
+    """One-token decode. u: [b,1,d]; conv_buf: [b,K-1,conv_dim];
+    state: [b,h,p,n] fp32. Returns (out [b,1,d], conv_buf, state)."""
+    ssm = cfg.ssm
+    d_inner, h, conv_dim = _dims(cfg)
+    zxbcdt = jnp.einsum("bld,dk->blk", u, p["in_proj"],
+                        preferred_element_type=jnp.float32).astype(u.dtype)
+    z, x, bc, dt = _split_proj(cfg, zxbcdt)
+    xbc = jnp.concatenate([x, bc], axis=-1)                    # [b,1,c]
+    xbc, conv_buf = _causal_conv(xbc, p["conv_w"], p["conv_b"], prev=conv_buf)
+    x, bc = xbc[..., :d_inner], xbc[..., d_inner:]
+    gn = ssm.n_groups * ssm.state
+    B = bc[:, 0, :gn].reshape(-1, ssm.n_groups, ssm.state)     # [b,g,n]
+    C = bc[:, 0, gn:].reshape(-1, ssm.n_groups, ssm.state)
+    xh = x[:, 0].reshape(-1, h, ssm.head_dim).astype(jnp.float32)   # [b,h,p]
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # [b,h]
+    A = -jnp.exp(p["A_log"])
+    rep = h // ssm.n_groups
+    Bh = jnp.repeat(B.astype(jnp.float32), rep, axis=1)        # [b,h,n]
+    Ch = jnp.repeat(C.astype(jnp.float32), rep, axis=1)
+    dA = jnp.exp(dtv * A)                                      # [b,h]
+    state = state * dA[..., None, None] + \
+        jnp.einsum("bh,bhp,bhn->bhpn", dtv, xh, Bh)
+    y = jnp.einsum("bhn,bhpn->bhp", Ch, state) + p["D"][None, :, None] * xh
+    y = y.reshape(-1, 1, d_inner)
+    y = _gated_norm(y, z, p["norm_scale"], cfg.norm_eps).astype(u.dtype)
+    out = jnp.einsum("blk,kd->bld", y, p["out_proj"],
+                     preferred_element_type=jnp.float32).astype(u.dtype)
+    return out, conv_buf, state
+
+
+def mamba_decode_cache_specs(cfg: ModelConfig, batch: int):
+    """ShapeDtypeStructs for one mamba layer's decode cache."""
+    ssm = cfg.ssm
+    d_inner, h, conv_dim = _dims(cfg)
+    return (
+        jax.ShapeDtypeStruct((batch, ssm.conv_kernel - 1, conv_dim),
+                             jnp.dtype(cfg.dtype)),
+        jax.ShapeDtypeStruct((batch, h, ssm.head_dim, ssm.state), jnp.float32),
+    )

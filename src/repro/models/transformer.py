@@ -1,0 +1,276 @@
+"""Decoder-only LM covering dense / MoE / hybrid (Jamba) / pure-SSM (Mamba2)
+/ VLM (stub frontend) families.
+
+Layer organisation: layers are grouped into identical *groups* of size
+``lcm(attn_layer_period, moe.layer_period)`` (1 for uniform models, 8 for
+Jamba).  Group params are stacked on a leading axis and the model scans over
+groups — one traced group body regardless of depth, which keeps 48-layer
+compiles tractable and is the standard production pattern (MaxText-style).
+
+Remat: each group body is wrapped in ``jax.checkpoint`` with a configurable
+policy; with ``nothing_saveable`` only group inputs are stored.
+
+Cross-entropy is computed *chunked over the sequence* so the [b, s, V] fp32
+logits tensor is never materialized (vocabularies here reach 256k).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import attention as A
+from repro.models import moe as M
+from repro.models import mamba as S
+from repro.sharding import annotate
+
+AUX_LOSS_COEF = 0.01
+XENT_CHUNK = 512
+
+
+def group_size(cfg: ModelConfig) -> int:
+    a = cfg.attn_layer_period if (cfg.ssm is not None and cfg.attn_layer_period > 1) else 1
+    m = cfg.moe.layer_period if cfg.moe.n_experts else 1
+    g = math.lcm(max(a, 1), m)
+    assert cfg.n_layers % g == 0, (cfg.name, cfg.n_layers, g)
+    return g
+
+
+def n_groups(cfg: ModelConfig) -> int:
+    return cfg.n_layers // group_size(cfg)
+
+
+def _layer_kind(cfg: ModelConfig, j: int) -> str:
+    return "attn" if cfg.layer_is_attn(j) else "mamba"
+
+
+def _has_ffn(cfg: ModelConfig) -> bool:
+    return cfg.d_ff > 0
+
+
+# ------------------------------------------------------------------- init
+
+def init_group(cfg: ModelConfig, key, dtype):
+    g = group_size(cfg)
+    keys = jax.random.split(key, 2 * g)
+    gp = {}
+    for j in range(g):
+        lk, fk = keys[2 * j], keys[2 * j + 1]
+        lp = {"norm1": L.init_norm(cfg, dtype)}
+        if _layer_kind(cfg, j) == "attn":
+            lp["attn"] = A.init_attn(cfg, lk, dtype)
+        else:
+            lp["mamba"] = S.init_mamba(cfg, lk, dtype)
+        if _has_ffn(cfg):
+            lp["norm2"] = L.init_norm(cfg, dtype)
+            if cfg.layer_is_moe(j):
+                lp["moe"] = M.init_moe(cfg, fk, dtype)
+            else:
+                lp["mlp"] = L.init_mlp(cfg, fk, dtype)
+        gp[f"pos{j}"] = lp
+    return gp
+
+
+def init_params(cfg: ModelConfig, key):
+    dtype = jnp.dtype(cfg.dtype)
+    ke, kh, kg = jax.random.split(key, 3)
+    groups = jax.vmap(lambda k: init_group(cfg, k, dtype))(
+        jax.random.split(kg, n_groups(cfg)))
+    return {
+        "embed": L.init_embed(cfg, ke, dtype),
+        "head": L.init_lm_head(cfg, kh, dtype),
+        "final_norm": L.init_norm(cfg, dtype),
+        "groups": groups,
+    }
+
+
+def param_specs(cfg: ModelConfig):
+    """ShapeDtypeStruct tree (no allocation)."""
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.key(0)))
+
+
+# ---------------------------------------------------------------- forward
+
+def _residual_annotate(cfg, x):
+    if cfg.seq_parallel:
+        return annotate(x, ("batch", "seq_sp", None))
+    return annotate(x, ("batch", None, None))
+
+
+def _apply_group(cfg: ModelConfig, gp, x):
+    """One group of layers (train/prefill). Returns (x, aux)."""
+    g = group_size(cfg)
+    aux = jnp.zeros((), jnp.float32)
+    for j in range(g):
+        lp = gp[f"pos{j}"]
+        h = L.apply_norm(lp["norm1"], x, cfg)
+        if _layer_kind(cfg, j) == "attn":
+            h = A.attn_forward(lp["attn"], h, cfg,
+                               causal=True, use_rope=cfg.norm_type == "rmsnorm")
+        else:
+            h = S.mamba_forward(lp["mamba"], h, cfg)
+        x = _residual_annotate(cfg, x + h)
+        if _has_ffn(cfg):
+            h2 = L.apply_norm(lp["norm2"], x, cfg)
+            if cfg.layer_is_moe(j):
+                h2, aux_j = M.apply_moe(lp["moe"], h2, cfg)
+                aux = aux + aux_j
+            else:
+                h2 = L.apply_mlp(lp["mlp"], h2, cfg)
+            x = _residual_annotate(cfg, x + h2)
+    return x, aux
+
+
+_REMAT_POLICIES = {
+    "nothing_saveable": jax.checkpoint_policies.nothing_saveable,
+    "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+}
+
+
+def backbone(cfg: ModelConfig, params, x):
+    """Scan groups over a [b, s, d] stream. Returns (x, aux)."""
+    body = partial(_apply_group, cfg)
+    if cfg.remat_policy != "none":
+        body = jax.checkpoint(body, policy=_REMAT_POLICIES[cfg.remat_policy])
+
+    def scan_fn(carry, gp):
+        x, aux = carry
+        x, aux_g = body(gp, x)
+        return (x, aux + aux_g), None
+
+    (x, aux), _ = jax.lax.scan(scan_fn, (x, jnp.zeros((), jnp.float32)),
+                               params["groups"])
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    return x, aux
+
+
+def embed_inputs(cfg: ModelConfig, params, batch):
+    """tokens [+ patch_embeds] -> [b, s(+P), d]; returns (x, n_prefix)."""
+    x = L.embed_tokens(params["embed"], batch["tokens"], cfg)
+    n_prefix = 0
+    if cfg.frontend == "vision" and "patch_embeds" in batch:
+        pe = batch["patch_embeds"].astype(x.dtype)     # [b, P, d] (stub frontend)
+        x = jnp.concatenate([pe, x], axis=1)
+        n_prefix = pe.shape[1]
+    return _residual_annotate(cfg, x), n_prefix
+
+
+def chunked_xent(cfg: ModelConfig, params, x, labels, mask, chunk=XENT_CHUNK):
+    """Sequence-chunked softmax cross-entropy; never materializes [b,s,V].
+    x: [b,s,d]; labels/mask: [b,s]. Returns (sum_nll, sum_cnt)."""
+    b, s, _ = x.shape
+    chunk = min(chunk, s)
+    if s % chunk:
+        chunk = s  # fallback: single chunk
+    nc = s // chunk
+
+    def body(carry, inp):
+        xs, ls, ms = inp                               # [nc-major] slices
+        logits = L.lm_logits(params["embed"], params["head"], xs, cfg)
+        logits = annotate(logits, ("batch", None, "vocab"))
+        lf = logits - jax.lax.stop_gradient(logits.max(-1, keepdims=True))
+        logz = jnp.log(jnp.exp(lf).sum(-1))
+        gold = jnp.take_along_axis(lf, ls[..., None], axis=-1)[..., 0]
+        nll = ((logz - gold) * ms).sum()
+        return (carry[0] + nll, carry[1] + ms.sum()), None
+
+    xs = x.reshape(b, nc, chunk, -1).transpose(1, 0, 2, 3)
+    ls = labels.reshape(b, nc, chunk).transpose(1, 0, 2)
+    ms = mask.reshape(b, nc, chunk).transpose(1, 0, 2).astype(jnp.float32)
+    (nll, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (xs, ls, ms))
+    return nll, cnt
+
+
+def train_loss(cfg: ModelConfig, params, batch):
+    """batch: tokens [b,s], labels [b,s], mask [b,s] (+patch_embeds for vlm).
+    Returns (loss, metrics)."""
+    x, n_prefix = embed_inputs(cfg, params, batch)
+    x, aux = backbone(cfg, params, x)
+    if n_prefix:
+        x = x[:, n_prefix:]
+    nll, cnt = chunked_xent(cfg, params, x, batch["labels"], batch["mask"])
+    loss = nll / jnp.maximum(cnt, 1.0)
+    total = loss + AUX_LOSS_COEF * aux
+    return total, {"loss": loss, "aux": aux, "tokens": cnt}
+
+
+# ---------------------------------------------------------------- serving
+
+def prefill(cfg: ModelConfig, params, batch):
+    """Prefill forward -> last-position logits [b, V] (cache omitted: the
+    dry-run prefill cell measures the forward; cache writes are decode-path)."""
+    x, _ = embed_inputs(cfg, params, batch)
+    x, _ = backbone(cfg, params, x)
+    logits = L.lm_logits(params["embed"], params["head"], x[:, -1:], cfg)
+    return logits[:, 0]
+
+
+def decode_cache_specs(cfg: ModelConfig, batch: int, max_seq: int):
+    """Pytree of ShapeDtypeStructs for the decode cache (grouped layout)."""
+    g, ng = group_size(cfg), n_groups(cfg)
+    dtype = jnp.dtype(cfg.dtype)
+    hd, kv = cfg.resolved_head_dim(), cfg.n_kv_heads
+    cache = {}
+    for j in range(g):
+        if _layer_kind(cfg, j) == "attn":
+            cache[f"pos{j}"] = {
+                "k": jax.ShapeDtypeStruct((ng, batch, max_seq, kv, hd), dtype),
+                "v": jax.ShapeDtypeStruct((ng, batch, max_seq, kv, hd), dtype),
+            }
+        else:
+            conv, state = S.mamba_decode_cache_specs(cfg, batch)
+            cache[f"pos{j}"] = {
+                "conv": jax.ShapeDtypeStruct((ng, *conv.shape), conv.dtype),
+                "state": jax.ShapeDtypeStruct((ng, *state.shape), state.dtype),
+            }
+    return cache
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_seq: int):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype),
+                        decode_cache_specs(cfg, batch, max_seq))
+
+
+def decode_step(cfg: ModelConfig, params, cache, tokens, pos):
+    """One decode step for all sequences (synchronized position ``pos``).
+    tokens: [b, 1] int32; pos: scalar int32. Returns (logits [b,V], cache)."""
+    x = L.embed_tokens(params["embed"], tokens, cfg)
+    x = annotate(x, ("batch", None, None))
+    g = group_size(cfg)
+
+    def scan_fn(x, inp):
+        gp, gc = inp
+        new_gc = {}
+        for j in range(g):
+            lp, cj = gp[f"pos{j}"], gc[f"pos{j}"]
+            h = L.apply_norm(lp["norm1"], x, cfg)
+            if _layer_kind(cfg, j) == "attn":
+                h, ck, cv = A.attn_decode(
+                    lp["attn"], h, cfg, cj["k"], cj["v"], pos,
+                    use_rope=cfg.norm_type == "rmsnorm")
+                new_gc[f"pos{j}"] = {"k": ck, "v": cv}
+            else:
+                h, conv, state = S.mamba_decode(
+                    lp["mamba"], h, cfg, cj["conv"], cj["state"])
+                new_gc[f"pos{j}"] = {"conv": conv, "state": state}
+            x = x + h
+            if _has_ffn(cfg):
+                h2 = L.apply_norm(lp["norm2"], x, cfg)
+                if cfg.layer_is_moe(j):
+                    h2, _ = M.apply_moe(lp["moe"], h2, cfg)
+                else:
+                    h2 = L.apply_mlp(lp["mlp"], h2, cfg)
+                x = x + h2
+        return x, new_gc
+
+    x, new_cache = jax.lax.scan(scan_fn, x, (params["groups"], cache))
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = L.lm_logits(params["embed"], params["head"], x, cfg)
+    return logits[:, 0], new_cache

@@ -1,0 +1,15 @@
+from repro.optim.adamw import (
+    AdamWConfig,
+    adamw_init,
+    adamw_init_specs,
+    adamw_update,
+    lr_schedule,
+    global_norm,
+)
+from repro.optim.compression import (
+    quantize_int8,
+    dequantize_int8,
+    compress_with_feedback,
+    compressed_psum,
+    init_error_state,
+)

@@ -1,0 +1,92 @@
+"""AdamW with fp32 master weights, global-norm clipping and LR schedules.
+
+Built from scratch (no optax in this environment).  The optimizer state keeps
+fp32 master params + moments regardless of the model compute dtype (bf16
+models train on fp32 masters, cast on apply) — standard mixed-precision
+production setup.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr_peak: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    lr_min_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def lr_schedule(cfg: AdamWConfig, step):
+    """Linear warmup + cosine decay to lr_min_ratio (all fp32, jit-safe)."""
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    frac = cfg.lr_min_ratio + (1 - cfg.lr_min_ratio) * cos
+    return cfg.lr_peak * warm * frac
+
+
+def global_norm(tree):
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_init(params):
+    f32 = partial(jax.tree.map, lambda x: x.astype(jnp.float32))
+    zeros = partial(jax.tree.map, lambda x: jnp.zeros(x.shape, jnp.float32))
+    return {
+        "master": f32(params),
+        "m": zeros(params),
+        "v": zeros(params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adamw_init_specs(param_specs):
+    """ShapeDtypeStruct version for the dry-run (no allocation)."""
+    sds = jax.ShapeDtypeStruct
+    f32 = jax.tree.map(lambda x: sds(x.shape, jnp.float32), param_specs)
+    return {"master": f32, "m": f32, "v": f32, "step": sds((), jnp.int32)}
+
+
+def adamw_update(grads, opt_state, ocfg: AdamWConfig, model_dtype):
+    """Returns (new_params_in_model_dtype, new_opt_state, metrics)."""
+    step = opt_state["step"] + 1
+    lr = lr_schedule(ocfg, step)
+
+    g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+    gnorm = global_norm(g32)
+    scale = jnp.minimum(1.0, ocfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+    g32 = jax.tree.map(lambda g: g * scale, g32)
+
+    b1, b2 = ocfg.b1, ocfg.b2
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, opt_state["m"], g32)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, opt_state["v"], g32)
+    t = step.astype(jnp.float32)
+    bc1 = 1 - b1 ** t
+    bc2 = 1 - b2 ** t
+
+    def upd(master, m_, v_):
+        mhat = m_ / bc1
+        vhat = v_ / bc2
+        return master - lr * (mhat / (jnp.sqrt(vhat) + ocfg.eps)
+                              + ocfg.weight_decay * master)
+
+    master = jax.tree.map(upd, opt_state["master"], m, v)
+    new_params = jax.tree.map(lambda x: x.astype(model_dtype), master)
+    new_state = {"master": master, "m": m, "v": v, "step": step}
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

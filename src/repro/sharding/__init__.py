@@ -1,0 +1,1 @@
+from repro.sharding.ctx import annotate, use_rules, spec_for, lm_rules, current_rules

@@ -1,0 +1,92 @@
+"""Logical-axis sharding annotations, decoupled from model code.
+
+Model code calls ``annotate(x, ("batch", None, "embed"))`` with *logical*
+axis names.  The launcher installs a rule set mapping logical names to mesh
+axes (via ``use_rules``); with no rules installed, ``annotate`` is a no-op —
+so smoke tests and single-device runs never touch device state.
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def current_rules():
+    return getattr(_state, "rules", None), getattr(_state, "mesh", None)
+
+
+@contextmanager
+def use_rules(mesh: Mesh, rules: dict):
+    """rules: {logical_name: mesh_axis | tuple | None}"""
+    old = current_rules()
+    _state.rules, _state.mesh = rules, mesh
+    try:
+        yield
+    finally:
+        _state.rules, _state.mesh = old
+
+
+def spec_for(logical_axes, rules) -> P:
+    parts = []
+    for name in logical_axes:
+        if name is None:
+            parts.append(None)
+        else:
+            parts.append(rules.get(name))
+    return P(*parts)
+
+
+def annotate(x, logical_axes):
+    """Apply a sharding constraint if rules are installed; else no-op."""
+    rules, mesh = current_rules()
+    if rules is None or mesh is None:
+        return x
+    spec = spec_for(logical_axes, rules)
+    # drop axes whose mesh axis does not divide the dim
+    fixed = []
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    for dim, part in zip(x.shape, spec):
+        if part is None:
+            fixed.append(None)
+            continue
+        names = (part,) if isinstance(part, str) else tuple(part)
+        total = 1
+        for n in names:
+            total *= axis_sizes[n]
+        fixed.append(part if dim % total == 0 else None)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*fixed)))
+
+
+# Default logical → mesh-axis rule sets -----------------------------------
+
+def lm_rules(multi_pod: bool, fsdp: bool = False) -> dict:
+    batch_axes = ("pod", "data") if multi_pod else ("data",)
+    return {
+        "batch": batch_axes,
+        "seq_shard": batch_axes,    # sequence-sharded KV caches (long decode)
+        "heads": "model",
+        "kv_heads": "model",
+        "vocab": "model",
+        "ff": "model",
+        "experts": "model",
+        "embed": ("data" if fsdp else None),
+        "seq_sp": "model",          # sequence-parallel residual stream
+        # MoE dispatch locality: tokens are sorted/capacity-bucketed PER data
+        # shard (GShard-style), so only the true expert all-to-all crosses
+        # links. 32 = pod x data on the multi-pod mesh.
+        "dp_shards": 32 if multi_pod else 16,
+    }
+
+
+def dispatch_shards() -> int:
+    """Number of data shards for MoE-local dispatch (1 when no rules)."""
+    rules, _ = current_rules()
+    if not rules:
+        return 1
+    return int(rules.get("dp_shards", 1))

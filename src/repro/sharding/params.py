@@ -1,0 +1,119 @@
+"""Parameter partition rules: path + shape -> PartitionSpec.
+
+Megatron-style TP on the 'model' axis (heads / ff / experts / vocab),
+optional ZeRO/FSDP on the 'data' axis (embed dims), with automatic
+divisibility fallback: an axis is only assigned if the dim divides evenly
+(e.g. llama4's 40 q-heads and qwen2's 12 do NOT divide a 16-way model axis
+-> those weights fall back to FSDP sharding, and attention math stays
+data-parallel; recorded per-arch in EXPERIMENTS.md).
+
+Stacked leading dims (scan-over-layers: 'groups/...', 'enc_layers/...',
+'dec_layers/...') get a None prefix.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding.ctx import spec_for
+
+
+def _axis_size(ax, axis_sizes) -> int:
+    if ax is None:
+        return 1
+    names = (ax,) if isinstance(ax, str) else tuple(ax)
+    n = 1
+    for a in names:
+        n *= axis_sizes[a]
+    return n
+
+
+def _fit(dim: int, ax, axis_sizes):
+    """Return ax if it divides dim, else None."""
+    return ax if (ax is not None and dim % _axis_size(ax, axis_sizes) == 0) else None
+
+
+def logical_axes_for(path: str, ndim: int) -> tuple:
+    """Map a param path to logical axis names (pre-divisibility-check)."""
+    parts = path.split("/")
+    name = parts[-1]
+    parent = parts[-2] if len(parts) > 1 else ""
+
+    if name == "table":                       # embed [V, d]
+        return ("vocab", "embed")
+    if parent == "head" and name == "w":      # lm head [V, d]
+        return ("vocab", "embed")
+    if name in ("enc_pos", "dec_pos"):
+        return (None, "embed")
+
+    if parent in ("attn", "xattn"):
+        if name == "wq":
+            return ("embed", "heads", None)
+        if name in ("wk", "wv"):
+            return ("embed", "kv_heads", None)
+        if name == "wo":
+            return ("heads", None, "embed")
+        if name == "bq":
+            return ("heads", None)
+        if name in ("bk", "bv"):
+            return ("kv_heads", None)
+
+    if parent == "moe":
+        if name == "router":
+            return ("embed", None)
+        # experts consume the 'model' axis (EP); ff must NOT also map to it
+        if name in ("wi", "wu"):
+            return ("experts", "embed", None)
+        if name == "wo":
+            return ("experts", None, "embed")
+
+    if parent == "mlp":
+        if name in ("wi", "wu"):
+            return ("embed", "ff")
+        if name == "wo":
+            return ("ff", "embed")
+        if name == "bi":
+            return ("ff",)
+        if name == "bo":
+            return ("embed",)
+
+    if parent == "mamba":
+        if name == "in_proj":
+            return ("embed", None)
+        if name == "out_proj":
+            return (None, "embed")
+        # conv_w/conv_b/dt_bias/A_log/D/norm_scale: replicate
+        return (None,) * ndim
+
+    # norms & anything else: replicated
+    return (None,) * ndim
+
+
+def param_partition_spec(path: str, shape: tuple, rules: dict,
+                         axis_sizes: dict) -> P:
+    parts = path.split("/")
+    # stacked trees: 'groups/posN/...' leaves carry a leading n_groups dim;
+    # encdec stacked trees are 'enc_layers/...' / 'dec_layers/...'
+    stacked = 1 if parts[0] in ("groups", "enc_layers", "dec_layers") else 0
+    core_ndim = len(shape) - stacked
+    logical = logical_axes_for("/".join(p for p in parts if not p.startswith("pos")),
+                               core_ndim)
+    if len(logical) != core_ndim:
+        logical = (None,) * core_ndim
+    mesh_axes = [rules.get(l) if l else None for l in logical]
+    fitted = [_fit(d, ax, axis_sizes)
+              for d, ax in zip(shape[stacked:], mesh_axes)]
+    return P(*([None] * stacked + fitted))
+
+
+def tree_partition_specs(spec_tree, rules, mesh):
+    """Map a ShapeDtypeStruct tree to a PartitionSpec tree."""
+    import jax
+    from repro.utils.tree import flatten_with_names
+
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    flat = flatten_with_names(spec_tree)
+    specs = [param_partition_spec(name, tuple(x.shape), rules, axis_sizes)
+             for name, x in flat]
+    return jax.tree.unflatten(jax.tree.structure(spec_tree), specs)

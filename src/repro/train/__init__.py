@@ -1,0 +1,7 @@
+from repro.train.step import (
+    make_train_step,
+    make_eval_step,
+    make_prefill_step,
+    make_decode_step,
+)
+from repro.train.loop import LoopConfig, LoopResult, run_training

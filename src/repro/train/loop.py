@@ -1,0 +1,104 @@
+"""Fault-tolerant training loop.
+
+Production concerns handled here:
+  - checkpoint/restart (atomic async saves via CheckpointManager; resume
+    restores params, optimizer state AND the data stream position — batches
+    are a pure function of step);
+  - straggler detection: per-step wall time vs. running median; slow steps
+    are logged as events (at fleet scale the scheduler consumes these via
+    the repro.core T-tables — see DESIGN.md §7);
+  - crash injection hook for fault-tolerance tests.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import statistics
+import time
+from dataclasses import dataclass, field
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.data import SyntheticStream, DataConfig
+from repro.models import ModelApi, build_model
+from repro.optim import AdamWConfig, adamw_init
+from repro.train.step import make_train_step
+
+
+@dataclass
+class LoopConfig:
+    steps: int = 100
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 50
+    keep_n: int = 3
+    log_every: int = 10
+    straggler_factor: float = 3.0
+    microbatches: int = 1
+    seed: int = 0
+
+
+@dataclass
+class LoopResult:
+    losses: list = field(default_factory=list)
+    step_times: list = field(default_factory=list)
+    straggler_events: list = field(default_factory=list)
+    final_step: int = 0
+    resumed_from: int | None = None
+
+
+def run_training(api: ModelApi, shape, ocfg: AdamWConfig, lcfg: LoopConfig,
+                 crash_at_step: int | None = None,
+                 metrics_path: str | None = None) -> LoopResult:
+    """Single-process training with checkpoint/resume. Returns LoopResult."""
+    cfg = api.cfg
+    mgr = CheckpointManager(lcfg.ckpt_dir, keep_n=lcfg.keep_n)
+    res = LoopResult()
+
+    params = api.init_params(jax.random.key(lcfg.seed))
+    opt_state = adamw_init(params)
+    start_step = 0
+    state_tmpl = {"params": params, "opt": opt_state}
+    restored, ck_step, _meta = mgr.restore(state_tmpl)
+    if restored is not None:
+        params, opt_state = restored["params"], restored["opt"]
+        start_step = ck_step
+        res.resumed_from = ck_step
+
+    step_fn = jax.jit(make_train_step(api, ocfg, lcfg.microbatches))
+    stream = SyntheticStream(cfg, shape, start_step=start_step,
+                             dcfg=DataConfig(seed=lcfg.seed))
+    mfile = open(metrics_path, "a") if metrics_path else None
+
+    for step in range(start_step, lcfg.steps):
+        if crash_at_step is not None and step == crash_at_step:
+            mgr.wait()
+            raise RuntimeError(f"injected crash at step {step}")
+        batch = next(stream)
+        t0 = time.perf_counter()
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])          # blocks: includes device time
+        dt = time.perf_counter() - t0
+        res.losses.append(loss)
+        res.step_times.append(dt)
+        if len(res.step_times) >= 5:
+            med = statistics.median(res.step_times[-50:])
+            if dt > lcfg.straggler_factor * med:
+                res.straggler_events.append(
+                    {"step": step, "dt": dt, "median": med})
+        if mfile and step % lcfg.log_every == 0:
+            mfile.write(json.dumps({"step": step, "loss": loss, "dt": dt,
+                                    "lr": float(metrics["lr"])}) + "\n")
+            mfile.flush()
+        if (step + 1) % lcfg.ckpt_every == 0 or step + 1 == lcfg.steps:
+            mgr.save(step + 1, {"params": params, "opt": opt_state},
+                     metadata={"loss": loss, "arch": cfg.name})
+        res.final_step = step + 1
+
+    mgr.wait()
+    if mfile:
+        mfile.close()
+    assert np.isfinite(res.losses[-1]) if res.losses else True
+    return res

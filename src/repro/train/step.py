@@ -1,0 +1,77 @@
+"""jit/pjit-ready train and serve step factories."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelApi
+from repro.optim import AdamWConfig, adamw_update
+
+
+def make_train_step(api: ModelApi, ocfg: AdamWConfig, microbatches: int = 1):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    ``microbatches > 1`` runs gradient accumulation via lax.scan over
+    batch-dim splits (grads accumulated in fp32) — the standard way to trade
+    HBM for throughput at large global batch.
+    """
+    cfg = api.cfg
+    model_dtype = jnp.dtype(cfg.dtype)
+
+    def loss_fn(p, mb):
+        return api.train_loss(p, mb)
+
+    def compute_grads(params, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+            return loss, metrics, grads
+
+        def split(x):
+            b = x.shape[0]
+            assert b % microbatches == 0, (b, microbatches)
+            return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+        mbs = jax.tree.map(split, batch)
+        g0 = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+
+        def body(carry, mb):
+            gacc, lacc, aacc = carry
+            (loss, metrics), g = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, mb)
+            gacc = jax.tree.map(lambda a, b_: a + b_.astype(jnp.float32), gacc, g)
+            return (gacc, lacc + loss, aacc + metrics["aux"]), None
+
+        (gsum, lsum, asum), _ = jax.lax.scan(
+            body, (g0, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), mbs)
+        inv = 1.0 / microbatches
+        grads = jax.tree.map(lambda g: g * inv, gsum)
+        return lsum * inv, {"loss": lsum * inv, "aux": asum * inv,
+                            "tokens": jnp.float32(0)}, grads
+
+    def train_step(params, opt_state, batch):
+        loss, metrics, grads = compute_grads(params, batch)
+        new_params, new_opt, om = adamw_update(grads, opt_state, ocfg, model_dtype)
+        out_metrics = {"loss": metrics["loss"], "aux": metrics["aux"],
+                       "lr": om["lr"], "grad_norm": om["grad_norm"]}
+        return new_params, new_opt, out_metrics
+
+    return train_step
+
+
+def make_eval_step(api: ModelApi):
+    def eval_step(params, batch):
+        loss, metrics = api.train_loss(params, batch)
+        return metrics
+    return eval_step
+
+
+def make_prefill_step(api: ModelApi):
+    return api.prefill
+
+
+def make_decode_step(api: ModelApi):
+    return api.decode_step

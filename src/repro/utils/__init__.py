@@ -1,0 +1,7 @@
+from repro.utils.tree import (
+    tree_path_map,
+    tree_size_bytes,
+    tree_num_params,
+    flatten_with_names,
+)
+from repro.utils.hlo import parse_collective_bytes, parse_hlo_op_bytes

@@ -1,0 +1,473 @@
+"""Trip-count-aware cost analysis over optimized HLO text.
+
+Why: ``compiled.cost_analysis()`` counts while-loop bodies ONCE, so any
+scan-over-layers module under-reports FLOPs/bytes/collectives by ~n_layers
+(verified empirically; see EXPERIMENTS.md §Dry-run).  XLA's optimized HLO
+carries ``known_trip_count`` on while ops, so we walk the call graph and
+multiply loop bodies out.
+
+Model:
+  flops:
+    dot            2 * numel(out) * prod(contracting dims of lhs)
+    elementwise    numel(out)          (transcendentals weighted x4)
+    reduce(+window) numel(input)
+    fusion         recurse (interior dots etc.)
+  memory bytes (HBM traffic approximation):
+    at materialization boundaries (top-level instructions of non-fusion
+    computations): sum of operand + output bytes for memory-touching ops;
+    fusion interiors are free (that is what fusion means).  bitcast /
+    get-tuple-element / tuple / parameter are free.
+  collectives:
+    output bytes summed per op kind, x ring-algorithm link factor
+    (all-reduce 2x, others 1x), multiplied by enclosing trip counts.
+
+This is a first-order model: it ignores cache reuse between consumers and
+pads, and counts both operands of every fusion — good to ~2x, which is the
+fidelity a roofline argument needs.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "s4": 1,
+    "u64": 8, "u32": 4, "u16": 2, "u8": 1, "u4": 1,
+    "pred": 1, "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "and",
+    "or", "xor", "not", "negate", "abs", "select", "compare", "clamp",
+    "sign", "floor", "ceil", "round-nearest-afz", "round-nearest-even",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic",
+    "remainder", "is-finite",
+}
+_TRANSCENDENTAL = {"exponential", "log", "rsqrt", "sqrt", "tanh", "power",
+                   "sine", "cosine", "erf", "expm1", "log1p", "logistic",
+                   "atan2", "cbrt"}
+_FREE = {"bitcast", "get-tuple-element", "tuple", "parameter", "constant",
+         "after-all", "add-dependency", "partition-id", "replica-id", "iota"}
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_MEMORY_OPS = {"copy", "transpose", "slice", "dynamic-slice",
+               "dynamic-update-slice", "concatenate", "broadcast", "gather",
+               "pad", "reverse", "reshape", "copy-start", "copy-done"}
+_LINK_FACTOR = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _shape_numel_bytes(shape_str: str):
+    numel = 0
+    nbytes = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        numel += n
+        nbytes += n * _DTYPE_BYTES[dtype]
+    return numel, nbytes
+
+
+@dataclass
+class Instr:
+    name: str
+    shape: str
+    opcode: str
+    operands: list
+    attrs: str
+    is_root: bool = False
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: list = field(default_factory=list)
+    symbols: dict = field(default_factory=dict)   # %name -> shape str
+
+
+_COMP_HDR = re.compile(r"^(?:ENTRY )?(%[\w\.\-]+|[\w\.\-]+) \(.*\)(?: -> .*)? {")
+_INST_HEAD = re.compile(r"^\s+(ROOT\s+)?(%[\w\.\-]+) = ")
+
+
+def _parse_instr_line(line: str):
+    """Parse '  %name = SHAPE opcode(operands), attrs' robustly (tuple
+    shapes may contain spaces and '=' inside /*index=N*/ comments)."""
+    m = _INST_HEAD.match(line)
+    if not m:
+        return None
+    is_root = m.group(1) is not None
+    name = m.group(2)
+    rest = line[m.end():]
+    if rest.startswith("("):              # tuple shape: balanced-paren scan
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        shape, rest = rest[:i + 1], rest[i + 1:].lstrip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        shape, rest = rest[:sp], rest[sp + 1:]
+    par = rest.find("(")
+    if par < 0:
+        return None
+    opcode = rest[:par]
+    argstr = rest[par + 1:]
+    return name, shape, opcode, argstr, is_root
+
+
+def _top_level_operands(argstr: str):
+    """Extract top-level %operand names from 'a, b, c), attrs...'."""
+    out, depth = [], 0
+    token = ""
+    for ch in argstr:
+        if ch in "({[":
+            depth += 1
+        elif ch in ")}]":
+            if depth == 0:
+                break
+            depth -= 1
+        if ch == "," and depth == 0:
+            token = token.strip()
+            if token.startswith("%"):
+                out.append(token.split(" ")[0])
+            token = ""
+        else:
+            token += ch
+    token = token.strip()
+    if token.startswith("%"):
+        out.append(token.split(" ")[0])
+    return out
+
+
+def parse_hlo_module(text: str):
+    comps = {}
+    cur = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HDR.match(line)
+            if m:
+                name = m.group(1)
+                if not name.startswith("%"):
+                    name = "%" + name
+                cur = Computation(name=name)
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        parsed = _parse_instr_line(line)
+        if parsed is None:
+            continue
+        name, shape, opcode, rest, is_root = parsed
+        inst = Instr(name=name, shape=shape, opcode=opcode,
+                     operands=_top_level_operands(rest), attrs=rest,
+                     is_root=is_root)
+        cur.instrs.append(inst)
+        cur.symbols[name] = shape
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps
+
+
+_CALLS = re.compile(r"(?:calls|to_apply|body|condition|branch_computations)="
+                    r"(%[\w\.\-]+|\{[^}]*\})")
+_ATTN_SCOPE = "flash_attn_interior"
+_TRIP = re.compile(r'known_trip_count"?:\s*{"?n"?:\s*"?(\d+)')
+_DOT_LHS_C = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _dot_flops(inst: Instr, symbols: dict) -> float:
+    out_numel, _ = _shape_numel_bytes(inst.shape)
+    if not inst.operands:
+        return 0.0
+    lhs_shape = symbols.get(inst.operands[0], "")
+    m = _DOT_LHS_C.search(inst.attrs)
+    dims_m = _SHAPE_RE.search(lhs_shape)
+    if not (m and dims_m):
+        return 2.0 * out_numel
+    lhs_dims = [int(d) for d in dims_m.group(2).split(",") if d]
+    k = 1
+    for i in (int(x) for x in m.group(1).split(",") if x):
+        if i < len(lhs_dims):
+            k *= lhs_dims[i]
+    return 2.0 * out_numel * k
+
+
+def _mem_traffic(op: str, out_bytes: int, opnd_bytes: list) -> float:
+    """Per-op HBM traffic model (in-place aware).
+
+    XLA aliases dynamic-update-slice and loop carries in place: traffic is
+    the touched REGION, not the carried buffer.  Slices/gathers read only
+    the sliced region.  Reductions read their full inputs."""
+    if op in ("dynamic-slice", "slice", "gather"):
+        return 2.0 * out_bytes
+    if op == "dynamic-update-slice":
+        upd = opnd_bytes[1] if len(opnd_bytes) > 1 else out_bytes
+        return 2.0 * upd
+    if op in ("broadcast", "iota"):
+        return float(out_bytes)
+    if op in ("reduce", "reduce-window", "sort", "scatter",
+              "select-and-scatter"):
+        return float(sum(opnd_bytes) + out_bytes)
+    if op in ("fusion", "dot", "convolution", "custom-call", "call"):
+        return float(sum(opnd_bytes) + out_bytes)
+    # elementwise / copies / transposes: same-size streams
+    return float(out_bytes + sum(min(b, out_bytes) for b in opnd_bytes))
+
+
+_PARAM_IDX = re.compile(r"^(\d+)\)")
+
+
+def _fusion_label(fused: "Computation") -> str:
+    ops = {i.opcode for i in fused.instrs}
+    for marker in ("dot", "dynamic-update-slice", "gather", "scatter",
+                   "reduce", "transpose", "exponential"):
+        if marker in ops:
+            return f"fusion[{marker}]"
+    return "fusion"
+
+
+def _fusion_input_traffic(fused: "Computation", opnd_list: list) -> float:
+    """Bytes actually READ by a fusion:
+    - a parameter consumed only by (dynamic-)slice/gather ops touches just
+      the sliced region (the XLA scan idiom carries whole buffers but reads
+      one slice per trip);
+    - a parameter that is only the TARGET (operand 0) of dynamic-update-slice
+      ops is aliased in place — 0 read bytes."""
+    total = 0.0
+    for inst in fused.instrs:
+        if inst.opcode != "parameter":
+            continue
+        m = _PARAM_IDX.match(inst.attrs)
+        idx = int(m.group(1)) if m else -1
+        full = opnd_list[idx] if 0 <= idx < len(opnd_list) else 0
+        consumers = [i for i in fused.instrs if inst.name in i.operands]
+        if consumers and all(c.opcode in ("dynamic-slice", "slice", "gather")
+                             for c in consumers):
+            touched = sum(_shape_numel_bytes(c.shape)[1] for c in consumers)
+            total += min(touched, full)
+        elif consumers and all(
+                c.opcode == "dynamic-update-slice" and c.operands
+                and c.operands[0] == inst.name for c in consumers):
+            total += 0.0
+        else:
+            total += full
+    return total
+
+
+def _resolve_through_bitcast(fused: "Computation", name: str) -> "Instr | None":
+    inst = next((i for i in fused.instrs if i.name == name), None)
+    seen = 0
+    while inst is not None and inst.opcode in ("bitcast", "copy") and seen < 8:
+        if not inst.operands:
+            break
+        inst = next((i for i in fused.instrs if i.name == inst.operands[0]), None)
+        seen += 1
+    return inst
+
+
+def _fusion_output_traffic(fused: "Computation", out_bytes: int) -> float:
+    """Bytes actually WRITTEN by a fusion: dynamic-update-slice roots are
+    in-place — only the update region is written."""
+    root = next((i for i in fused.instrs if i.is_root), None)
+    if root is None:
+        return float(out_bytes)
+
+    def written(inst) -> float:
+        inst = _resolve_through_bitcast(fused, inst.name)
+        if inst is None:
+            return 0.0
+        if inst.opcode == "dynamic-update-slice" and len(inst.operands) > 1:
+            upd = _resolve_through_bitcast(fused, inst.operands[1])
+            if upd is not None:
+                return float(_shape_numel_bytes(upd.shape)[1])
+            return float(_shape_numel_bytes(inst.shape)[1])
+        return float(_shape_numel_bytes(inst.shape)[1])
+
+    if root.opcode == "tuple":
+        return sum(written(next((i for i in fused.instrs if i.name == o),
+                                root))
+                   for o in root.operands if o.startswith("%"))
+    return min(written(root), float(out_bytes))
+
+
+@dataclass
+class Cost:
+    flops: float = 0.0
+    mem_bytes: float = 0.0
+    coll_link_bytes: float = 0.0
+    coll_ops: dict = field(default_factory=lambda: defaultdict(float))
+    mem_by_op: dict = field(default_factory=lambda: defaultdict(float))
+
+    def scaled(self, k: float):
+        c = Cost(self.flops * k, self.mem_bytes * k, self.coll_link_bytes * k)
+        c.coll_ops = defaultdict(float, {n: v * k for n, v in self.coll_ops.items()})
+        c.mem_by_op = defaultdict(float, {n: v * k for n, v in self.mem_by_op.items()})
+        c.attn_interior_bytes = self.attn_interior_bytes * k
+        return c
+
+    def add(self, o: "Cost"):
+        self.flops += o.flops
+        self.mem_bytes += o.mem_bytes
+        self.coll_link_bytes += o.coll_link_bytes
+        for n, v in o.coll_ops.items():
+            self.coll_ops[n] += v
+        for n, v in o.mem_by_op.items():
+            self.mem_by_op[n] += v
+        self.attn_interior_bytes += o.attn_interior_bytes
+
+    attn_interior_bytes: float = 0.0
+
+    def mem_add(self, op: str, v: float, attn: bool = False):
+        self.mem_bytes += v
+        self.mem_by_op["attn_interior" if attn else op] += v
+        if attn:
+            self.attn_interior_bytes += v
+
+
+def analyze_hlo(text: str, entry: str | None = None,
+                transcendental_weight: float = 4.0) -> dict:
+    comps = parse_hlo_module(text)
+    memo: dict[str, Cost] = {}
+
+    # ENTRY computation: the one referenced by none / or marked ENTRY in text
+    entry_name = entry
+    if entry_name is None:
+        m = re.search(r"^ENTRY (%?[\w\.\-]+)", text, re.M)
+        if m:
+            entry_name = m.group(1)
+            if not entry_name.startswith("%"):
+                entry_name = "%" + entry_name
+        else:
+            entry_name = next(iter(comps))
+
+    def comp_cost(name: str, inside_fusion: bool = False) -> Cost:
+        if name in memo:
+            return memo[name]
+        comp = comps.get(name)
+        total = Cost()
+        if comp is None:
+            return total
+        memo[name] = total      # guard cycles
+        for inst in comp.instrs:
+            op = inst.opcode
+            out_numel, out_bytes = _shape_numel_bytes(inst.shape)
+            opnd_list = [_shape_numel_bytes(comp.symbols.get(o, ""))[1]
+                         for o in inst.operands]
+            in_attn = _ATTN_SCOPE in inst.attrs
+
+            if op in _FREE:
+                continue
+
+            coll = next((c for c in _COLLECTIVES
+                         if op == c or (op.startswith(c) and not op.endswith("-done"))), None)
+            if coll:
+                total.coll_link_bytes += out_bytes * _LINK_FACTOR[coll]
+                total.coll_ops[coll] += out_bytes
+                if not inside_fusion:
+                    total.mem_add(coll, out_bytes + sum(opnd_list))
+                continue
+
+            if op == "while":
+                trips = 1.0
+                m = _TRIP.search(inst.attrs)
+                if m:
+                    trips = float(m.group(1))
+                body = cond = None
+                mb = re.search(r"body=(%[\w\.\-]+)", inst.attrs)
+                mc = re.search(r"condition=(%[\w\.\-]+)", inst.attrs)
+                if mb:
+                    total.add(comp_cost(mb.group(1)).scaled(trips))
+                if mc:
+                    total.add(comp_cost(mc.group(1)).scaled(trips))
+                continue
+
+            if op in ("call", "custom-call", "fusion", "map", "conditional",
+                      "sort", "reduce", "reduce-window", "scatter",
+                      "select-and-scatter"):
+                # recurse into called computations (fusion interiors count
+                # flops only; memory is boundary-level)
+                fused_comp = None
+                for m in _CALLS.finditer(inst.attrs):
+                    tgt = m.group(1)
+                    tgts = ([tgt] if tgt.startswith("%")
+                            else re.findall(r"%[\w\.\-]+", tgt))
+                    for t in tgts:
+                        sub = comp_cost(t, inside_fusion=True)
+                        if op in ("fusion", "call", "conditional", "custom-call"):
+                            total.flops += sub.flops
+                            total.coll_link_bytes += sub.coll_link_bytes
+                            for n, v in sub.coll_ops.items():
+                                total.coll_ops[n] += v
+                            fused_comp = comps.get(t)
+                        # map/reduce/scatter sub-computations are per-element
+                        # scalar lambdas: folded into the elementwise estimate
+                if op in ("reduce", "reduce-window"):
+                    total.flops += float(
+                        sum(_shape_numel_bytes(comp.symbols.get(o, ""))[0]
+                            for o in inst.operands) / max(len(inst.operands), 1))
+                if not inside_fusion:
+                    if op == "fusion" and fused_comp is not None:
+                        label = _fusion_label(fused_comp)
+                        fused_attn = in_attn or any(
+                            _ATTN_SCOPE in i.attrs for i in fused_comp.instrs)
+                        total.mem_add(label, (
+                            _fusion_output_traffic(fused_comp, out_bytes)
+                            + _fusion_input_traffic(fused_comp, opnd_list)),
+                            attn=fused_attn)
+                    else:
+                        total.mem_add(op, _mem_traffic(op, out_bytes, opnd_list),
+                                      attn=in_attn)
+                continue
+
+            if op == "dot":
+                total.flops += _dot_flops(inst, comp.symbols)
+                if not inside_fusion:
+                    total.mem_add("dot", _mem_traffic(op, out_bytes, opnd_list),
+                                  attn=in_attn)
+                continue
+            if op == "convolution":
+                total.flops += 2.0 * out_numel * 32  # rough; unused by our models
+                if not inside_fusion:
+                    total.mem_add("convolution", _mem_traffic(op, out_bytes, opnd_list))
+                continue
+
+            if op in _TRANSCENDENTAL:
+                total.flops += out_numel * transcendental_weight
+            elif op in _ELEMENTWISE or op == "convert":
+                total.flops += out_numel
+            # memory-touching ops at materialization boundaries
+            if not inside_fusion and (
+                    op in _MEMORY_OPS or op in _ELEMENTWISE
+                    or op in _TRANSCENDENTAL or op == "convert"):
+                total.mem_add(op, _mem_traffic(op, out_bytes, opnd_list),
+                              attn=in_attn)
+        return total
+
+    c = comp_cost(entry_name)
+    top_mem = dict(sorted(c.mem_by_op.items(), key=lambda kv: -kv[1])[:12])
+    return {
+        "flops": c.flops,
+        "mem_bytes": c.mem_bytes,
+        "coll_link_bytes": c.coll_link_bytes,
+        "coll_output_bytes_per_op": dict(c.coll_ops),
+        "mem_bytes_by_op": top_mem,
+        "attn_interior_bytes": c.attn_interior_bytes,
+        "entry": entry_name,
+        "n_computations": len(comps),
+    }

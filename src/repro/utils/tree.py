@@ -1,0 +1,48 @@
+"""Pytree helpers used across the framework (no flax dependency)."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def _name_of(entry) -> str:
+    """Human/path name of a single KeyEntry."""
+    if isinstance(entry, jax.tree_util.DictKey):
+        return str(entry.key)
+    if isinstance(entry, jax.tree_util.SequenceKey):
+        return str(entry.idx)
+    if isinstance(entry, jax.tree_util.GetAttrKey):
+        return str(entry.name)
+    return str(entry)
+
+
+def path_str(path) -> str:
+    return "/".join(_name_of(p) for p in path)
+
+
+def tree_path_map(fn, tree):
+    """Map ``fn(path_str, leaf) -> new_leaf`` over a pytree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: fn(path_str(p), x), tree
+    )
+
+
+def flatten_with_names(tree):
+    """Return [(path_str, leaf)] for all leaves."""
+    leaves, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(path_str(p), x) for p, x in leaves]
+
+
+def tree_size_bytes(tree) -> int:
+    return int(
+        sum(
+            np.prod(x.shape) * jnp.dtype(x.dtype).itemsize
+            for x in jax.tree.leaves(tree)
+        )
+    )
+
+
+def tree_num_params(tree) -> int:
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(tree)))

@@ -1,0 +1,27 @@
+"""Runnable NPB-analogue workloads + their scheduler-facing profiles."""
+
+from repro.workloads.ep import run_ep, verify_ep, ep_flops
+from repro.workloads.is_sort import run_is, verify_is, is_ops
+from repro.workloads.cfd import run_cfd, verify_cfd, cfd_flops, thomas_tridiag
+
+
+def run_benchmark(name: str, scale: str = "smoke", force=None):
+    """Uniform entry point. scale: smoke (CI) | small (laptop)."""
+    small = scale != "smoke"
+    if name == "EP":
+        m = 22 if small else 18
+        res = run_ep(m=m, force=force)
+        return res, verify_ep(res), ep_flops(m)
+    if name == "IS":
+        n_pow = 20 if small else 16
+        res = run_is(n_pow=n_pow, force=force)
+        return res, verify_is(res), is_ops(n_pow)
+    if name in ("BT", "SP", "LU"):
+        nx = 64 if small else 24
+        iters = 20 if small else 5
+        res = run_cfd(nx=nx, iters=iters, variant=name, force=force)
+        return res, verify_cfd(res), cfd_flops(nx, iters, name)
+    raise KeyError(name)
+
+
+BENCHMARKS = ("BT", "EP", "IS", "LU", "SP")

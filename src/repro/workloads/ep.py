@@ -1,0 +1,52 @@
+"""NPB EP analogue (runnable, scaled by ``m``: n_pairs = 2^m).
+
+Faithful to the NPB EP structure: uniform pairs -> Marsaglia polar ->
+Gaussian deviates -> annuli counts + (sum X, sum Y).  The NPB LCG
+(a = 5^13, modulus 2^46) is replaced by threefry (jax.random) — the LCG is
+sequential and hostile to all vector hardware; NPB's own verification is
+statistical, which we keep: annuli counts must sum to the accepted count
+and the acceptance ratio must approach pi/4.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ep import ep_pairs
+
+FLOPS_PER_PAIR = 100.0   # transcendental-weighted (log, sqrt, div ~ dozens of flops)
+
+
+def run_ep(m: int = 20, batch_pow: int = 16, seed: int = 0,
+           force: str | None = None):
+    """Returns dict(hist [10], sx, sy, n_pairs, accepted)."""
+    n = 1 << m
+    bn = 1 << min(batch_pow, m)
+    n_batches = n // bn
+    key = jax.random.key(seed)
+
+    def body(carry, i):
+        hist, sx, sy = carry
+        u = jax.random.uniform(jax.random.fold_in(key, i), (2, bn),
+                               minval=-1.0, maxval=1.0)
+        h, s = ep_pairs(u, force=force)
+        return (hist + h, sx + s[0], sy + s[1]), None
+
+    (hist, sx, sy), _ = jax.lax.scan(
+        body, (jnp.zeros((10,), jnp.float32), jnp.float32(0), jnp.float32(0)),
+        jnp.arange(n_batches))
+    return {"hist": hist, "sx": sx, "sy": sy, "n_pairs": n,
+            "accepted": hist.sum()}
+
+
+def verify_ep(result) -> bool:
+    """NPB-style statistical verification."""
+    ratio = float(result["accepted"]) / result["n_pairs"]
+    ok_ratio = abs(ratio - 3.141592653589793 / 4) < 0.01
+    mean_x = float(result["sx"]) / max(float(result["accepted"]), 1.0)
+    return bool(ok_ratio and abs(mean_x) < 0.02)
+
+
+def ep_flops(m: int) -> float:
+    return (1 << m) * FLOPS_PER_PAIR

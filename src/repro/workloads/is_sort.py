@@ -1,0 +1,55 @@
+"""NPB IS analogue: bucket-histogram key ranking.
+
+NPB IS ranks 2^n keys by bucket counting over ``iterations`` rounds (the
+ranking, not a full reorder, is what NPB times).  The histogram is the
+Pallas kernel; ranks come from the exclusive prefix sum over buckets, and
+verification checks that ranks are a valid non-decreasing assignment.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.is_hist import key_histogram
+
+OPS_PER_KEY_PER_ITER = 45.0   # NPB IS ~int ops per key per ranking iteration
+
+
+def run_is(n_pow: int = 16, bucket_pow: int = 10, iterations: int = 10,
+           seed: int = 0, force: str | None = None):
+    n, n_buckets = 1 << n_pow, 1 << bucket_pow
+    key_max_pow = n_pow + 3                         # keys in [0, 8n)
+    shift = key_max_pow - bucket_pow
+    key = jax.random.key(seed)
+
+    def body(carry, i):
+        # NPB mutates two keys per iteration; we fold i into the stream
+        keys = jax.random.randint(jax.random.fold_in(key, i), (n,),
+                                  0, 1 << key_max_pow, jnp.int32)
+        hist = key_histogram(keys, n_buckets=n_buckets, bucket_shift=shift,
+                             force=force)
+        starts = jnp.cumsum(hist) - hist            # exclusive prefix sum
+        ranks = starts[(keys >> shift)]
+        return carry + hist.sum(), (keys, ranks)
+
+    total, (keys, ranks) = jax.lax.scan(body, jnp.float32(0),
+                                        jnp.arange(iterations))
+    return {"keys": keys[-1], "ranks": ranks[-1], "total_counted": total,
+            "n": n, "iterations": iterations}
+
+
+def verify_is(result) -> bool:
+    """Bucket-rank validity: sorting keys by rank must sort their buckets."""
+    keys, ranks = result["keys"], result["ranks"]
+    order = jnp.argsort(ranks)
+    shifted = keys[order]
+    # bucket ids (high bits) must be non-decreasing along the rank order
+    n = result["n"]
+    ok_count = float(result["total_counted"]) == result["n"] * result["iterations"]
+    diffs = jnp.diff(shifted >> (int(jnp.log2(n)) + 3 - 10))
+    return bool(ok_count and bool((diffs >= 0).all()))
+
+
+def is_ops(n_pow: int, iterations: int = 10) -> float:
+    return (1 << n_pow) * iterations * OPS_PER_KEY_PER_ITER

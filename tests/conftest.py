@@ -1,0 +1,29 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS device-count override here — smoke
+tests and benches must see the real single CPU device (the 512-device
+override lives exclusively at the top of src/repro/launch/dryrun.py)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_lm_batch(cfg, b, s, key):
+    k1, k2 = jax.random.split(key)
+    batch = {
+        "tokens": jax.random.randint(k1, (b, s), 0, cfg.vocab_size, jnp.int32),
+        "labels": jax.random.randint(k2, (b, s), 0, cfg.vocab_size, jnp.int32),
+        "mask": jnp.ones((b, s), jnp.int32),
+    }
+    if cfg.is_encoder_decoder:
+        batch["frame_embeds"] = jax.random.normal(
+            k1, (b, cfg.encoder_seq, cfg.d_model), jnp.float32)
+    if cfg.frontend == "vision":
+        batch["patch_embeds"] = jax.random.normal(
+            k1, (b, cfg.n_patches, cfg.d_model), jnp.float32)
+    return batch

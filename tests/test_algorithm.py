@@ -1,0 +1,121 @@
+"""Unit tests for the paper's selection algorithm (core/algorithm.py)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.algorithm import select_system, _paper_rule
+from repro.core.profiles import ProfileStore, k_auto
+
+BIG_T = 1e9
+
+
+def sel(mode, c, t, runs=None, avail=None, k=0.0, c_pred=None, t_pred=None):
+    c = jnp.asarray(c, jnp.float32)
+    t = jnp.asarray(t, jnp.float32)
+    runs = jnp.asarray(runs if runs is not None else [1] * len(c))
+    avail = jnp.asarray(avail if avail is not None else [0.0] * len(c))
+    return int(select_system(
+        mode, c_row=c, t_row=t, runs_row=runs, avail_row=avail, k=k,
+        c_pred_row=jnp.asarray(c_pred if c_pred is not None else c),
+        t_pred_row=jnp.asarray(t_pred if t_pred is not None else t),
+        key=jax.random.key(0)))
+
+
+# ---- Table 5 of the paper: exact reproduction ----------------------------
+# Columns: CC1, CC2, CC3.  K in percent.  Expected allocation from the paper.
+TABLE5 = [
+    # (C row,                 T row,            K,    expected CC index)
+    ([0.0015, 0.002, 0.001], [550, 500, 700], 0.10, 0),   # Program 1 -> CC1
+    ([0.0012, 0.0015, 0.0013], [500, 350, 650], 0.30, 1), # Program 2 -> CC2
+    ([0.0013, 0.0019, 0.0011], [700, 500, 900], 0.90, 2), # Program 3 -> CC3
+    ([0.0055, 0.0075, 0.006], [180, 100, 120], 0.50, 2),  # Program 4 -> CC3
+    ([0.005, 0.0055, 0.0045], [5000, 4500, 6000], 0.0, 1),# Program 5 -> CC2
+]
+
+
+@pytest.mark.parametrize("c,t,k,expected", TABLE5)
+def test_table5_exact(c, t, k, expected):
+    assert sel("paper", c, t, k=k) == expected
+
+
+def test_table5_program6_explores_first_released():
+    # Program 6: ran only on CC3; CC1 and CC2 unexplored; CC1 released first
+    idx = sel("paper", [0, 0, 0.005], [0, 0, 150], runs=[0, 0, 1],
+              avail=[10.0, 20.0, 0.0], k=0.15)
+    assert idx == 0      # paper: Program 6 -> CC1
+
+
+def test_table5_program7_never_run():
+    # Program 7: never run anywhere; first released wins (CC3 here)
+    idx = sel("paper", [0, 0, 0], [0, 0, 0], runs=[0, 0, 0],
+              avail=[5.0, 3.0, 1.0], k=0.25)
+    assert idx == 2      # paper: Program 7 -> CC3
+
+
+# ---- paper rule invariants ------------------------------------------------
+
+def test_k_zero_selects_fastest_feasible():
+    # K=0: only the T_min system is feasible
+    assert sel("paper", [5.0, 1.0, 3.0], [100, 200, 300], k=0.0) == 0
+
+
+def test_k_large_selects_greenest():
+    assert sel("paper", [5.0, 1.0, 3.0], [100, 200, 300], k=10.0) == 1
+
+
+def test_feasibility_respected():
+    # system 1 is greener but 50% slower; K=0.2 excludes it
+    assert sel("paper", [2.0, 1.0], [100, 150], k=0.2) == 0
+    # K=0.5 admits it
+    assert sel("paper", [2.0, 1.0], [100, 150], k=0.5) == 1
+
+
+def test_tie_break_on_time():
+    # equal C: pick the faster one
+    assert sel("paper", [1.0, 1.0, 2.0], [200, 100, 50], k=10.0) == 1
+
+
+def test_queue_aware_avoids_busy_system():
+    # greener system is busy for 1000s; queue_aware counts the wait
+    idx_paper = sel("paper", [1.0, 2.0], [100, 105],
+                    avail=[1000.0, 0.0], k=0.10)
+    idx_qa = sel("queue_aware", [1.0, 2.0], [100, 105],
+                 avail=[1000.0, 0.0], k=0.10)
+    assert idx_paper == 0          # paper ignores the queue
+    assert idx_qa == 1             # queue-aware routes around it
+
+
+def test_predictive_skips_exploration():
+    # unexplored system with great predicted C is chosen directly
+    idx = sel("predictive", [1.0, 0.0], [100.0, 0.0], runs=[1, 0],
+              c_pred=[1.0, 0.2], t_pred=[100.0, 101.0], k=0.05)
+    assert idx == 1
+
+
+def test_modes_return_valid_index():
+    for mode in ("paper", "queue_aware", "predictive", "ucb", "fastest",
+                 "greenest", "first_free", "random", "oracle"):
+        idx = sel(mode, [1.0, 2.0, 3.0], [30, 20, 10], k=0.1)
+        assert 0 <= idx < 3, mode
+
+
+# ---- profile store / k_auto ----------------------------------------------
+
+def test_profile_store_updates_and_averages():
+    ps = ProfileStore(2, 3)
+    assert not ps.fully_explored()
+    ps.update(0, 1, c=2.0, t=100.0)
+    ps.update(0, 1, c=4.0, t=200.0)
+    assert ps.C[0, 1] == pytest.approx(3.0)
+    assert ps.T[0, 1] == pytest.approx(150.0)
+    assert ps.runs[0, 1] == 2
+    assert ps.known(0)[1] and not ps.known(0)[0]
+
+
+def test_k_auto_matches_paper_formula():
+    # paper: K = T_max / T  (as allowed-increase fraction: T_max/T - 1)
+    assert k_auto(t_max=600.0, t_hist=500.0) == pytest.approx(0.2)
+    assert k_auto(t_max=400.0, t_hist=500.0) == 0.0    # never negative
+    assert k_auto(t_max=100.0, t_hist=0.0) == 0.0      # no history

@@ -1,0 +1,48 @@
+"""Integration: the multi-pod dry-run pipeline end-to-end (subprocess —
+the 512-device XLA flag must not leak into this test process)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+@pytest.mark.parametrize("arch,shape,mp", [
+    ("tinyllama-1.1b", "decode_32k", False),
+    ("mamba2-780m", "decode_32k", True),
+])
+def test_dryrun_cell_subprocess(tmp_path, arch, shape, mp):
+    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+           "--arch", arch, "--shape", shape, "--out", str(tmp_path),
+           "--tag", "test"]
+    if mp:
+        cmd.append("--multi-pod")
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                         timeout=900)
+    assert out.returncode == 0, out.stdout + out.stderr
+    mesh = "pod2x16x16" if mp else "pod16x16"
+    rec = json.load(open(tmp_path / f"{arch}__{shape}__{mesh}__test.json"))
+    assert rec["applicable"] and "error" not in rec
+    assert rec["n_devices"] == (512 if mp else 256)
+    assert rec["hlo_walk"]["flops_per_device"] > 0
+    assert rec["memory_analysis"]["temp_bytes"] > 0
+    # collective census present (decode w/ sharded caches communicates)
+    assert "coll_link_bytes_per_device" in rec["hlo_walk"]
+
+
+def test_skip_cell_recorded(tmp_path):
+    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+           "--arch", "gemma-7b", "--shape", "long_500k",
+           "--out", str(tmp_path), "--tag", "test"]
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                         timeout=300)
+    assert out.returncode == 0, out.stdout + out.stderr
+    rec = json.load(open(tmp_path / "gemma-7b__long_500k__pod16x16__test.json"))
+    assert rec["applicable"] is False
+    assert "sub-quadratic" in rec["skip_reason"]

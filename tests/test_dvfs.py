@@ -1,0 +1,49 @@
+"""DVFS virtual-system tests (beyond-paper extension)."""
+
+import numpy as np
+import pytest
+
+from repro.core import JSCC_SYSTEMS, SimConfig, simulate_jax, sweep_k
+from repro.core.dvfs import dvfs_variant, expand_with_dvfs, dvfs_npb_workload
+from repro.core.systems import SKYLAKE
+from repro.core.workload_model import NPB_PROFILES, predict_energy
+
+
+def test_dvfs_variant_scaling():
+    v = dvfs_variant(SKYLAKE, 0.8)
+    assert v.name == "Skylake@80"
+    assert v.peak_flops_node == pytest.approx(SKYLAKE.peak_flops_node * 0.8)
+    assert v.cpu_w == pytest.approx(SKYLAKE.cpu_w * 0.8 ** 3)
+    assert v.idle_w == SKYLAKE.idle_w
+
+
+def test_capping_trades_time_for_compute_energy():
+    """On a compute-bound job, phi=0.6 must be slower but spend less
+    *dynamic* compute energy per op (idle can eat the gain at low phi —
+    the scheduler decides when it's worth it)."""
+    prof = NPB_PROFILES["EP"]
+    e1, _, t1 = predict_energy(prof, SKYLAKE, 4)
+    e6, _, t6 = predict_energy(prof, dvfs_variant(SKYLAKE, 0.6), 4)
+    assert t6 > t1 * 1.3
+    # dynamic compute part: cpu_w * t_comp
+    assert (dvfs_variant(SKYLAKE, 0.6).cpu_w * t6) < (SKYLAKE.cpu_w * t1)
+
+
+def test_dvfs_expansion_count():
+    exp = expand_with_dvfs(JSCC_SYSTEMS, phis=(1.0, 0.8))
+    assert len(exp) == 8
+    assert {s.name for s in exp} >= {"KNL@100", "KNL@80", "Skylake@100"}
+
+
+def test_dvfs_never_worse_than_selection_only():
+    """The phi=1.0 virtual systems embed the plain decision space, so the
+    expanded optimum can only improve (at every K)."""
+    from repro.core import make_npb_workload
+    ks = np.array([0.0, 0.1, 0.3, 0.85])
+    w_plain = make_npb_workload(JSCC_SYSTEMS)
+    w_dvfs = dvfs_npb_workload(JSCC_SYSTEMS, phis=(1.0, 0.8, 0.6))
+    rp = sweep_k(w_plain, SimConfig(mode="paper", warm_start=True), ks)
+    rd = sweep_k(w_dvfs, SimConfig(mode="paper", warm_start=True), ks)
+    Ep = np.asarray(rp["total_energy"])
+    Ed = np.asarray(rd["total_energy"])
+    assert (Ed <= Ep * (1 + 1e-6)).all(), (Ep, Ed)

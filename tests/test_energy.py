@@ -1,0 +1,63 @@
+"""Paper energy-formalism tests (core/energy.py, core/workload_model.py)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import energy
+from repro.core.systems import JSCC_SYSTEMS, BROADWELL
+from repro.core.workload_model import (
+    JobProfile, predict_phases, predict_energy, predict_runtime,
+    energy_coefficient, NPB_PROFILES)
+
+
+def test_node_power_is_component_sum():
+    assert float(energy.node_power(100.0, 10.0, 5.0)) == 115.0
+
+
+def test_average_power_constant_trace():
+    w = np.full((4, 11), 50.0)      # 4 nodes, 50 W each, 10 s
+    assert float(energy.average_power(w, dt=1.0)) == pytest.approx(200.0)
+
+
+def test_average_power_matches_trapezoid():
+    t = np.linspace(0, 10, 11)
+    w = np.stack([t, 2 * t])        # two ramping nodes
+    expect = (np.trapezoid(t, t) + np.trapezoid(2 * t, t)) / 10.0
+    assert float(energy.average_power(w, dt=1.0)) == pytest.approx(expect)
+
+
+def test_energy_coefficient_units():
+    # C = W / P: 1000 W at 1e6 Mop/s -> 1e-3 J/Mop
+    assert float(energy.energy_coefficient(1000.0, 1e6)) == pytest.approx(1e-3)
+
+
+def test_predict_energy_consistency():
+    prof = NPB_PROFILES["BT"]
+    e, w_avg, t = predict_energy(prof, BROADWELL, 5)
+    assert e == pytest.approx(w_avg * t, rel=1e-9)
+    assert t == pytest.approx(predict_runtime(prof, BROADWELL, 5), rel=1e-9)
+    assert energy_coefficient(prof, BROADWELL, 5) == pytest.approx(
+        e / (prof.flops / 1e6), rel=1e-9)
+
+
+def test_phases_scale_with_nodes():
+    prof = JobProfile("x", flops=1e12, net_bytes=1e9, disk_bytes=1e9)
+    t1 = predict_phases(prof, BROADWELL, 1)
+    t4 = predict_phases(prof, BROADWELL, 4)
+    for a, b in zip(t1, t4):
+        assert b == pytest.approx(a / 4)
+
+
+def test_memory_bound_correction():
+    prof = JobProfile("membound", flops=1.0, net_bytes=0, disk_bytes=0,
+                      mem_bytes=1e12)
+    t_comp, _, _ = predict_phases(prof, BROADWELL, 1)
+    assert t_comp == pytest.approx(1e12 / BROADWELL.mem_bw_node)
+
+
+def test_more_power_hungry_system_has_higher_c_at_same_speed():
+    prof = NPB_PROFILES["EP"]
+    for sys in JSCC_SYSTEMS:
+        c = energy_coefficient(prof, sys, 4)
+        assert 1e-5 < c < 1.0, (sys.name, c)

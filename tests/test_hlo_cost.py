@@ -1,0 +1,89 @@
+"""HLO cost analyzer: trip-count multiplication, dot flops, collective
+bytes — validated against modules with analytically-known costs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.utils.hlo_cost import analyze_hlo, parse_hlo_module
+from repro.utils.hlo import parse_collective_bytes
+
+
+def _compiled_hlo(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_single_dot_flops_exact():
+    m, k, n = 128, 256, 64
+    hlo = _compiled_hlo(
+        lambda a, b: a @ b,
+        jax.ShapeDtypeStruct((m, k), jnp.float32),
+        jax.ShapeDtypeStruct((k, n), jnp.float32))
+    res = analyze_hlo(hlo)
+    expect = 2.0 * m * k * n
+    assert res["flops"] == pytest.approx(expect, rel=0.05)
+
+
+def test_scan_trip_count_multiplies():
+    m = 64
+    a_spec = jax.ShapeDtypeStruct((m, m), jnp.float32)
+
+    def body(x, _):
+        return x @ x, None
+
+    def once(a):
+        return a @ a
+
+    def scanned(a):
+        out, _ = jax.lax.scan(body, a, None, length=17)
+        return out
+
+    f1 = analyze_hlo(_compiled_hlo(once, a_spec))["flops"]
+    f17 = analyze_hlo(_compiled_hlo(scanned, a_spec))["flops"]
+    assert f17 == pytest.approx(17 * f1, rel=0.15)
+
+
+def test_batched_dot_flops():
+    b, m, k, n = 4, 32, 64, 16
+    hlo = _compiled_hlo(
+        lambda a, c: jnp.einsum("bmk,bkn->bmn", a, c),
+        jax.ShapeDtypeStruct((b, m, k), jnp.float32),
+        jax.ShapeDtypeStruct((b, k, n), jnp.float32))
+    res = analyze_hlo(hlo)
+    assert res["flops"] == pytest.approx(2.0 * b * m * k * n, rel=0.05)
+
+
+def test_memory_bytes_elementwise_stream():
+    n = 1 << 20
+    hlo = _compiled_hlo(lambda x: x * 2.0 + 1.0,
+                        jax.ShapeDtypeStruct((n,), jnp.float32))
+    res = analyze_hlo(hlo)
+    # read + write one fused stream: ~8 MB (allow fusion-model slack)
+    assert 0.5 * 8e6 <= res["mem_bytes"] <= 3 * 8e6
+
+
+def test_parse_module_structure():
+    hlo = _compiled_hlo(lambda x: jnp.tanh(x).sum(),
+                        jax.ShapeDtypeStruct((128, 128), jnp.float32))
+    comps = parse_hlo_module(hlo)
+    assert len(comps) >= 1
+    entry = [c for c in comps.values() if c.instrs]
+    assert entry
+    # every computation tracked symbol shapes
+    for c in comps.values():
+        for inst in c.instrs:
+            assert inst.name in c.symbols
+
+
+def test_collective_census_on_psum():
+    try:
+        devs = jax.devices()
+    except RuntimeError:
+        pytest.skip("no devices")
+    if len(devs) < 2:
+        # single device: psum compiles away; just ensure parser tolerance
+        hlo = _compiled_hlo(lambda x: x + 1, jax.ShapeDtypeStruct((4,), jnp.float32))
+        out = parse_collective_bytes(hlo)
+        assert out["link_bytes"] == 0.0
+        return

@@ -1,0 +1,137 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs pure-jnp oracle
+(deliverable c: every kernel sweeps shapes/dtypes against ref.py)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention_bhsd, attention_ref
+from repro.kernels.ep import ep_pairs_pallas, ep_pairs_ref
+from repro.kernels.is_hist import key_histogram_pallas, key_histogram_ref
+from repro.kernels.stencil3d import stencil7_pallas, stencil7_ref
+
+
+# ----------------------------------------------------------- flash attention
+
+@pytest.mark.parametrize("b,sq,sk,h,kv,hd,bq,bk", [
+    (2, 256, 256, 8, 2, 64, 128, 128),
+    (1, 256, 256, 4, 4, 128, 64, 128),
+    (2, 128, 384, 4, 1, 64, 128, 128),     # MQA, rectangular
+    (1, 512, 512, 2, 2, 32, 128, 256),
+])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_sweep(b, sq, sk, h, kv, hd, bq, bk, causal):
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (b, sq, h, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, sk, kv, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, sk, kv, hd), jnp.float32)
+    out = flash_attention_bhsd(q, k, v, causal=causal, block_q=bq, block_k=bk,
+                               interpret=True)
+    ref = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(out, ref, atol=3e-5)
+
+
+@pytest.mark.parametrize("dtype,atol", [(jnp.float32, 3e-5), (jnp.bfloat16, 3e-2)])
+def test_flash_attention_dtypes(dtype, atol):
+    ks = jax.random.split(jax.random.key(1), 3)
+    q = jax.random.normal(ks[0], (1, 256, 4, 64), dtype)
+    k = jax.random.normal(ks[1], (1, 256, 2, 64), dtype)
+    v = jax.random.normal(ks[2], (1, 256, 2, 64), dtype)
+    out = flash_attention_bhsd(q, k, v, causal=True, interpret=True)
+    ref = attention_ref(q, k, v, causal=True)
+    assert out.dtype == dtype
+    np.testing.assert_allclose(out.astype(jnp.float32),
+                               ref.astype(jnp.float32), atol=atol)
+
+
+# ----------------------------------------------------------------------- EP
+
+@pytest.mark.parametrize("n,block", [(4096, 1024), (8192, 2048), (2048, 2048)])
+def test_ep_kernel_sweep(n, block):
+    u = jax.random.uniform(jax.random.key(2), (2, n), minval=-1.0, maxval=1.0)
+    h1, s1 = ep_pairs_pallas(u, block_n=block, interpret=True)
+    h2, s2 = ep_pairs_ref(u)
+    np.testing.assert_array_equal(np.asarray(h1), np.asarray(h2))
+    np.testing.assert_allclose(s1, s2, rtol=1e-4)
+    # acceptance ratio sanity (pi/4 for uniform pairs on the square)
+    assert abs(float(h1.sum()) / n - np.pi / 4) < 0.05
+
+
+# ----------------------------------------------------------------------- IS
+
+@pytest.mark.parametrize("n,buckets,shift,block", [
+    (8192, 64, 8, 2048),
+    (16384, 256, 6, 4096),
+    (4096, 16, 10, 4096),
+])
+def test_is_histogram_sweep(n, buckets, shift, block):
+    keys = jax.random.randint(jax.random.key(3), (n,), 0,
+                              buckets << shift, jnp.int32)
+    h1 = key_histogram_pallas(keys, n_buckets=buckets, bucket_shift=shift,
+                              block_n=block, interpret=True)
+    h2 = key_histogram_ref(keys, n_buckets=buckets, bucket_shift=shift)
+    np.testing.assert_array_equal(np.asarray(h1), np.asarray(h2))
+    assert int(h1.sum()) == n
+
+
+# ------------------------------------------------------------------ stencil
+
+@pytest.mark.parametrize("nx,ny,nz,bx", [
+    (32, 16, 16, 8), (64, 32, 32, 16), (16, 16, 16, 16), (48, 8, 8, 8),
+])
+def test_stencil_sweep(nx, ny, nz, bx):
+    u = jax.random.normal(jax.random.key(4), (nx, ny, nz), jnp.float32)
+    o1 = stencil7_pallas(u, bx=bx, interpret=True)
+    o2 = stencil7_ref(u)
+    np.testing.assert_allclose(o1, o2, atol=2e-5)
+
+
+def test_stencil_boundary_is_dirichlet_zero():
+    """Global-edge neighbours must contribute zero (not wrap / clamp)."""
+    u = jnp.ones((16, 8, 8), jnp.float32)
+    out = stencil7_pallas(u, bx=8, interpret=True)
+    ref = stencil7_ref(u)
+    np.testing.assert_allclose(out, ref, atol=1e-6)
+    # interior point: -6 + 6 = 0; corner point: -6 + 3 = -3
+    assert float(out[8, 4, 4]) == pytest.approx(0.0, abs=1e-5)
+    assert float(out[0, 0, 0]) == pytest.approx(-3.0, abs=1e-5)
+
+
+# ---------------------------------------------------------------- SSD scan
+
+from repro.kernels.ssd_scan import ssd_scan_pallas, ssd_scan_ref  # noqa: E402
+
+
+@pytest.mark.parametrize("bh,l,p,n,rep,chunk", [
+    (4, 128, 16, 8, 2, 32),
+    (2, 64, 8, 16, 1, 16),
+    (6, 96, 32, 8, 3, 32),
+])
+def test_ssd_scan_sweep(bh, l, p, n, rep, chunk):
+    ks = jax.random.split(jax.random.key(5), 5)
+    bg = bh // rep
+    x = jax.random.normal(ks[0], (bh, l, p), jnp.float32) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bh, l)))
+    A = -jnp.exp(jax.random.normal(ks[2], (bh,)) * 0.3)
+    dA = dt * A[:, None]
+    B = jax.random.normal(ks[3], (bg, l, n), jnp.float32) * 0.5
+    C = jax.random.normal(ks[4], (bg, l, n), jnp.float32) * 0.5
+    y1, s1 = ssd_scan_pallas(x, dt, dA, B, C, chunk=chunk, interpret=True)
+    y2, s2 = ssd_scan_ref(x, dt, dA, B, C, chunk=chunk)
+    np.testing.assert_allclose(y1, y2, atol=2e-4)
+    np.testing.assert_allclose(s1, s2, atol=2e-4)
+
+
+def test_ssd_scan_chunk_invariance():
+    ks = jax.random.split(jax.random.key(6), 5)
+    bh, l, p, n = 2, 128, 8, 8
+    x = jax.random.normal(ks[0], (bh, l, p), jnp.float32) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (bh, l)))
+    dA = dt * -0.5
+    B = jax.random.normal(ks[3], (bh, l, n), jnp.float32) * 0.5
+    C = jax.random.normal(ks[4], (bh, l, n), jnp.float32) * 0.5
+    y1, s1 = ssd_scan_pallas(x, dt, dA, B, C, chunk=16, interpret=True)
+    y2, s2 = ssd_scan_pallas(x, dt, dA, B, C, chunk=64, interpret=True)
+    np.testing.assert_allclose(y1, y2, atol=2e-4)
+    np.testing.assert_allclose(s1, s2, atol=2e-4)

@@ -1,0 +1,85 @@
+"""Unit tests for launch-level input/cache sharding specs (the divisibility
+fallback logic the dry-run depends on)."""
+
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, SHAPES
+from repro.models import build_model
+from repro.launch.specs import batch_partition_specs, cache_partition_specs
+from repro.sharding.ctx import lm_rules
+from repro.utils.tree import flatten_with_names
+
+
+class _FakeMesh:
+    axis_names = ("data", "model")
+
+    class devices:
+        shape = (16, 16)
+
+
+class _FakeMeshMP:
+    axis_names = ("pod", "data", "model")
+
+    class devices:
+        shape = (2, 16, 16)
+
+
+def _cache_specs(arch, shape_name, mesh=_FakeMesh, multi_pod=False):
+    cfg = get_config(arch)
+    api = build_model(cfg)
+    shape = SHAPES[shape_name]
+    rules = lm_rules(multi_pod, cfg.fsdp)
+    cache = api.decode_cache_specs(shape.global_batch, shape.seq_len)
+    return dict(flatten_with_names(
+        cache_partition_specs(cfg, shape, mesh, rules, cache)))
+
+
+def test_kv_heads_sharded_when_divisible():
+    # phi-3-vision: kv=32 divides model=16 -> heads axis sharded
+    specs = _cache_specs("phi-3-vision-4.2b", "decode_32k")
+    k_spec = next(v for n, v in specs.items() if n.endswith("/k"))
+    assert k_spec[3] == "model"          # kv-head dim
+    assert k_spec[2] is None             # seq unsharded
+
+
+def test_seq_fallback_when_kv_small():
+    # internlm2: kv=8 does not divide 16 -> sequence dim takes 'model'
+    specs = _cache_specs("internlm2-20b", "decode_32k")
+    k_spec = next(v for n, v in specs.items() if n.endswith("/k"))
+    assert k_spec[3] is None
+    assert k_spec[2] == "model"
+
+
+def test_long_context_batch1_shards_seq_over_both_axes():
+    specs = _cache_specs("jamba-v0.1-52b", "long_500k")
+    k_spec = next(v for n, v in specs.items() if n.endswith("/k"))
+    assert k_spec[1] is None             # batch=1: no batch sharding
+    assert k_spec[2] == ("data", "model")
+
+
+def test_mamba_state_heads_sharded():
+    specs = _cache_specs("mamba2-780m", "decode_32k")
+    st = next(v for n, v in specs.items() if n.endswith("/state"))
+    # [G, b, h=48, p, n]: h divides 16
+    assert st[2] == "model"
+
+
+def test_batch_specs_divisibility():
+    cfg = get_config("tinyllama-1.1b")
+    rules = lm_rules(False, False)
+    sp = batch_partition_specs(cfg, SHAPES["train_4k"], _FakeMesh, rules)
+    assert sp["tokens"] == P(("data",), None)
+    # multi-pod: batch over (pod, data)
+    rules_mp = lm_rules(True, False)
+    sp2 = batch_partition_specs(cfg, SHAPES["train_4k"], _FakeMeshMP, rules_mp)
+    assert sp2["tokens"] == P(("pod", "data"), None)
+
+
+def test_whisper_cross_memory_specs_build():
+    specs = _cache_specs("whisper-medium", "decode_32k")
+    mem = next(v for n, v in specs.items() if n.endswith("mem_k"))
+    assert len(mem) == 5                 # [L, b, enc_seq, kv, hd]
+    # enc_seq=1500 not divisible by 16 -> seq fallback must not shard it...
+    # kv=16 IS divisible -> heads sharded, seq untouched
+    assert mem[3] == "model"

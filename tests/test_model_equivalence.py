@@ -1,0 +1,109 @@
+"""Numerical-equivalence tests for the attention and SSD cores.
+
+These are the invariants the serving path depends on:
+  - blocked (flash-style) attention == plain attention;
+  - decode_attention over a cache == last row of causal attention;
+  - Mamba2 chunked-SSD prefill == token-by-token decode recurrence.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_reduce
+from repro.models.attention import (
+    plain_attention, blocked_attention, decode_attention)
+from repro.models.mamba import (
+    init_mamba, mamba_forward, mamba_decode, mamba_decode_cache_specs,
+    ssd_chunked)
+
+
+@pytest.mark.parametrize("sq,h,kv,hd,bq,bk", [
+    (256, 8, 2, 32, 64, 64),
+    (128, 4, 4, 16, 32, 128),
+    (512, 6, 2, 64, 512, 64),
+])
+def test_blocked_equals_plain(sq, h, kv, hd, bq, bk):
+    ks = jax.random.split(jax.random.key(0), 3)
+    b = 2
+    q = jax.random.normal(ks[0], (b, sq, h, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, sq, kv, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, sq, kv, hd), jnp.float32)
+    o1 = plain_attention(q, k, v, causal=True)
+    o2 = blocked_attention(q, k, v, causal=True, block_q=bq, block_k=bk)
+    np.testing.assert_allclose(o1, o2, atol=3e-5)
+
+
+def test_blocked_non_causal():
+    ks = jax.random.split(jax.random.key(1), 3)
+    b, sq, h, kv, hd = 1, 128, 4, 2, 32
+    q = jax.random.normal(ks[0], (b, sq, h, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, sq, kv, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, sq, kv, hd), jnp.float32)
+    o1 = plain_attention(q, k, v, causal=False)
+    o2 = blocked_attention(q, k, v, causal=False, block_q=32, block_k=32)
+    np.testing.assert_allclose(o1, o2, atol=3e-5)
+
+
+def test_decode_matches_causal_last_row():
+    ks = jax.random.split(jax.random.key(2), 3)
+    b, s, h, kv, hd = 2, 96, 8, 4, 32
+    q = jax.random.normal(ks[0], (b, s, h, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, kv, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, kv, hd), jnp.float32)
+    full = plain_attention(q, k, v, causal=True)
+    dec = decode_attention(q[:, -1:], k, v, length=s)
+    np.testing.assert_allclose(full[:, -1:], dec, atol=2e-5)
+
+
+def test_decode_respects_length_mask():
+    ks = jax.random.split(jax.random.key(3), 3)
+    b, s, h, kv, hd = 1, 64, 4, 2, 16
+    q = jax.random.normal(ks[0], (b, 1, h, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, kv, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, kv, hd), jnp.float32)
+    o_half = decode_attention(q, k, v, length=32)
+    # garbage beyond position 32 must not change the result
+    k2 = k.at[:, 32:].set(99.0)
+    v2 = v.at[:, 32:].set(-99.0)
+    o_half2 = decode_attention(q, k2, v2, length=32)
+    np.testing.assert_allclose(o_half, o_half2, atol=1e-6)
+
+
+def test_mamba_prefill_equals_decode_chain():
+    cfg = smoke_reduce(get_config("mamba2-780m"))
+    key = jax.random.key(4)
+    p = init_mamba(cfg, key, jnp.float32)
+    b, s = 2, 64
+    u = jax.random.normal(key, (b, s, cfg.d_model), jnp.float32) * 0.5
+    y_pre, (tail, st) = mamba_forward(p, u, cfg, return_state=True)
+    conv, state = [jnp.zeros(sd.shape, sd.dtype)
+                   for sd in mamba_decode_cache_specs(cfg, b)]
+    step = jax.jit(lambda u1, c, s_: mamba_decode(p, u1, cfg, c, s_))
+    ys = []
+    for t in range(s):
+        y, conv, state = step(u[:, t:t + 1], conv, state)
+        ys.append(y)
+    y_dec = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(y_pre, y_dec, atol=2e-3)
+    np.testing.assert_allclose(st, state, atol=2e-3)
+    np.testing.assert_allclose(tail, conv, atol=1e-4)
+
+
+def test_ssd_chunk_size_invariance():
+    """The chunk size is an implementation detail: results must not change."""
+    key = jax.random.key(5)
+    ks = jax.random.split(key, 4)
+    b, l, h, p, g, n = 2, 64, 4, 8, 1, 16
+    x = jax.random.normal(ks[0], (b, l, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h), jnp.float32))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,), jnp.float32) * 0.3)
+    B = jax.random.normal(ks[3], (b, l, g, n), jnp.float32)
+    C = jax.random.normal(ks[0], (b, l, g, n), jnp.float32)
+    y8, s8 = ssd_chunked(x, dt, A, B, C, chunk=8)
+    y32, s32 = ssd_chunked(x, dt, A, B, C, chunk=32)
+    y64, s64 = ssd_chunked(x, dt, A, B, C, chunk=64)
+    np.testing.assert_allclose(y8, y32, atol=1e-4)
+    np.testing.assert_allclose(y8, y64, atol=1e-4)
+    np.testing.assert_allclose(s8, s64, atol=1e-4)

@@ -1,0 +1,93 @@
+"""MoE per-shard dispatch correctness (the §Perf iteration-1 change)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, smoke_reduce
+from repro.models.moe import init_moe, apply_moe, moe_capacity
+from repro.sharding.ctx import use_rules
+
+
+def dense_ref(p, x, cfg):
+    """Full top-k mixture, no capacity drops — the semantic ground truth."""
+    b, s, d = x.shape
+    xf = x.reshape(-1, d)
+    logits = xf @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    gates, ids = jax.lax.top_k(probs, cfg.moe.top_k)
+    gates = gates / gates.sum(-1, keepdims=True)
+    out = jnp.zeros_like(xf)
+    for kk in range(cfg.moe.top_k):
+        for ei in range(cfg.moe.n_experts):
+            mask = (ids[:, kk] == ei).astype(jnp.float32) * gates[:, kk]
+            h = jax.nn.silu(xf @ p["wi"][ei]) * (xf @ p["wu"][ei])
+            out += (h @ p["wo"][ei]) * mask[:, None]
+    return out.reshape(b, s, d)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = smoke_reduce(get_config("moonshot-v1-16b-a3b"))
+    cfg = cfg.with_overrides(moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    key = jax.random.key(0)
+    p = init_moe(cfg, key, jnp.float32)
+    x = jax.random.normal(key, (4, 16, cfg.d_model), jnp.float32)
+    return cfg, p, x
+
+
+def test_sharded_matches_dense_when_no_drops(setup):
+    cfg, p, x = setup
+    out, aux = apply_moe(p, x, cfg)
+    np.testing.assert_allclose(out, dense_ref(p, x, cfg), atol=2e-4)
+    assert float(aux) > 0
+
+
+def test_global_matches_dense_when_no_drops(setup):
+    cfg, p, x = setup
+    cfg_g = cfg.with_overrides(moe_dispatch="global")
+    out, _ = apply_moe(p, x, cfg_g)
+    np.testing.assert_allclose(out, dense_ref(p, x, cfg_g), atol=2e-4)
+
+
+def test_shard_count_invariance_no_drops(setup):
+    """With ample capacity, the shard count is an implementation detail."""
+    cfg, p, x = setup
+
+    class _Mesh:  # dummy; annotate() needs a mesh only when rules installed
+        axis_names = ()
+
+        class devices:
+            shape = ()
+
+    out1, _ = apply_moe(p, x, cfg.with_overrides(moe_dispatch="global"))
+    # dispatch_shards() reads rules; emulate S=2/S=4 via direct reshape check
+    for s_count in (2, 4):
+        from repro.sharding import ctx as sctx
+        sctx._state.rules = {"dp_shards": s_count}
+        sctx._state.mesh = None          # annotate() stays no-op
+        try:
+            out_s, _ = apply_moe(p, x, cfg)
+        finally:
+            sctx._state.rules = None
+    np.testing.assert_allclose(out1, out_s, atol=2e-4)
+
+
+def test_capacity_drops_are_bounded(setup):
+    """At cf=1.0 with skewed routing, some tokens drop — output stays finite
+    and within the convex hull scale of expert outputs."""
+    cfg, p, x = setup
+    cfg_small = cfg.with_overrides(
+        moe=dataclasses.replace(cfg.moe, capacity_factor=1.0))
+    out, aux = apply_moe(p, x, cfg_small)
+    assert np.isfinite(np.asarray(out)).all()
+    assert float(jnp.abs(out).max()) < 1e3
+
+
+def test_capacity_rounding():
+    cfg = smoke_reduce(get_config("moonshot-v1-16b-a3b"))
+    c = moe_capacity(1000, cfg)
+    assert c % 8 == 0 and c >= 8

@@ -1,0 +1,86 @@
+"""Validation of the paper's experimental claims against our reproduction
+(EXPERIMENTS.md 'faithful baseline').  Claim bands are deliberately loose:
+the paper's absolute numbers depend on unpublished JSCC power data; what we
+assert is the calibrated model reproducing the paper's REPORTED effects."""
+
+import numpy as np
+import pytest
+
+from repro.core import (JSCC_SYSTEMS, SimConfig, make_npb_workload,
+                        simulate_jax, sweep_k)
+
+
+@pytest.fixture(scope="module")
+def suite_sweep():
+    w = make_npb_workload(JSCC_SYSTEMS)
+    ks = np.array([0.0, 0.05, 0.10, 0.20, 0.85])
+    res = sweep_k(w, SimConfig(mode="paper", warm_start=True), ks)
+    return w, ks, res
+
+
+def test_claim_energy_reduction_at_modest_k(suite_sweep):
+    """Paper: 'reduce power consumption by an average of 21.5%, while the
+    test suite execution time increased by 3.8%'."""
+    _, ks, res = suite_sweep
+    E = np.asarray(res["total_energy"])
+    M = np.asarray(res["makespan"])
+    dE = (E - E[0]) / E[0]
+    dM = (M - M[0]) / M[0]
+    # at K in [0.05, 0.2]: >= 12% energy saving with <= 10% runtime increase
+    best = dE[1:4].min()
+    assert best <= -0.12, f"expected >=12% energy saving, got {dE}"
+    assert dM[1:4].max() <= 0.10, f"expected <=10% runtime increase, got {dM}"
+
+
+def test_claim_significant_reduction_between_k5_and_k10(suite_sweep):
+    """Paper: 'even with a slight increase in the parameter K value
+    (from 5 to 10%), a significant reduction ... is achieved'."""
+    _, ks, res = suite_sweep
+    E = np.asarray(res["total_energy"])
+    saving_at_10 = (E[0] - E[2]) / E[0]
+    assert saving_at_10 >= 0.10
+
+
+def test_claim_all_but_lu_switch_below_5pct(suite_sweep):
+    """Paper: 'for all tests except LU, it was possible to achieve a
+    reduction ... with an allowable increase ... by less than 5%'."""
+    w, ks, res = suite_sweep
+    sel0 = np.asarray(res["system"])[0]        # K=0 placement
+    sel5 = np.asarray(res["system"])[1]        # K=5% placement
+    prog_names = [w.programs[p] for p in w.prog]
+    switched = {prog_names[j]: sel0[j] != sel5[j] for j in range(len(w.prog))}
+    assert not switched["LU"], "LU must NOT find a greener system at K=5%"
+    assert sum(switched.values()) >= 3, \
+        f"most non-LU tests should switch at K=5%: {switched}"
+    # and LU does switch eventually (energy saving exists at high K)
+    sel85 = np.asarray(res["system"])[4]
+    lu_idx = prog_names.index("LU")
+    assert sel85[lu_idx] != sel0[lu_idx]
+
+
+def test_energy_never_increases_with_k(suite_sweep):
+    _, ks, res = suite_sweep
+    E = np.asarray(res["total_energy"])
+    assert (np.diff(E) <= 1e-6).all()
+
+
+def test_c_magnitudes_match_paper_units():
+    """Table 5 reports C in 1e-3..7.5e-3 J/op (NPB Mop/s units => J/Mop);
+    our calibrated compute-bound benchmarks must land in that decade."""
+    w = make_npb_workload(JSCC_SYSTEMS)
+    C = w.C_true
+    names = list(w.programs)
+    for prog in ("BT", "EP", "LU", "SP"):
+        row = C[names.index(prog)]
+        assert (row > 5e-4).all() and (row < 5e-2).all(), (prog, row)
+
+
+def test_paper_vs_baselines_pareto():
+    """The paper algorithm at K>0 must dominate 'fastest' on energy and
+    'greenest' on makespan (it is the tunable middle of the Pareto front)."""
+    w = make_npb_workload(JSCC_SYSTEMS)
+    fast = simulate_jax(w, SimConfig(mode="fastest", warm_start=True))
+    green = simulate_jax(w, SimConfig(mode="greenest", warm_start=True))
+    alg10 = simulate_jax(w, SimConfig(mode="paper", k=0.10, warm_start=True))
+    assert float(alg10["total_energy"]) < float(fast["total_energy"])
+    assert float(alg10["makespan"]) <= float(green["makespan"]) + 1e-6

@@ -1,0 +1,98 @@
+"""Hypothesis property tests for the scheduler's invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.algorithm import select_system
+
+N_SYS = st.integers(min_value=2, max_value=6)
+
+
+@st.composite
+def tables(draw):
+    n = draw(N_SYS)
+    c = draw(st.lists(st.floats(0.001, 10.0), min_size=n, max_size=n))
+    t = draw(st.lists(st.floats(1.0, 1e4), min_size=n, max_size=n))
+    k = draw(st.floats(0.0, 2.0))
+    return np.array(c), np.array(t), k
+
+
+def run_paper(c, t, k):
+    return int(select_system(
+        "paper",
+        c_row=jnp.asarray(c, jnp.float32), t_row=jnp.asarray(t, jnp.float32),
+        runs_row=jnp.ones(len(c), jnp.int32),
+        avail_row=jnp.zeros(len(c), jnp.float32), k=jnp.float32(k),
+        c_pred_row=jnp.asarray(c, jnp.float32),
+        t_pred_row=jnp.asarray(t, jnp.float32), key=jax.random.key(0)))
+
+
+@settings(max_examples=60, deadline=None)
+@given(tables())
+def test_selection_always_feasible(tab):
+    """Invariant: T[sel] <= T_min * (1 + K)  (the paper's constraint)."""
+    c, t, k = tab
+    sel = run_paper(c, t, k)
+    # fp32 semantics inside the selector
+    t32 = t.astype(np.float32)
+    assert t32[sel] <= t32.min() * (1.0 + np.float32(k)) * (1 + 1e-6)
+
+
+@settings(max_examples=60, deadline=None)
+@given(tables())
+def test_selection_minimizes_c_over_feasible(tab):
+    c, t, k = tab
+    sel = run_paper(c, t, k)
+    c32, t32 = c.astype(np.float32), t.astype(np.float32)
+    feasible = t32 <= t32.min() * (1.0 + np.float32(k)) * (1 + 1e-6)
+    assert feasible[sel]
+    assert c32[sel] <= c32[feasible].min() * (1 + 1e-5)
+
+
+@settings(max_examples=40, deadline=None)
+@given(tables())
+def test_k_monotonicity_of_selected_c(tab):
+    """Growing K can only unlock greener (or equal) selections."""
+    c, t, _ = tab
+    prev = np.inf
+    for k in (0.0, 0.1, 0.3, 1.0, 3.0):
+        sel = run_paper(c, t, k)
+        assert c[sel] <= prev * (1 + 1e-6)
+        prev = c[sel]
+
+
+@settings(max_examples=40, deadline=None)
+@given(tables())
+def test_k_zero_is_fastest_tier(tab):
+    """K=0 must select within the fastest tier (minimal T)."""
+    c, t, _ = tab
+    sel = run_paper(c, t, 0.0)
+    t32 = t.astype(np.float32)
+    assert t32[sel] <= t32.min() * (1 + 1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(tables(), st.integers(0, 5))
+def test_exploration_prefers_first_released_unexplored(tab, seed):
+    """With unexplored systems present, the algorithm must pick the
+    earliest-available unexplored one (paper exploration rule)."""
+    c, t, k = tab
+    n = len(c)
+    rng = np.random.default_rng(seed)
+    runs = rng.integers(0, 2, n)
+    if runs.all():
+        runs[rng.integers(0, n)] = 0
+    avail = rng.uniform(0, 100, n)
+    sel = int(select_system(
+        "paper",
+        c_row=jnp.asarray(c * runs, jnp.float32),
+        t_row=jnp.asarray(t * runs, jnp.float32),
+        runs_row=jnp.asarray(runs, jnp.int32),
+        avail_row=jnp.asarray(avail, jnp.float32), k=jnp.float32(k),
+        c_pred_row=jnp.asarray(c, jnp.float32),
+        t_pred_row=jnp.asarray(t, jnp.float32), key=jax.random.key(0)))
+    unexplored = np.where(runs == 0)[0]
+    assert sel in unexplored
+    assert avail[sel] == avail[unexplored].min()

@@ -1,0 +1,113 @@
+"""Sharding rules: divisibility fallbacks, no-duplicate-axis regression,
+full-arch spec coverage (no device state touched — specs only)."""
+
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config, SHAPES
+from repro.models import build_model
+from repro.sharding.ctx import lm_rules
+from repro.sharding.params import (param_partition_spec, tree_partition_specs,
+                                   logical_axes_for)
+from repro.utils.tree import flatten_with_names
+
+AXIS_SIZES_1POD = {"data": 16, "model": 16}
+AXIS_SIZES_2POD = {"pod": 2, "data": 16, "model": 16}
+
+
+def _flat_axes(spec):
+    out = []
+    for part in spec:
+        if part is None:
+            continue
+        out.extend([part] if isinstance(part, str) else list(part))
+    return out
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+@pytest.mark.parametrize("fsdp", [False, True])
+def test_no_duplicate_mesh_axes_any_param(arch, fsdp):
+    """Regression: MoE (experts, embed, ff) once produced duplicate 'model'."""
+    cfg = get_config(arch)
+    api = build_model(cfg)
+    rules = lm_rules(multi_pod=True, fsdp=fsdp)
+    for name, x in flatten_with_names(api.param_specs()):
+        spec = param_partition_spec(name, tuple(x.shape), rules,
+                                    AXIS_SIZES_2POD)
+        axes = _flat_axes(spec)
+        assert len(axes) == len(set(axes)), (arch, name, spec)
+        assert len(spec) == len(x.shape), (arch, name, spec, x.shape)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_sharded_dims_divide(arch):
+    cfg = get_config(arch)
+    api = build_model(cfg)
+    rules = lm_rules(multi_pod=False, fsdp=cfg.fsdp)
+    for name, x in flatten_with_names(api.param_specs()):
+        spec = param_partition_spec(name, tuple(x.shape), rules,
+                                    AXIS_SIZES_1POD)
+        for dim, part in zip(x.shape, spec):
+            if part is None:
+                continue
+            size = np.prod([AXIS_SIZES_1POD[a] for a in
+                            ([part] if isinstance(part, str) else part)])
+            assert dim % size == 0, (arch, name, dim, part)
+
+
+def test_llama4_heads_fall_back():
+    """40 q-heads don't divide model=16 -> heads dim must stay unsharded."""
+    spec = param_partition_spec(
+        "groups/pos0/attn/wq", (48, 5120, 40, 128),
+        lm_rules(False, True), AXIS_SIZES_1POD)
+    assert spec[2] is None          # heads unsharded
+    assert spec[1] == "data"        # FSDP fallback on embed dim
+
+
+def test_qwen2_kv_heads_fall_back():
+    spec = param_partition_spec(
+        "groups/pos0/attn/wk", (28, 1536, 2, 128),
+        lm_rules(False, False), AXIS_SIZES_1POD)
+    assert spec[2] is None
+
+
+def test_divisible_heads_are_sharded():
+    spec = param_partition_spec(
+        "groups/pos0/attn/wq", (48, 6144, 48, 128),
+        lm_rules(False, False), AXIS_SIZES_1POD)
+    assert spec[2] == "model"
+
+
+def test_vocab_sharded_when_divisible():
+    spec = param_partition_spec("embed/table", (202048, 5120),
+                                lm_rules(False, False), AXIS_SIZES_1POD)
+    assert spec[0] == "model"
+    # mamba2 vocab 50280 is not divisible by 16 -> replicated
+    spec = param_partition_spec("embed/table", (50280, 1536),
+                                lm_rules(False, False), AXIS_SIZES_1POD)
+    assert spec[0] is None
+
+
+def test_moe_experts_on_model_axis():
+    spec = param_partition_spec(
+        "groups/pos0/moe/wi", (48, 64, 2048, 1408),
+        lm_rules(False, True), AXIS_SIZES_1POD)
+    assert spec == P(None, "model", "data", None)
+
+
+def test_all_archs_tree_specs_build():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        api = build_model(cfg)
+
+        class _FakeMesh:
+            axis_names = ("data", "model")
+
+            class devices:
+                shape = (16, 16)
+
+        tree = tree_partition_specs(api.param_specs(),
+                                    lm_rules(False, cfg.fsdp), _FakeMesh)
+        n = len(flatten_with_names(tree))
+        assert n == len(flatten_with_names(api.param_specs()))

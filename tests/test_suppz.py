@@ -1,0 +1,70 @@
+"""SUPPZ-style front-end tests (paper §Implementation)."""
+
+import pytest
+
+from repro.core.suppz import SuppzFrontend, Submission, program_id
+
+SYS = ["KNL", "Broadwell", "Skylake", "CascadeLake"]
+
+
+@pytest.fixture
+def fe(tmp_path):
+    return SuppzFrontend(str(tmp_path / "suppz.msgpack"), SYS)
+
+
+def test_program_identity_is_executable_hash(fe):
+    assert program_id(b"binary-A") != program_id(b"binary-B")
+    assert program_id(b"binary-A") == program_id(b"binary-A")
+
+
+def test_never_run_explores_first_released(fe):
+    d = fe.submit(Submission(b"prog", np_=144, t_max=600.0),
+                  availability=[5.0, 1.0, 3.0, 4.0])
+    assert d.explored and d.system == "Broadwell"   # earliest available
+    assert d.auto_queued
+
+
+def test_pinned_type_is_notification_only(fe):
+    d = fe.submit(Submission(b"prog", np_=144, t_max=600.0,
+                             resource_type="Skylake"))
+    assert not d.auto_queued          # user pinned: recommendation only
+
+
+def test_learning_and_k_auto(fe):
+    exe = b"my-solver-v1"
+    # fill the tables (paper Tables 1-4 regime)
+    profiles = {"KNL": (1.0, 150.0), "Broadwell": (2.8, 130.0),
+                "Skylake": (1.7, 76.0), "CascadeLake": (1.4, 80.0)}
+    for s, (c, t) in profiles.items():
+        fe.report_completion(exe, s, c=c, t=t)
+    # admin K=10%: CascadeLake (within 10% of Skylake, lower C)
+    d = fe.submit(Submission(exe, np_=144, t_max=600.0, k=0.10))
+    assert not d.explored and d.system == "CascadeLake"
+    # K=0: fastest tier only
+    d0 = fe.submit(Submission(exe, np_=144, t_max=600.0, k=0.0))
+    assert d0.system == "Skylake"
+    # auto-K from ordered time: t_max=83 vs best T=76 -> K ~ 9.2% -> CLK
+    da = fe.submit(Submission(exe, np_=144, t_max=83.0))
+    assert da.k_used == pytest.approx(83.0 / 76.0 - 1.0, rel=1e-6)
+    assert da.system == "CascadeLake"
+
+
+def test_persistence_across_restart(tmp_path):
+    path = str(tmp_path / "db.msgpack")
+    fe1 = SuppzFrontend(path, SYS)
+    fe1.report_completion(b"p", "Skylake", c=1.5, t=100.0)
+    fe1.submit(Submission(b"p", np_=16, t_max=200.0))
+    fe2 = SuppzFrontend(path, SYS)       # restart
+    ent = fe2.db["programs"][program_id(b"p")]
+    assert ent["runs"]["Skylake"] == 1
+    assert ent["T"]["Skylake"] == pytest.approx(100.0)
+
+
+def test_repeat_completions_average(fe):
+    exe = b"q"
+    fe.report_completion(exe, "KNL", c=2.0, t=100.0)
+    fe.report_completion(exe, "KNL", c=4.0, t=200.0)
+    ent = fe.db["programs"][program_id(exe)]
+    assert ent["C"]["KNL"] == pytest.approx(3.0)
+    assert ent["T"]["KNL"] == pytest.approx(150.0)
+    assert ent["runs"]["KNL"] == 2

@@ -1,0 +1,60 @@
+"""NPB-analogue workload tests: verification + op counters + Thomas solver."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.workloads import run_benchmark, BENCHMARKS, thomas_tridiag
+from repro.workloads.ep import run_ep, verify_ep, ep_flops
+from repro.workloads.is_sort import run_is, verify_is
+
+
+@pytest.mark.parametrize("name", BENCHMARKS)
+def test_benchmark_verifies(name):
+    res, ok, flops = run_benchmark(name, scale="smoke")
+    assert ok, name
+    assert flops > 0
+
+
+def test_ep_acceptance_ratio_approaches_pi_over_4():
+    res = run_ep(m=18)
+    ratio = float(res["accepted"]) / res["n_pairs"]
+    assert abs(ratio - np.pi / 4) < 0.01
+    assert verify_ep(res)
+    assert ep_flops(18) == (1 << 18) * 100.0
+
+
+def test_ep_hist_sums_to_accepted():
+    res = run_ep(m=16)
+    assert float(res["hist"].sum()) == pytest.approx(float(res["accepted"]))
+
+
+def test_is_ranks_are_a_valid_bucket_order():
+    res = run_is(n_pow=14)
+    assert verify_is(res)
+
+
+def test_thomas_solves_tridiagonal_system():
+    n = 64
+    key = jax.random.key(0)
+    ks = jax.random.split(key, 4)
+    a = jax.random.uniform(ks[0], (n,), minval=-0.3, maxval=0.0)
+    b = jax.random.uniform(ks[1], (n,), minval=2.0, maxval=3.0)
+    c = jax.random.uniform(ks[2], (n,), minval=-0.3, maxval=0.0)
+    x_true = jax.random.normal(ks[3], (n,))
+    a = a.at[0].set(0.0)
+    c = c.at[-1].set(0.0)
+    # build rhs = A @ x
+    d = b * x_true
+    d = d.at[1:].add(a[1:] * x_true[:-1])
+    d = d.at[:-1].add(c[:-1] * x_true[1:])
+    x = thomas_tridiag(a[None], b[None], c[None], d[None])[0]
+    np.testing.assert_allclose(x, x_true, atol=1e-4)
+
+
+def test_thomas_batched_over_grid():
+    shape = (4, 8, 32)
+    ones = jnp.ones(shape)
+    x = thomas_tridiag(0 * ones, 2 * ones, 0 * ones, ones)
+    np.testing.assert_allclose(x, 0.5 * np.ones(shape), atol=1e-6)
