@@ -13,6 +13,11 @@ Compares against fastest-first and first-free baselines; injects one
 degraded system mid-campaign to show history-driven routing-around
 (fault tolerance).
 
+After the executed campaign, the same scheduler is extrapolated to a
+10,000-job scenario stream with ``run_campaign`` — the whole K x seed grid
+simulated in one jitted call (the campaign-scale engine the measured
+15-job run feeds).
+
     PYTHONPATH=src python examples/multi_cluster_campaign.py --jobs 15
 """
 
@@ -21,11 +26,12 @@ import time
 
 import numpy as np
 
-from repro.core import JSCC_SYSTEMS
+from repro.core import JSCC_SYSTEMS, SimConfig, run_campaign
 from repro.core.profiles import ProfileStore
 from repro.core.algorithm import select_system
 from repro.core.workload_model import (NPB_NODES, NPB_PROFILES,
                                        predict_energy)
+from repro.data.scenarios import make_stream_workload, sample_programs
 from repro.workloads import run_benchmark
 
 import jax
@@ -87,11 +93,12 @@ def campaign(mode, jobs, k=0.10, degrade_after=None, seed=0):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--jobs", type=int, default=28)
+    ap.add_argument("--sim-jobs", type=int, default=10_000,
+                    help="length of the simulated extrapolation stream")
     ap.add_argument("--k", type=float, default=0.10)
     args = ap.parse_args()
 
-    rng = np.random.default_rng(0)
-    jobs = list(rng.choice(["BT", "EP", "IS", "LU", "SP"], size=args.jobs))
+    jobs = list(sample_programs(args.jobs, seed=0))
     print(f"campaign: {args.jobs} jobs, K={args.k:.0%}, degraded Skylake "
           f"after job {args.jobs // 2}\n")
 
@@ -108,6 +115,22 @@ def main():
     e_f, m_f = results["fastest"]
     print(f"\nEcoSched vs fastest-first: "
           f"{100*(e_p-e_f)/e_f:+.1f}% energy, {100*(m_p-m_f)/m_f:+.1f}% makespan")
+
+    # -------- campaign-scale extrapolation: one jitted (K x seed) grid ----
+    n_sim = args.sim_jobs
+    print(f"\nextrapolating to {n_sim} simulated jobs "
+          f"(bursty arrivals, mixed size classes) ...")
+    w = make_stream_workload(JSCC_SYSTEMS, n_sim, arrival="bursty",
+                             rate=0.25, seed=0, pred_noise=0.05)
+    ks = [0.0, 0.05, 0.10, 0.20]
+    t0 = time.perf_counter()
+    res = run_campaign(w, SimConfig(mode="paper"), ks=ks, seeds=range(3))
+    E = np.asarray(res["total_energy"])        # [K, R]
+    dt = time.perf_counter() - t0
+    print(f"grid {len(ks)}K x 3 seeds x {n_sim} jobs in {dt:.1f}s (one jit)")
+    for i, k in enumerate(ks):
+        print(f"  K={k:.0%}: energy={E[i].mean()/1e6:.2f} MJ "
+              f"({100*(E[i].mean()-E[0].mean())/E[0].mean():+.1f}% vs K=0)")
 
 
 if __name__ == "__main__":

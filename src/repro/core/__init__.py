@@ -9,6 +9,7 @@ from repro.core.workload_model import (
 from repro.core.profiles import ProfileStore, k_auto
 from repro.core.algorithm import select_system, MODES
 from repro.core.simulator import (
-    SimConfig, Workload, make_npb_workload, simulate_jax, simulate_py, sweep_k,
+    SimConfig, FaultConfig, Workload, make_npb_workload,
+    simulate_jax, simulate_py, sweep_k, run_campaign,
 )
 from repro.core import energy

@@ -6,3 +6,9 @@ from repro.data.synthetic import (
     EOS,
     PAD,
 )
+from repro.data.scenarios import (
+    poisson_arrivals, diurnal_arrivals, bursty_arrivals, make_arrivals,
+    sample_programs, maintenance_windows, make_stream_workload,
+    TraceJob, load_swf, workload_from_trace,
+    NPB_SMALL, NPB_LARGE, ARRIVAL_KINDS,
+)

@@ -4,5 +4,7 @@
 #   ep              — NPB EP Gaussian-pair acceptance + annuli histogram
 #   is_hist         — NPB IS key histogram (one-hot lane reduction)
 #   stencil3d       — 7-point stencil with shifted-index-map halos
+#   kth_free        — scheduler placement: kth-smallest node-free time
+#                     by 32-pass radix select (replaces per-step jnp.sort)
 # Each subpackage: kernel.py (pl.pallas_call + BlockSpec), ops.py (jit'd
 # dispatch: Mosaic on TPU, jnp twin elsewhere), ref.py (pure-jnp oracle).

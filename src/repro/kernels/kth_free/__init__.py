@@ -1,0 +1,3 @@
+from repro.kernels.kth_free.ops import kth_free_time
+from repro.kernels.kth_free.kernel import kth_free_pallas, radix_select_kth
+from repro.kernels.kth_free.ref import kth_free_ref

@@ -1,0 +1,36 @@
+"""Dispatch wrapper for the kth-free-time placement kernel.
+
+Modes (``force``):
+  pallas            — compiled Pallas kernel (TPU)
+  pallas_interpret  — Pallas interpreter (any backend; tests)
+  jnp               — pure-jnp radix select (same algorithm, scan/vmap safe)
+  sort              — jnp.sort reference oracle
+
+Default: Pallas on TPU, radix-select jnp elsewhere.  All four agree
+bit-exactly (the selected value is an element of the input).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.kth_free.kernel import kth_free_pallas, radix_select_kth
+from repro.kernels.kth_free.ref import kth_free_ref
+
+
+@partial(jax.jit, static_argnames=("force",))
+def kth_free_time(node_free, n_req, *, force: str | None = None):
+    """node_free: [S, maxN] f32 per-node free times; n_req: [S] int.
+    Returns [S] f32: earliest time n_req[s] nodes of system s are free."""
+    mode = force or ("pallas" if jax.default_backend() == "tpu" else "jnp")
+    if mode == "pallas":
+        return kth_free_pallas(node_free, n_req, interpret=False)
+    if mode == "pallas_interpret":
+        return kth_free_pallas(node_free, n_req, interpret=True)
+    if mode == "jnp":
+        return radix_select_kth(node_free, n_req)
+    if mode == "sort":
+        return kth_free_ref(node_free, n_req)
+    raise ValueError(f"unknown kth_free mode {mode!r}")

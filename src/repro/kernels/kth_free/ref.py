@@ -1,0 +1,18 @@
+"""Full-sort oracle for the kth-free-time kernel.
+
+The simulator's placement question per step: "when are the n_req[s]
+earliest-free nodes of system s all free?" — i.e. the n_req[s]-th smallest
+entry of the node-free row.  The reference answers it the obvious way
+(sort every row, gather the kth column); the kernel answers it without
+sorting.  The two must agree bit-exactly.
+"""
+
+import jax.numpy as jnp
+
+
+def kth_free_ref(node_free, n_req):
+    """node_free: [S, maxN] f32; n_req: [S] int (1-indexed count).
+    Returns [S] f32: per row, the n_req-th smallest value."""
+    sorted_free = jnp.sort(node_free, axis=1)
+    idx = jnp.clip(n_req - 1, 0, node_free.shape[1] - 1)
+    return jnp.take_along_axis(sorted_free, idx[:, None], axis=1)[:, 0]

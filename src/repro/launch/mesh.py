@@ -10,6 +10,16 @@ from __future__ import annotations
 import jax
 
 
+def _make_mesh(shape, axes):
+    """jax.make_mesh across jax versions: ``axis_types`` (and the AxisType
+    enum) only exist from jax 0.5; older jaxlibs default every axis to Auto
+    already, so omit the argument there."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """Single pod: (data=16, model=16) over 256 chips.
     Multi-pod:  (pod=2, data=16, model=16) over 512 chips — the 'pod' axis
@@ -17,9 +27,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     """
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_elastic_mesh(n_devices: int, model_parallel: int = 16):
@@ -27,6 +35,5 @@ def make_elastic_mesh(n_devices: int, model_parallel: int = 16):
     the elastic-restart path (data dim shrinks, model dim is preserved so
     checkpoints reshard without repartitioning logic)."""
     assert n_devices % model_parallel == 0
-    return jax.make_mesh(
-        (n_devices // model_parallel, model_parallel), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _make_mesh((n_devices // model_parallel, model_parallel),
+                      ("data", "model"))

@@ -1,9 +1,40 @@
-"""Scheduler CLI: run the EcoSched simulator on a job stream.
+"""Scheduler CLI: run the EcoSched simulator on a job stream or campaign.
+
+Single run / K sweep (the paper's Figs 1-4 regime):
 
     PYTHONPATH=src python -m repro.launch.schedule --mode paper --k 0.1
     PYTHONPATH=src python -m repro.launch.schedule --sweep-k 0,0.05,0.1,0.2
-    PYTHONPATH=src python -m repro.launch.schedule --mode predictive \
-        --jobs 40 --arrival-rate 0.125 --stragglers 0.1
+
+Campaign grid — ONE jitted call simulates the whole
+(K grid x seed grid) over a scenario-generated job stream:
+
+    PYTHONPATH=src python -m repro.launch.schedule \
+        --jobs 10000 --scenario poisson --arrival-rate 0.5 \
+        --campaign-k 0,0.05,0.1,0.2,0.3 --campaign-seeds 4
+
+Trace replay (SWF):
+
+    PYTHONPATH=src python -m repro.launch.schedule --trace my_log.swf \
+        --campaign-k 0,0.1,0.3 --campaign-seeds 2
+
+Campaign API (repro.core.run_campaign):
+    run_campaign(w, scfg, ks, seeds, faults) -> dict whose entries carry
+    leading axes [K, R] (or [F, K, R] with a fault grid): per-job arrays
+    become [..., J], totals [...].  Everything runs in a single jit; the
+    placement inner loop is the kth-free-time radix-select kernel
+    (repro.kernels.kth_free), not a per-step sort.
+
+Scenario formats (repro.data.scenarios):
+    --scenario {simultaneous, poisson, diurnal, bursty}  — arrival process
+      (diurnal: sinusoidal day/night rate; bursty: Poisson bursts of
+      correlated array-job submissions), mixed NPB job-size classes drawn
+      per --mix-small weight.
+    --trace FILE — Standard Workload Format replay: 18 whitespace-separated
+      fields per line, ';' comments; submit/runtime/procs are consumed and
+      jobs are binned into learned program classes
+      (repro.data.scenarios.workload_from_trace).
+    --outage S:START:END (repeatable) — maintenance window on system index
+      S; no new placements start inside [START, END).
 """
 
 from __future__ import annotations
@@ -13,8 +44,37 @@ import argparse
 import numpy as np
 
 from repro.core import (JSCC_SYSTEMS, SimConfig, make_npb_workload,
-                        simulate_jax, sweep_k)
+                        simulate_jax, sweep_k, run_campaign)
 from repro.core.algorithm import MODES
+from repro.data.scenarios import (make_stream_workload, maintenance_windows,
+                                  load_swf, workload_from_trace,
+                                  NPB_SMALL, NPB_LARGE, ARRIVAL_KINDS)
+
+
+def _parse_outages(specs, n_systems):
+    if not specs:
+        return None
+    spans = {}
+    for spec in specs:
+        s, a, b = spec.split(":")
+        spans.setdefault(int(s), []).append((float(a), float(b)))
+    return maintenance_windows(n_systems, spans)
+
+
+def build_workload(args):
+    outage = _parse_outages(args.outage, len(JSCC_SYSTEMS))
+    if args.trace:
+        w = workload_from_trace(load_swf(args.trace), JSCC_SYSTEMS)
+        if outage is not None:
+            from dataclasses import replace
+            w = replace(w, outage=outage)
+        return w
+    if args.jobs:
+        mix = {NPB_SMALL: args.mix_small, NPB_LARGE: 1.0 - args.mix_small}
+        return make_stream_workload(
+            JSCC_SYSTEMS, args.jobs, arrival=args.scenario,
+            rate=args.arrival_rate, mix=mix, seed=args.seed, outage=outage)
+    return make_npb_workload(JSCC_SYSTEMS, outage=outage)
 
 
 def main():
@@ -24,9 +84,22 @@ def main():
     ap.add_argument("--sweep-k", default="",
                     help="comma-separated K values (fractions)")
     ap.add_argument("--jobs", type=int, default=0,
-                    help="random stream length (default: the paper's suite)")
-    ap.add_argument("--arrival-rate", type=float, default=0.0,
-                    help="Poisson arrivals per second (0 = simultaneous)")
+                    help="stream length (default: the paper's 5-job suite)")
+    ap.add_argument("--scenario", default="poisson", choices=ARRIVAL_KINDS,
+                    help="arrival process for --jobs streams")
+    ap.add_argument("--arrival-rate", type=float, default=0.125,
+                    help="mean arrivals per second (0 = simultaneous)")
+    ap.add_argument("--mix-small", type=float, default=0.5,
+                    help="weight of the small NPB job-size class")
+    ap.add_argument("--trace", default="",
+                    help="SWF trace file to replay instead of synthetic jobs")
+    ap.add_argument("--outage", action="append", default=[],
+                    metavar="S:T0:T1",
+                    help="maintenance window on system S (repeatable)")
+    ap.add_argument("--campaign-k", default="",
+                    help="comma-separated K grid -> run_campaign")
+    ap.add_argument("--campaign-seeds", type=int, default=0,
+                    help="number of seeds in the campaign grid")
     ap.add_argument("--stragglers", type=float, default=0.0)
     ap.add_argument("--failures", type=float, default=0.0)
     ap.add_argument("--cold", action="store_true",
@@ -34,17 +107,26 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    rng = np.random.default_rng(args.seed)
-    if args.jobs:
-        order = tuple(rng.choice(["BT", "EP", "IS", "LU", "SP"], args.jobs))
-        arrivals = (np.cumsum(rng.exponential(1 / args.arrival_rate, args.jobs))
-                    .astype(np.float32) if args.arrival_rate else None)
-    else:
-        order, arrivals = ("BT", "EP", "IS", "LU", "SP"), None
-    w = make_npb_workload(JSCC_SYSTEMS, order=order, arrivals=arrivals)
+    w = build_workload(args)
     scfg = SimConfig(mode=args.mode, k=args.k, warm_start=not args.cold,
                      straggler_prob=args.stragglers,
                      failure_prob=args.failures, seed=args.seed)
+
+    if args.campaign_k:
+        ks = np.array([float(x) for x in args.campaign_k.split(",")])
+        seeds = [args.seed + i for i in range(max(args.campaign_seeds, 1))]
+        res = run_campaign(w, scfg, ks=ks, seeds=seeds)
+        E = np.asarray(res["total_energy"])         # [K, R]
+        M = np.asarray(res["makespan"])
+        W = np.asarray(res["total_wait"])
+        print(f"campaign: jobs={len(w.prog)} grid={len(ks)}Kx{len(seeds)}seed "
+              f"mode={args.mode}")
+        print("K,energy_J(mean),energy_J(std),makespan_s(mean),wait_s(mean),dE%")
+        for i, k in enumerate(ks):
+            print(f"{k:.2f},{E[i].mean():.0f},{E[i].std():.0f},"
+                  f"{M[i].mean():.1f},{W[i].mean():.1f},"
+                  f"{100*(E[i].mean()-E[0].mean())/E[0].mean():+.1f}")
+        return
 
     if args.sweep_k:
         ks = np.array([float(x) for x in args.sweep_k.split(",")])

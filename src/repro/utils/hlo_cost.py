@@ -130,8 +130,17 @@ def _parse_instr_line(line: str):
     return name, shape, opcode, argstr, is_root
 
 
+def _operand_name(token: str):
+    """'%name' from an operand token — either bare ('%Arg_0.1') or typed
+    ('f32[8,16]{1,0} %Arg_0.1', the form newer XLA emits)."""
+    for part in token.split():
+        if part.startswith("%"):
+            return part
+    return None
+
+
 def _top_level_operands(argstr: str):
-    """Extract top-level %operand names from 'a, b, c), attrs...'."""
+    """Extract top-level operand names from 'a, b, c), attrs...'."""
     out, depth = [], 0
     token = ""
     for ch in argstr:
@@ -142,15 +151,15 @@ def _top_level_operands(argstr: str):
                 break
             depth -= 1
         if ch == "," and depth == 0:
-            token = token.strip()
-            if token.startswith("%"):
-                out.append(token.split(" ")[0])
+            name = _operand_name(token)
+            if name:
+                out.append(name)
             token = ""
         else:
             token += ch
-    token = token.strip()
-    if token.startswith("%"):
-        out.append(token.split(" ")[0])
+    name = _operand_name(token)
+    if name:
+        out.append(name)
     return out
 
 

@@ -77,6 +77,7 @@ def test_shape_mismatch_raises(tmpdir_ck):
         mgr.restore(bad_tmpl)
 
 
+@pytest.mark.slow
 def test_resume_is_bitwise_equivalent(tmp_path):
     """Train 8 straight vs 4 + crash + resume 4: identical loss trajectory
     (data is a pure function of step; optimizer state fully checkpointed)."""

@@ -1,0 +1,180 @@
+"""Full differential harness: simulate_py == simulate_jax over the whole
+selector family (every mode in algorithm.MODES) x warm/cold start x per-job
+K overrides x scenario features (staggered arrivals, maintenance windows,
+trace replay), plus bit-exactness of the kth-free placement kernel against
+the jnp.sort oracle and the campaign grid's consistency with single runs."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (JSCC_SYSTEMS, SimConfig, FaultConfig,
+                        make_npb_workload, simulate_jax, simulate_py,
+                        run_campaign, MODES)
+from repro.data.scenarios import (make_stream_workload, maintenance_windows,
+                                  load_swf, workload_from_trace)
+from repro.kernels.kth_free import (kth_free_ref, kth_free_pallas,
+                                    radix_select_kth)
+
+
+@pytest.fixture(scope="module")
+def stream():
+    """25 mixed jobs, staggered Poisson arrivals, per-job K overrides on
+    every 5th job, noisy predictions — exercises every selector input."""
+    rng = np.random.default_rng(1)
+    order = tuple(rng.choice(["BT", "EP", "IS", "LU", "SP"], 25))
+    arrivals = np.cumsum(rng.exponential(30.0, 25)).astype(np.float32)
+    k_job = np.full(25, np.nan, np.float32)
+    k_job[::5] = 0.3
+    return make_npb_workload(JSCC_SYSTEMS, order=order, arrivals=arrivals,
+                             k_job=k_job, pred_noise=0.10)
+
+
+def assert_differential(w, cfg):
+    rj = simulate_jax(w, cfg)
+    rp = simulate_py(w, cfg)
+    np.testing.assert_array_equal(np.asarray(rj["system"]), rp["system"])
+    np.testing.assert_allclose(np.asarray(rj["energy"]), rp["energy"],
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(rj["start"]), rp["start"],
+                               rtol=1e-5, atol=1e-3)
+    np.testing.assert_allclose(float(rj["total_energy"]), rp["total_energy"],
+                               rtol=1e-5)
+    np.testing.assert_allclose(float(rj["makespan"]), rp["makespan"],
+                               rtol=1e-5)
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("warm", [True, False], ids=["warm", "cold"])
+def test_differential_all_modes(stream, mode, warm):
+    assert_differential(stream, SimConfig(mode=mode, k=0.1, warm_start=warm,
+                                          seed=3))
+
+
+@pytest.mark.parametrize("mode", ["paper", "queue_aware", "random"])
+def test_differential_per_job_k_extremes(stream, mode):
+    """K overrides spanning 0 (fastest tier) to huge (pure greenest)."""
+    rng = np.random.default_rng(7)
+    k_job = rng.choice([0.0, 0.05, 0.5, 5.0], len(stream.prog)).astype(np.float32)
+    from dataclasses import replace
+    w = replace(stream, k_job=k_job)
+    assert_differential(w, SimConfig(mode=mode, k=0.1, warm_start=True))
+
+
+@pytest.mark.parametrize("mode", ["paper", "first_free", "queue_aware",
+                                  "predictive"])
+def test_differential_with_outage_windows(mode):
+    outage = maintenance_windows(
+        4, {2: [(0.0, 500.0), (800.0, 900.0)], 0: [(100.0, 300.0)]})
+    w = make_stream_workload(JSCC_SYSTEMS, 30, arrival="poisson", rate=0.05,
+                             seed=5, outage=outage)
+    assert_differential(w, SimConfig(mode=mode, k=0.1))
+
+
+def test_differential_trace_replay():
+    swf = "\n".join(
+        f"{i+1} {i*40} 0 {120 + 37*i % 900} {2 ** (2 + i % 6)} 100.0 0 "
+        f"{2 ** (2 + i % 6)} 1000 0 1 1 1 1 1 1 -1 -1"
+        for i in range(40)).splitlines()
+    w = workload_from_trace(load_swf(swf), JSCC_SYSTEMS)
+    for mode in ("paper", "fastest", "oracle"):
+        assert_differential(w, SimConfig(mode=mode, k=0.2))
+
+
+def test_no_notimplemented_paths():
+    """Acceptance: simulate_py must cover every mode in MODES."""
+    w = make_npb_workload(JSCC_SYSTEMS)
+    for mode in MODES:
+        simulate_py(w, SimConfig(mode=mode, k=0.1, warm_start=True))
+
+
+# ------------------------------------------------- kth-free placement kernel
+
+def test_kth_free_matches_sort_bitexact():
+    """Radix select == jnp.sort oracle, bit for bit, across shapes, ties,
+    BIG sentinels and full k range."""
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        S = int(rng.integers(2, 9))
+        N = int(rng.integers(3, 260))
+        free = rng.uniform(0, 1e7, (S, N)).astype(np.float32)
+        free[rng.random((S, N)) < 0.25] = 1e30       # nonexistent nodes
+        free[rng.random((S, N)) < 0.25] = 0.0        # idle ties
+        nreq = rng.integers(1, N + 1, S).astype(np.int32)
+        ref = np.asarray(kth_free_ref(jnp.asarray(free), jnp.asarray(nreq)))
+        sel = np.asarray(radix_select_kth(jnp.asarray(free), jnp.asarray(nreq)))
+        np.testing.assert_array_equal(ref, sel)
+
+
+def test_kth_free_pallas_interpret_matches_sort():
+    rng = np.random.default_rng(1)
+    free = rng.uniform(0, 1e6, (4, 136)).astype(np.float32)
+    free[:, 100:] = 1e30
+    nreq = np.array([2, 5, 8, 3], np.int32)
+    ref = np.asarray(kth_free_ref(jnp.asarray(free), jnp.asarray(nreq)))
+    pal = np.asarray(kth_free_pallas(jnp.asarray(free), jnp.asarray(nreq),
+                                     interpret=True))
+    np.testing.assert_array_equal(ref, pal)
+
+
+def test_simulator_identical_under_all_placers():
+    """The engine's answer must not depend on the placement backend."""
+    w = make_stream_workload(JSCC_SYSTEMS, 40, arrival="bursty", rate=0.2,
+                             seed=2)
+    base = simulate_jax(w, SimConfig(mode="paper", k=0.1, placer="sort"))
+    for placer in ("jnp", "pallas_interpret"):
+        r = simulate_jax(w, SimConfig(mode="paper", k=0.1, placer=placer))
+        np.testing.assert_array_equal(np.asarray(base["system"]),
+                                      np.asarray(r["system"]))
+        np.testing.assert_array_equal(np.asarray(base["start"]),
+                                      np.asarray(r["start"]))
+
+
+# --------------------------------------------------------------- campaigns
+
+def test_campaign_grid_matches_single_runs():
+    """run_campaign[K, R] must reproduce independent simulate_jax calls."""
+    w = make_stream_workload(JSCC_SYSTEMS, 30, arrival="poisson", rate=0.1,
+                             seed=4)
+    ks, seeds = [0.0, 0.1], [0, 1]
+    cfg = SimConfig(mode="paper", straggler_prob=0.2, straggler_factor=2.0)
+    res = run_campaign(w, cfg, ks=ks, seeds=seeds)
+    assert np.asarray(res["total_energy"]).shape == (2, 2)
+    for i, k in enumerate(ks):
+        for r, seed in enumerate(seeds):
+            single = simulate_jax(w, SimConfig(
+                mode="paper", k=k, seed=seed,
+                straggler_prob=0.2, straggler_factor=2.0))
+            np.testing.assert_array_equal(
+                np.asarray(res["system"])[i, r], np.asarray(single["system"]))
+            np.testing.assert_allclose(
+                float(np.asarray(res["total_energy"])[i, r]),
+                float(single["total_energy"]), rtol=1e-6)
+
+
+def test_campaign_fault_axis():
+    w = make_stream_workload(JSCC_SYSTEMS, 20, seed=6)
+    res = run_campaign(
+        w, SimConfig(mode="paper"), ks=[0.1], seeds=[0],
+        faults=[FaultConfig(), FaultConfig(straggler_prob=1.0,
+                                           straggler_factor=3.0)])
+    E = np.asarray(res["total_energy"])
+    assert E.shape == (2, 1, 1)
+    assert E[1] > E[0] * 1.5            # universal stragglers cost energy
+
+
+@pytest.mark.slow
+def test_campaign_10k_jobs_single_jit():
+    """Acceptance: a 10,000-job stream over an 8-K x 4-seed grid in one
+    jitted call."""
+    w = make_stream_workload(JSCC_SYSTEMS, 10_000, arrival="poisson",
+                             rate=0.5, seed=0)
+    res = run_campaign(w, SimConfig(mode="paper", straggler_prob=0.02),
+                       ks=np.linspace(0.0, 0.35, 8), seeds=range(4))
+    E = np.asarray(res["total_energy"])
+    assert E.shape == (8, 4)
+    assert np.isfinite(E).all() and (E > 0).all()
+    assert np.asarray(res["system"]).shape == (8, 4, 10_000)
+    # more K slack never costs energy on average
+    assert E.mean(axis=1)[-1] <= E.mean(axis=1)[0]

@@ -5,6 +5,10 @@ import os
 import subprocess
 import sys
 
+import pytest
+
+pytestmark = pytest.mark.slow       # subprocess, 150-step training run
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 SCRIPT = r"""
@@ -13,9 +17,9 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, jax.numpy as jnp, numpy as np
 from repro.optim import AdamWConfig
 from repro.train.dp import make_dp_train_step, init_dp_state
+from repro.launch.mesh import _make_mesh
 
-mesh = jax.make_mesh((2, 4), ("pod", "data"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = _make_mesh((2, 4), ("pod", "data"))
 target = jnp.linspace(-1.0, 1.0, 32)
 
 def loss_fn(params, batch):

@@ -10,6 +10,8 @@ import pytest
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
+pytestmark = pytest.mark.slow       # subprocess + 256/512-device compiles
+
 
 @pytest.mark.parametrize("arch,shape,mp", [
     ("tinyllama-1.1b", "decode_32k", False),

@@ -76,6 +76,49 @@ def test_parse_module_structure():
             assert inst.name in c.symbols
 
 
+def test_fused_dot_flops_counted():
+    """A dot folded into a fusion must still contribute its flops (fusion
+    interiors count flops; memory is boundary-level)."""
+    m, k, n = 64, 128, 32
+    hlo = _compiled_hlo(
+        lambda a, b, c: jnp.maximum(a @ b + c, 0.0),
+        jax.ShapeDtypeStruct((m, k), jnp.float32),
+        jax.ShapeDtypeStruct((k, n), jnp.float32),
+        jax.ShapeDtypeStruct((m, n), jnp.float32))
+    res = analyze_hlo(hlo)
+    assert res["flops"] >= 2.0 * m * k * n * 0.95, res["flops"]
+
+
+_UNFUSED_HLO = """\
+HloModule manual
+
+ENTRY %main (a: f32[8,16], b: f32[16,4]) -> f32[8,4] {
+  %a = f32[8,16]{1,0} parameter(0)
+  %b = f32[16,4]{1,0} parameter(1)
+  ROOT %dot.1 = f32[8,4]{1,0} dot(f32[8,16]{1,0} %a, f32[16,4]{1,0} %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+
+_BARE_OPERAND_HLO = """\
+HloModule manual
+
+ENTRY %main (a: f32[8,16], b: f32[16,4]) -> f32[8,4] {
+  %a = f32[8,16]{1,0} parameter(0)
+  %b = f32[16,4]{1,0} parameter(1)
+  ROOT %dot.1 = f32[8,4]{1,0} dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+
+
+@pytest.mark.parametrize("text", [_UNFUSED_HLO, _BARE_OPERAND_HLO],
+                         ids=["typed-operands", "bare-operands"])
+def test_dot_flops_both_operand_syntaxes(text):
+    """XLA emits 'dot(f32[..] %a, ..)' (typed) or 'dot(%a, ..)' (bare)
+    depending on version; the contracting-dim flops must parse from both."""
+    res = analyze_hlo(text)
+    assert res["flops"] == pytest.approx(2.0 * 8 * 16 * 4)
+
+
 def test_collective_census_on_psum():
     try:
         devs = jax.devices()

@@ -98,6 +98,39 @@ def test_stencil_boundary_is_dirichlet_zero():
     assert float(out[0, 0, 0]) == pytest.approx(-3.0, abs=1e-5)
 
 
+# ---------------------------------------------------------------- kth free
+
+from repro.kernels.kth_free import (kth_free_ref, kth_free_pallas,  # noqa: E402
+                                    radix_select_kth)
+
+
+@pytest.mark.parametrize("s,n,seed", [
+    (4, 136, 0),      # the JSCC node matrix
+    (2, 8, 1),
+    (7, 200, 2),
+    (3, 129, 3),      # non-multiple-of-lane width
+])
+def test_kth_free_sweep(s, n, seed):
+    rng = np.random.default_rng(seed)
+    free = rng.uniform(0, 1e6, (s, n)).astype(np.float32)
+    free[rng.random((s, n)) < 0.3] = 1e30
+    free[rng.random((s, n)) < 0.3] = 0.0
+    nreq = rng.integers(1, n + 1, s).astype(np.int32)
+    ref = np.asarray(kth_free_ref(jnp.asarray(free), jnp.asarray(nreq)))
+    pal = np.asarray(kth_free_pallas(jnp.asarray(free), jnp.asarray(nreq),
+                                     interpret=True))
+    sel = np.asarray(radix_select_kth(jnp.asarray(free), jnp.asarray(nreq)))
+    np.testing.assert_array_equal(ref, pal)
+    np.testing.assert_array_equal(ref, sel)
+
+
+def test_kth_free_clips_out_of_range_requests():
+    free = jnp.asarray(np.arange(12, dtype=np.float32).reshape(2, 6))
+    nreq = jnp.asarray(np.array([0, 99], np.int32))   # clipped to [1, N]
+    out = np.asarray(radix_select_kth(free, nreq))
+    np.testing.assert_array_equal(out, [0.0, 11.0])
+
+
 # ---------------------------------------------------------------- SSD scan
 
 from repro.kernels.ssd_scan import ssd_scan_pallas, ssd_scan_ref  # noqa: E402

@@ -53,6 +53,7 @@ def test_global_matches_dense_when_no_drops(setup):
     np.testing.assert_allclose(out, dense_ref(p, x, cfg_g), atol=2e-4)
 
 
+@pytest.mark.slow
 def test_shard_count_invariance_no_drops(setup):
     """With ample capacity, the shard count is an implementation detail."""
     cfg, p, x = setup

@@ -1,11 +1,17 @@
-"""Hypothesis property tests for the scheduler's invariants."""
+"""Hypothesis property tests for the scheduler's invariants — every mode
+in ``algorithm.MODES`` is swept (hypothesis optional: suite skips cleanly
+where the dev extra isn't installed; see requirements-dev.txt)."""
+
+import pytest
+
+pytest.importorskip("hypothesis")
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings, strategies as st
 
-from repro.core.algorithm import select_system
+from repro.core.algorithm import MODES, select_system
 
 N_SYS = st.integers(min_value=2, max_value=6)
 
@@ -19,14 +25,21 @@ def tables(draw):
     return np.array(c), np.array(t), k
 
 
-def run_paper(c, t, k):
+def run_mode(mode, c, t, k, runs=None, avail=None):
+    n = len(c)
     return int(select_system(
-        "paper",
+        mode,
         c_row=jnp.asarray(c, jnp.float32), t_row=jnp.asarray(t, jnp.float32),
-        runs_row=jnp.ones(len(c), jnp.int32),
-        avail_row=jnp.zeros(len(c), jnp.float32), k=jnp.float32(k),
+        runs_row=jnp.ones(n, jnp.int32) if runs is None
+        else jnp.asarray(runs, jnp.int32),
+        avail_row=jnp.zeros(n, jnp.float32) if avail is None
+        else jnp.asarray(avail, jnp.float32), k=jnp.float32(k),
         c_pred_row=jnp.asarray(c, jnp.float32),
         t_pred_row=jnp.asarray(t, jnp.float32), key=jax.random.key(0)))
+
+
+def run_paper(c, t, k):
+    return run_mode("paper", c, t, k)
 
 
 @settings(max_examples=60, deadline=None)
@@ -96,3 +109,74 @@ def test_exploration_prefers_first_released_unexplored(tab, seed):
     unexplored = np.where(runs == 0)[0]
     assert sel in unexplored
     assert avail[sel] == avail[unexplored].min()
+
+
+# --------------------------------------------------- whole-family properties
+
+@pytest.mark.parametrize("mode", MODES)
+@settings(max_examples=25, deadline=None)
+@given(tables())
+def test_every_mode_returns_valid_index(mode, tab):
+    """Totality: every selector returns an index in range on fully-known
+    tables, for any (C, T, K)."""
+    c, t, k = tab
+    sel = run_mode(mode, c, t, k)
+    assert 0 <= sel < len(c)
+
+
+@pytest.mark.parametrize("mode", MODES)
+@settings(max_examples=25, deadline=None)
+@given(tables(), st.integers(0, 5))
+def test_every_mode_valid_with_unknowns(mode, tab, seed):
+    """Totality under cold start: selectors must stay in range with any
+    mix of explored/unexplored systems and arbitrary availability."""
+    c, t, k = tab
+    n = len(c)
+    rng = np.random.default_rng(seed)
+    runs = rng.integers(0, 2, n)
+    avail = rng.uniform(0, 100, n)
+    sel = int(select_system(
+        mode,
+        c_row=jnp.asarray(c * runs, jnp.float32),
+        t_row=jnp.asarray(t * runs, jnp.float32),
+        runs_row=jnp.asarray(runs, jnp.int32),
+        avail_row=jnp.asarray(avail, jnp.float32), k=jnp.float32(k),
+        c_pred_row=jnp.asarray(c, jnp.float32),
+        t_pred_row=jnp.asarray(t, jnp.float32), key=jax.random.key(seed)))
+    assert 0 <= sel < n
+
+
+@settings(max_examples=30, deadline=None)
+@given(tables())
+def test_queue_aware_reduces_to_paper_when_no_queue(tab):
+    """With identical availability everywhere, wait is uniformly zero and
+    the queue-aware rule must coincide with the paper rule."""
+    c, t, k = tab
+    assert run_mode("queue_aware", c, t, k) == run_paper(c, t, k)
+
+
+@settings(max_examples=30, deadline=None)
+@given(tables())
+def test_oracle_matches_paper_on_true_tables(tab):
+    """Oracle evaluates the paper rule on the predicted(=true here) tables."""
+    c, t, k = tab
+    assert run_mode("oracle", c, t, k) == run_paper(c, t, k)
+
+
+@settings(max_examples=30, deadline=None)
+@given(tables())
+def test_greenest_is_energy_lower_bound(tab):
+    """No mode's fully-known selection beats greenest on C."""
+    c, t, k = tab
+    cg = c[run_mode("greenest", c, t, k)]
+    for mode in ("paper", "queue_aware", "predictive", "ucb", "oracle"):
+        assert cg <= c[run_mode(mode, c, t, k)] * (1 + 1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(tables())
+def test_fastest_is_runtime_lower_bound(tab):
+    c, t, k = tab
+    tf = t[run_mode("fastest", c, t, k)]
+    for mode in ("paper", "queue_aware", "predictive", "ucb", "oracle"):
+        assert tf <= t[run_mode(mode, c, t, k)] * (1 + 1e-6)

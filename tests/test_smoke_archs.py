@@ -4,6 +4,11 @@ Each assigned architecture is instantiated at a REDUCED same-family config
 (small width/depth/experts/vocab) and runs one forward/train step and one
 decode step on CPU, asserting output shapes and finiteness.  The FULL configs
 are exercised only via the dry-run (ShapeDtypeStruct, no allocation).
+
+Model builds/params are cached in a session-scoped fixture (each arch is
+built once, not once per smoke test); compile-heavy smokes carry the
+``slow`` marker — the quick loop (-m "not slow") keeps the config-dimension
+checks only.
 """
 
 import jax
@@ -17,12 +22,26 @@ from repro.models import build_model
 from conftest import make_lm_batch
 
 
+@pytest.fixture(scope="session")
+def built_arch():
+    """arch -> (cfg, api, params), built once per session."""
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            cfg = smoke_reduce(get_config(arch))
+            api = build_model(cfg)
+            cache[arch] = (cfg, api, api.init_params(jax.random.key(0)))
+        return cache[arch]
+
+    return get
+
+
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCH_IDS)
-def test_train_step_smoke(arch):
-    cfg = smoke_reduce(get_config(arch))
-    api = build_model(cfg)
+def test_train_step_smoke(arch, built_arch):
+    cfg, api, params = built_arch(arch)
     key = jax.random.key(0)
-    params = api.init_params(key)
     batch = make_lm_batch(cfg, 2, 64, key)
     loss, metrics = jax.jit(api.train_loss)(params, batch)
     assert loss.shape == ()
@@ -35,12 +54,10 @@ def test_train_step_smoke(arch):
     assert any(float(jnp.abs(g).max()) > 0 for g in flat), f"{arch}: all-zero grads"
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCH_IDS)
-def test_decode_step_smoke(arch):
-    cfg = smoke_reduce(get_config(arch))
-    api = build_model(cfg)
-    key = jax.random.key(0)
-    params = api.init_params(key)
+def test_decode_step_smoke(arch, built_arch):
+    cfg, api, params = built_arch(arch)
     b, max_seq = 2, 32
     cache = api.init_decode_cache(b, max_seq)
     tok = jnp.zeros((b, 1), jnp.int32)
@@ -51,12 +68,11 @@ def test_decode_step_smoke(arch):
     assert jax.tree.structure(cache) == jax.tree.structure(cache2)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ARCH_IDS)
-def test_prefill_smoke(arch):
-    cfg = smoke_reduce(get_config(arch))
-    api = build_model(cfg)
+def test_prefill_smoke(arch, built_arch):
+    cfg, api, params = built_arch(arch)
     key = jax.random.key(0)
-    params = api.init_params(key)
     batch = make_lm_batch(cfg, 2, 64, key)
     batch.pop("labels"), batch.pop("mask")
     logits = jax.jit(api.prefill)(params, batch)
