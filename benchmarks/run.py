@@ -29,6 +29,7 @@ def main() -> None:
         ("fig1_2", fig1_2_suite_vs_k.run),
         ("fig3_4", fig3_4_per_benchmark.run),
         ("ablation", scheduler_ablation.run),
+        ("policy_grid", scheduler_ablation.run_policy_grid),
         ("fault_tolerance", scheduler_ablation.run_fault_tolerance),
         ("npb", npb_kernels.run),
         ("tpu_campaign", tpu_campaign.run),

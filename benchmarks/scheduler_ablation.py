@@ -1,11 +1,18 @@
 """Beyond-paper scheduler ablation on campaign-scale scenario streams.
 
-All selector modes on a bursty mixed-class job stream via ``run_campaign``
-(each mode's whole K x seed grid is ONE jitted call), reporting the
-energy / makespan / wait Pareto — the paper's algorithm is the tunable
-middle; predictive cold-start removes exploration waste (DESIGN.md §9).
-The fault-tolerance sweep drives the same stream through a FaultConfig
-grid in a single call."""
+Every registered policy on a bursty mixed-class job stream via the
+``Scheduler`` facade (each policy's whole K x seed grid is ONE jitted
+call), reporting the energy / makespan / wait Pareto — the paper's
+algorithm is the tunable middle; predictive cold-start removes exploration
+waste (DESIGN.md §9).  The fault-tolerance sweep drives the same stream
+through a FaultConfig grid in a single call.
+
+``run_policy_grid`` is the hyperparameter-grid demonstration: because
+Policy hyperparameters (K, ucb_scale) are PyTree leaves, a 32-point
+K x ucb-scale mesh is ONE leaf-batched Policy — a single jitted
+``Scheduler.run`` vmaps the whole grid without re-tracing per point
+(asserted on the jit cache).
+"""
 
 from __future__ import annotations
 
@@ -13,11 +20,10 @@ import time
 
 import numpy as np
 
-from repro.core import JSCC_SYSTEMS, SimConfig, FaultConfig, run_campaign
+from repro.core import (JSCC_SYSTEMS, FaultConfig, Scheduler, make_policy,
+                        policy_names)
+from repro.core.engine import _batched_run
 from repro.data.scenarios import make_stream_workload
-
-MODES = ("paper", "queue_aware", "predictive", "ucb", "fastest",
-         "greenest", "first_free", "random")
 
 KS = (0.05, 0.10, 0.20)
 SEEDS = (0, 1)
@@ -31,37 +37,58 @@ def _stream(n_jobs=200, seed=0):
 def run():
     w = _stream()
     rows = []
-    for mode in MODES:
-        cfg = SimConfig(mode=mode)             # cold start: tables empty
+    for name in policy_names():
+        if name == "oracle":
+            continue                   # identical to paper on clean tables
+        pol = make_policy(name, k=np.asarray(KS, np.float32))
         t0 = time.perf_counter()
-        res = run_campaign(w, cfg, ks=KS, seeds=SEEDS)
-        e = float(np.asarray(res["total_energy"]).mean())
-        m = float(np.asarray(res["makespan"]).mean())
-        wsum = float(np.asarray(res["total_wait"]).mean())
+        res = Scheduler(pol, seeds=SEEDS).run(w)   # cold start: tables empty
+        e = float(np.asarray(res.total_energy).mean())
+        m = float(np.asarray(res.makespan).mean())
+        wsum = float(np.asarray(res.total_wait).mean())
         us = (time.perf_counter() - t0) * 1e6
-        rows.append((f"ablate_{mode}", us,
+        rows.append((f"ablate_{name}", us,
                      f"E={e/1e3:.0f}kJ;makespan={m:.0f}s;wait={wsum:.0f}s"
                      f";grid={len(KS)}Kx{len(SEEDS)}seed"))
     return rows
 
 
+def run_policy_grid():
+    """One jitted ``Scheduler.run`` over a 32-point K x ucb-scale
+    hyperparameter mesh (leaf-batched Policy): no re-trace per point."""
+    w = _stream(n_jobs=150, seed=2)
+    kk, uu = np.meshgrid(np.linspace(0.0, 0.35, 8).astype(np.float32),
+                         np.asarray([0.25, 0.5, 0.75, 1.0], np.float32))
+    pol = make_policy("ucb", k=kk.ravel(), ucb_scale=uu.ravel())
+    cache0 = _batched_run._cache_size()
+    t0 = time.perf_counter()
+    res = Scheduler(pol, seeds=0).run(w, totals_only=True)
+    E = np.asarray(res.total_energy)                        # [32]
+    us = (time.perf_counter() - t0) * 1e6
+    traced = _batched_run._cache_size() - cache0
+    assert traced <= 1, f"grid re-traced: {traced} compilations"
+    best = int(E.argmin())
+    return [("policy_grid_32pt", us,
+             f"points={E.size};compiles={traced};best_E={E[best]/1e3:.0f}kJ"
+             f"@K={kk.ravel()[best]:.2f},ucb={uu.ravel()[best]:.2f}")]
+
+
 def run_fault_tolerance():
     """Same stream under a straggler/failure grid: the history mechanism
     routes around degraded systems (fault tolerance, DESIGN.md §7).  The
-    whole fault grid is one run_campaign call."""
+    whole fault grid is one ``Scheduler.run``."""
     w = _stream(seed=1)
     grid = [
         ("clean", FaultConfig()),
         ("stragglers", FaultConfig(straggler_prob=0.15, straggler_factor=2.5)),
         ("failures", FaultConfig(failure_prob=0.10, restart_overhead=0.5)),
     ]
-    cfg = SimConfig(mode="paper", k=0.10)
+    pol = make_policy("paper", k=np.asarray([0.10], np.float32))
     t0 = time.perf_counter()
-    res = run_campaign(w, cfg, ks=[0.10], seeds=SEEDS,
-                       faults=[f for _, f in grid])
+    res = Scheduler(pol, seeds=SEEDS, faults=[f for _, f in grid]).run(w)
     us = (time.perf_counter() - t0) * 1e6
-    E = np.asarray(res["total_energy"])       # [F, K, R]
-    M = np.asarray(res["makespan"])
+    E = np.asarray(res.total_energy)          # [F, K, R]
+    M = np.asarray(res.makespan)
     # the grid is ONE jitted call — time it once; per-config rows carry
     # metrics only (a per-config split of the shared call would be fiction)
     rows = [("fault_grid", us,

@@ -14,9 +14,10 @@ degraded system mid-campaign to show history-driven routing-around
 (fault tolerance).
 
 After the executed campaign, the same scheduler is extrapolated to a
-10,000-job scenario stream with ``run_campaign`` — the whole K x seed grid
-simulated in one jitted call (the campaign-scale engine the measured
-15-job run feeds).
+10,000-job scenario stream with the ``Scheduler`` facade — the whole
+K x seed grid is one leaf-batched Policy simulated in one jitted call
+(the campaign-scale engine the measured 15-job run feeds), returning a
+structured ``CampaignResult`` with named axes and derived metrics.
 
     PYTHONPATH=src python examples/multi_cluster_campaign.py --jobs 15
 """
@@ -26,7 +27,7 @@ import time
 
 import numpy as np
 
-from repro.core import JSCC_SYSTEMS, SimConfig, run_campaign
+from repro.core import JSCC_SYSTEMS, Scheduler, make_policy
 from repro.core.profiles import ProfileStore
 from repro.core.algorithm import select_system
 from repro.core.workload_model import (NPB_NODES, NPB_PROFILES,
@@ -122,15 +123,19 @@ def main():
           f"(bursty arrivals, mixed size classes) ...")
     w = make_stream_workload(JSCC_SYSTEMS, n_sim, arrival="bursty",
                              rate=0.25, seed=0, pred_noise=0.05)
-    ks = [0.0, 0.05, 0.10, 0.20]
+    ks = np.array([0.0, 0.05, 0.10, 0.20], np.float32)
     t0 = time.perf_counter()
-    res = run_campaign(w, SimConfig(mode="paper"), ks=ks, seeds=range(3))
-    E = np.asarray(res["total_energy"])        # [K, R]
+    res = Scheduler(make_policy("paper", k=ks), seeds=range(3)).run(
+        w, totals_only=True)                   # aggregates only: no [K,R,J]
+    E = np.asarray(res.total_energy)           # [K, R]
+    slow = np.asarray(res.mean_slowdown)
     dt = time.perf_counter() - t0
-    print(f"grid {len(ks)}K x 3 seeds x {n_sim} jobs in {dt:.1f}s (one jit)")
+    print(f"grid {len(ks)}K x 3 seeds x {n_sim} jobs in {dt:.1f}s "
+          f"(one jit, axes={res.axes})")
     for i, k in enumerate(ks):
         print(f"  K={k:.0%}: energy={E[i].mean()/1e6:.2f} MJ "
-              f"({100*(E[i].mean()-E[0].mean())/E[0].mean():+.1f}% vs K=0)")
+              f"({100*(E[i].mean()-E[0].mean())/E[0].mean():+.1f}% vs K=0), "
+              f"mean slowdown {slow[i].mean():.2f}")
 
 
 if __name__ == "__main__":

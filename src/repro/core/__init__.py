@@ -7,7 +7,13 @@ from repro.core.workload_model import (
     predict_runtime, predict_energy, predict_phases, energy_coefficient,
 )
 from repro.core.profiles import ProfileStore, k_auto
+from repro.core.policy import (
+    Policy, register_policy, make_policy, policy_names, parse_policy_spec,
+    EXPLORATIONS, FEASIBILITIES, OBJECTIVES,
+)
 from repro.core.algorithm import select_system, MODES
+from repro.core.result import SimResult, CampaignResult
+from repro.core.engine import Scheduler
 from repro.core.simulator import (
     SimConfig, FaultConfig, Workload, make_npb_workload,
     simulate_jax, simulate_py, sweep_k, run_campaign,

@@ -11,10 +11,12 @@ Paper §Algorithm (4 steps), for one job of program p:
      program will be submitted on the first released computing system' until
      the tables fill).
 
-All selectors are branchless jnp functions of row vectors, so the simulator
-can scan/vmap them.  ``mode`` is static.
+The selector family now lives in ``repro.core.policy`` as composable
+(exploration x feasibility x objective) ``Policy`` entries in a registry;
+this module keeps the historical mode-string surface as a thin shim.
 
-Modes:
+Modes (each a registry entry; see ``policy.policy_names()`` for the full
+registry including post-paper compositions):
   paper        — the algorithm above (faithful reproduction)
   queue_aware  — beyond-paper (the paper's stated future work): feasibility
                  tested on wait+run completion time instead of bare runtime
@@ -31,89 +33,27 @@ Modes:
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
+from repro.core.policy import (
+    BIG, LEGACY_MODES, make_policy, select,
+    _lex_argmin, _paper_rule,                       # noqa: F401 (re-export)
+)
 
-BIG = 1e30
-
-MODES = ("paper", "queue_aware", "predictive", "ucb", "fastest",
-         "greenest", "first_free", "random", "oracle")
-
-
-def _paper_rule(c_row, t_row, k):
-    """argmin C s.t. T <= T_min*(1+K); tie-break on T. Rows must be fully
-    known (no zeros)."""
-    t_min = t_row.min()
-    feasible = t_row <= t_min * (1.0 + k)
-    # lexicographic: minimize (C, T) over feasible
-    score = jnp.where(feasible, c_row, BIG)
-    cbest = score.min()
-    tie = score <= cbest * (1 + 1e-9)
-    t_score = jnp.where(tie, t_row, BIG)
-    return jnp.argmin(t_score)
+MODES = LEGACY_MODES
 
 
 def select_system(mode: str, *, c_row, t_row, runs_row, avail_row, k,
                   c_pred_row=None, t_pred_row=None, key=None):
     """Return selected system index (traced int32).
 
+    Legacy string-dispatch shim over the policy registry: equivalent to
+    ``policy.select(make_policy(mode), ...)`` with the historical default
+    hyperparameters (ucb_scale=0.5).  ``mode`` accepts any registered
+    policy name, not just the nine historical ones.
+
     c_row/t_row: learned tables for this program [S];
     runs_row: run counts [S]; avail_row: earliest start per system [S];
     k: allowed runtime-increase fraction; *_pred: model predictions [S].
     """
-    known = runs_row > 0
-    any_unknown = jnp.any(~known)
-
-    if mode == "paper":
-        # exploration: first released among unexplored systems
-        explore_score = jnp.where(~known, avail_row, BIG)
-        explore_idx = jnp.argmin(explore_score)
-        exploit_idx = _paper_rule(jnp.where(known, c_row, BIG),
-                                  jnp.where(known, t_row, BIG), k)
-        return jnp.where(any_unknown, explore_idx, exploit_idx)
-
-    if mode == "queue_aware":
-        # feasibility on completion = wait + T (paper's stated future work)
-        explore_score = jnp.where(~known, avail_row, BIG)
-        explore_idx = jnp.argmin(explore_score)
-        wait = avail_row - avail_row.min()
-        comp = jnp.where(known, t_row + wait, BIG)
-        exploit_idx = _paper_rule(jnp.where(known, c_row, BIG), comp, k)
-        return jnp.where(any_unknown, explore_idx, exploit_idx)
-
-    if mode == "predictive":
-        c_eff = jnp.where(known, c_row, c_pred_row)
-        t_eff = jnp.where(known, t_row, t_pred_row)
-        return _paper_rule(c_eff, t_eff, k)
-
-    if mode == "ucb":
-        # optimistic lower bound on C for unexplored systems: best known C
-        # scaled down => systems get tried when promising, not round-robin
-        c_floor = jnp.where(known, c_row, BIG).min() * 0.5
-        c_eff = jnp.where(known, c_row, c_floor)
-        t_eff = jnp.where(known, t_row, jnp.where(known, t_row, BIG).min())
-        return _paper_rule(c_eff, t_eff, k)
-
-    if mode == "fastest":
-        explore_score = jnp.where(~known, avail_row, BIG)
-        explore_idx = jnp.argmin(explore_score)
-        exploit_idx = jnp.argmin(jnp.where(known, t_row, BIG))
-        return jnp.where(any_unknown, explore_idx, exploit_idx)
-
-    if mode == "greenest":
-        explore_score = jnp.where(~known, avail_row, BIG)
-        explore_idx = jnp.argmin(explore_score)
-        exploit_idx = jnp.argmin(jnp.where(known, c_row, BIG))
-        return jnp.where(any_unknown, explore_idx, exploit_idx)
-
-    if mode == "first_free":
-        return jnp.argmin(avail_row)
-
-    if mode == "random":
-        return jax.random.randint(key, (), 0, c_row.shape[0])
-
-    if mode == "oracle":
-        # caller passes TRUE tables via c_pred/t_pred
-        return _paper_rule(c_pred_row, t_pred_row, k)
-
-    raise ValueError(f"unknown mode {mode!r}; known: {MODES}")
+    return select(make_policy(mode), c_row=c_row, t_row=t_row,
+                  runs_row=runs_row, avail_row=avail_row, k=k,
+                  c_pred_row=c_pred_row, t_pred_row=t_pred_row, key=key)

@@ -1,0 +1,401 @@
+"""Campaign-scale scheduling engine: one jitted core, one ``Scheduler`` facade.
+
+Models the paper's SCC: several computing systems (CC_1..CC_S), each a pool
+of interchangeable nodes with per-node free-times; a global job queue routed
+by a meta-scheduler (a ``repro.core.policy.Policy``).  Jobs are programs
+with known per-system ground-truth (T, C, E) from the phase model.
+
+The facade::
+
+    res = Scheduler("paper", seeds=range(4)).run(workload)        # seed axis
+    res = Scheduler(make_policy("ucb", k=k_grid, ucb_scale=u_grid),
+                    faults=fault_list).run(workload)    # fault x policy grid
+
+``Scheduler.run`` flattens the (fault x policy x seed) grid to one batch
+axis, vmaps the lax.scan core over it inside a single jit, and reshapes
+back into a structured ``SimResult``/``CampaignResult`` with named axes.
+Because Policy hyperparameters (K, ucb_scale) are PyTree *leaves*, a whole
+policy-hyperparameter grid shares one compilation — the static policy
+metadata (exploration/feasibility/objective) is the only thing that
+retraces.
+
+``totals_only=True`` keeps the per-job accounting in the scan carry instead
+of materializing [*grid, J] placement arrays — a 10^5-job x large-grid
+campaign returns [*grid] aggregates in O(grid) memory.
+
+Placement hot path: the per-step question "when are n_req[s] nodes of
+system s free?" is the n_req-th smallest entry of the node-free row,
+radix-selected directly (repro.kernels.kth_free: Pallas kernel on TPU,
+pure-jnp twin elsewhere, O(S·maxN) per step and bit-exact against the sort
+oracle); nodes are allocated by thresholding against that value.
+
+Fault model (DESIGN.md §7): per-job deterministic pseudo-random straggler
+slowdowns and node-failure restarts (checkpoint-restart semantics: a failed
+job re-does ``restart_overhead`` of its work; energy scales accordingly).
+The learned (C, T) tables absorb these — the paper's history mechanism
+routes around chronically degraded systems automatically.
+
+Maintenance/outage windows (scenario library, repro.data.scenarios): a
+system accepts no new placements while a window [t0, t1) is open; jobs
+whose earliest start falls inside a window are pushed to its end.  Windows
+must be sorted by start and non-overlapping per system.  Jobs already
+running ride through (drain semantics).
+
+Accounting notes: energy is attributed per job (allocated nodes over the
+job's span, paper eq. 2); idle energy of unallocated nodes is not attributed
+to the suite (the paper compares job-attributed energy).  Learned-table
+updates apply as each job is *placed* (the paper stores them at completion;
+for the paper's simultaneous-submission experiment the two coincide —
+distinct programs never wait on each other's profile entries).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import BIG, Policy, make_policy, select
+from repro.core.result import SimResult, CampaignResult
+from repro.core.workload_model import NPB_PROFILES, npb_tables
+from repro.kernels.kth_free import kth_free_time
+
+
+@dataclass(frozen=True)
+class SimConfig:
+    """Legacy single-run configuration (mode string + fault fields).
+
+    The ``Scheduler`` facade supersedes this for new code; it survives for
+    the ``simulate_jax``/``sweep_k``/``run_campaign`` shims and the python
+    differential mirror.  ``mode`` accepts any registered policy name.
+    """
+    mode: str = "paper"
+    k: float = 0.0                 # allowed runtime-increase fraction
+    straggler_prob: float = 0.0
+    straggler_factor: float = 2.0
+    failure_prob: float = 0.0
+    restart_overhead: float = 0.5
+    seed: int = 0
+    # True => profile tables pre-filled with ground truth (the paper's
+    # Figs 1-4 regime: 'all 5 previously run programs', Tables 3-4 full).
+    warm_start: bool = False
+    # kth-free placement dispatch: None = auto (Pallas on TPU, jnp radix
+    # select elsewhere); or force "pallas"/"pallas_interpret"/"jnp"/"sort".
+    placer: str | None = None
+
+    def policy(self) -> Policy:
+        return make_policy(self.mode, k=self.k)
+
+
+@dataclass(frozen=True)
+class FaultConfig:
+    """One point of a fault grid."""
+    straggler_prob: float = 0.0
+    straggler_factor: float = 2.0
+    failure_prob: float = 0.0
+    restart_overhead: float = 0.5
+
+
+@dataclass(frozen=True)
+class Workload:
+    """Static description of a job stream over P programs x S systems."""
+    prog: np.ndarray            # [J] int32 program ids
+    arrival: np.ndarray         # [J] f32 submit times
+    k_job: np.ndarray           # [J] f32 per-job K (fraction); NaN -> global k
+    n_req: np.ndarray           # [P, S] nodes needed
+    T_true: np.ndarray          # [P, S] runtime ground truth
+    C_true: np.ndarray          # [P, S] J/Mop ground truth
+    E_true: np.ndarray          # [P, S] Joules ground truth
+    T_pred: np.ndarray          # [P, S] phase-model predictions
+    C_pred: np.ndarray
+    n_nodes: np.ndarray         # [S] node counts
+    programs: tuple = ()        # names, for reports
+    systems: tuple = ()
+    # [S, W, 2] maintenance windows (start, end), sorted, non-overlapping
+    # per system; None = no outages.
+    outage: np.ndarray | None = None
+
+
+def make_npb_workload(systems, order=("BT", "EP", "IS", "LU", "SP"),
+                      arrivals=None, k_job=None, repeats: int = 1,
+                      pred_noise: float = 0.0, noise_seed: int = 0,
+                      outage=None):
+    """The paper's experiment: NPB suite submitted (simultaneously by
+    default) to the four JSCC systems. ``repeats`` re-submits the suite."""
+    programs = tuple(sorted(set(order)))
+    pidx = {p: i for i, p in enumerate(programs)}
+    C, T, N = npb_tables(systems, programs)
+    mops = np.array([NPB_PROFILES[p].flops / 1e6 for p in programs])
+    E = C * mops[:, None]
+    rng = np.random.default_rng(noise_seed)
+    noise = (1.0 + pred_noise * rng.standard_normal(C.shape)) if pred_noise else 1.0
+    seq = list(order) * repeats
+    J = len(seq)
+    return Workload(
+        prog=np.array([pidx[p] for p in seq], np.int32),
+        arrival=np.zeros(J, np.float32) if arrivals is None
+        else np.asarray(arrivals, np.float32),
+        k_job=np.full(J, np.nan, np.float32) if k_job is None
+        else np.asarray(k_job, np.float32),
+        n_req=N, T_true=T, C_true=C, E_true=E,
+        T_pred=T * noise, C_pred=C * noise,
+        n_nodes=np.array([s.n_nodes for s in systems], np.int32),
+        programs=programs, systems=tuple(s.name for s in systems),
+        outage=None if outage is None else np.asarray(outage, np.float32),
+    )
+
+
+def _fault_factor(key, j, fvec):
+    """fvec: [straggler_prob, straggler_factor, failure_prob, restart_ovh]."""
+    u = jax.random.uniform(jax.random.fold_in(key, j), (2,))
+    slow = jnp.where(u[0] < fvec[0], fvec[1], 1.0)
+    fail = jnp.where(u[1] < fvec[2], 1.0 + fvec[3], 1.0)
+    return slow * fail
+
+
+def _workload_arrays(w: Workload) -> dict:
+    """Workload -> the jnp pytree the jitted core consumes."""
+    max_n = int(w.n_nodes.max())
+    node_exists = np.arange(max_n)[None, :] < w.n_nodes[:, None]   # [S, maxN]
+    arrs = {
+        "free0": jnp.where(jnp.asarray(node_exists), 0.0, BIG),
+        "prog": jnp.asarray(w.prog),
+        "arrival": jnp.asarray(w.arrival),
+        "k_job": jnp.asarray(w.k_job),
+        "n_req": jnp.asarray(w.n_req),
+        "T_true": jnp.asarray(w.T_true),
+        "C_true": jnp.asarray(w.C_true),
+        "E_true": jnp.asarray(w.E_true),
+        "T_pred": jnp.asarray(w.T_pred),
+        "C_pred": jnp.asarray(w.C_pred),
+    }
+    if w.outage is not None and w.outage.size:
+        arrs["outage"] = jnp.asarray(w.outage, jnp.float32)
+    return arrs
+
+
+def _push_out_of_outage(avail, outage):
+    """Earliest start per system, pushed past any open maintenance window.
+    Windows sorted by start per system, so one in-order pass resolves
+    cascades (a push landing inside the next window is pushed again)."""
+    for wi in range(outage.shape[1]):
+        o0, o1 = outage[:, wi, 0], outage[:, wi, 1]
+        avail = jnp.where((avail >= o0) & (avail < o1), o1, avail)
+    return avail
+
+
+def _scan_sim(arrs: dict, policy: Policy, warm_start: bool,
+              placer: str | None, totals_only: bool, seed, fvec):
+    """One full simulation as a lax.scan; every argument traced except the
+    static (policy metadata, warm_start, placer, totals_only)."""
+    T_true, C_true, E_true = arrs["T_true"], arrs["C_true"], arrs["E_true"]
+    T_pred, C_pred = arrs["T_pred"], arrs["C_pred"]
+    n_req, prog, arrival = arrs["n_req"], arrs["prog"], arrs["arrival"]
+    outage = arrs.get("outage")
+    P, S = T_true.shape
+    J = prog.shape[0]
+    # per-job effective K: explicit workload overrides win over the policy's
+    kvec = jnp.where(jnp.isnan(arrs["k_job"]),
+                     jnp.asarray(policy.k, jnp.float32), arrs["k_job"])
+    # independent streams for selection and fault draws — folding a shared
+    # key with j and j+offset would collide once J exceeds the offset,
+    # which campaign streams (10k+ jobs) do
+    sel_key, fault_key = jax.random.split(jax.random.key(seed))
+
+    def step(carry, xs):
+        node_free, C_tab, T_tab, runs, acc = carry
+        j, p, arr, k = xs
+
+        nreq_row = n_req[p]                                      # [S]
+        kth = kth_free_time(node_free, nreq_row, force=placer)
+        avail = jnp.maximum(arr, kth)
+        if outage is not None:
+            avail = _push_out_of_outage(avail, outage)
+
+        sel = select(
+            policy, c_row=C_tab[p], t_row=T_tab[p], runs_row=runs[p],
+            avail_row=avail, k=k, c_pred_row=C_pred[p], t_pred_row=T_pred[p],
+            key=jax.random.fold_in(sel_key, j))
+
+        factor = _fault_factor(fault_key, j, fvec)
+        T_act = T_true[p, sel] * factor
+        C_act = C_true[p, sel] * factor
+        E_act = E_true[p, sel] * factor
+        start = avail[sel]
+        finish = start + T_act
+
+        # allocate the n_req earliest-free nodes of sel: everything strictly
+        # below the kth free time, plus first-by-index ties at it
+        free_sel = node_free[sel]
+        need = nreq_row[sel]
+        below = free_sel < kth[sel]
+        tie = free_sel == kth[sel]
+        tie_rank = jnp.cumsum(tie) - 1
+        take = below | (tie & (tie_rank < need - jnp.sum(below)))
+        node_free = node_free.at[sel].set(jnp.where(take, finish, free_sel))
+
+        n = runs[p, sel].astype(jnp.float32)
+        C_tab = C_tab.at[p, sel].set((C_tab[p, sel] * n + C_act) / (n + 1))
+        T_tab = T_tab.at[p, sel].set((T_tab[p, sel] * n + T_act) / (n + 1))
+        runs = runs.at[p, sel].add(1)
+
+        wait = start - arr
+        if totals_only:
+            sums, comps, fin_max, busy = acc
+            # Kahan-compensated f32 sums: 10^5 sequential adds would
+            # otherwise drift ~0.1% vs the full path's array reduction
+            # (x64 is unavailable, so compensation stands in for f64)
+            add = jnp.stack([E_act, wait, (wait + T_act) / T_act])
+            y = add - comps
+            t = sums + y
+            acc = (t, (t - sums) - y, jnp.maximum(fin_max, finish),
+                   busy.at[sel].add(T_act * need))
+            out = None
+        else:
+            out = (sel, start, finish, wait, E_act, T_act)
+        return (node_free, C_tab, T_tab, runs, acc), out
+
+    acc0 = ((jnp.zeros(3, jnp.float32), jnp.zeros(3, jnp.float32),
+             jnp.float32(0.0), jnp.zeros(S, jnp.float32))
+            if totals_only else ())
+    if warm_start:
+        carry0 = (arrs["free0"], C_true, T_true,
+                  jnp.ones((P, S), jnp.int32), acc0)
+    else:
+        carry0 = (arrs["free0"], jnp.zeros((P, S)), jnp.zeros((P, S)),
+                  jnp.zeros((P, S), jnp.int32), acc0)
+    xs = (jnp.arange(J), prog, arrival, kvec)
+    (node_free, C_tab, T_tab, runs, acc), ys = jax.lax.scan(step, carry0, xs)
+
+    tabs = {"C_tab": C_tab, "T_tab": T_tab, "runs": runs}
+    if totals_only:
+        sums, _, fin_max, busy = acc
+        return {"total_energy": sums[0], "makespan": fin_max,
+                "total_wait": sums[1], "slowdown_sum": sums[2],
+                "busy": busy, **tabs}
+    sel, start, finish, wait, E, T_act = ys
+    nodes = n_req[prog, sel]                                     # [J]
+    busy = jnp.zeros(S, jnp.float32).at[sel].add(T_act * nodes)
+    return {
+        "system": sel, "start": start, "finish": finish, "wait": wait,
+        "energy": E, "runtime": T_act, "nodes": nodes,
+        "total_energy": E.sum(), "makespan": finish.max(),
+        "total_wait": wait.sum(),
+        "slowdown_sum": ((wait + T_act) / T_act).sum(), "busy": busy,
+        **tabs,
+    }
+
+
+@partial(jax.jit, static_argnames=("warm_start", "placer", "totals_only"))
+def _batched_run(arrs, policy, seeds, faults, *, warm_start, placer,
+                 totals_only):
+    """vmap the scan core over a flat batch axis: policy leaves [B], seeds
+    [B], faults [B, 4].  One compile per (shapes, policy metadata,
+    warm_start, placer, totals_only)."""
+    return jax.vmap(
+        lambda pol, sd, fv: _scan_sim(arrs, pol, warm_start, placer,
+                                      totals_only, sd, fv))(
+        policy, seeds, faults)
+
+
+def _fault_vec(cfg: SimConfig | FaultConfig):
+    return jnp.array([cfg.straggler_prob, cfg.straggler_factor,
+                      cfg.failure_prob, cfg.restart_overhead], jnp.float32)
+
+
+class Scheduler:
+    """The one entry point: a policy (point or grid), a placement backend,
+    optional fault and seed grids — ``run`` simulates everything in a
+    single jitted call.
+
+    policy:     registered name, or a ``Policy`` (leaf-batch ``k`` /
+                ``ucb_scale`` with a shared leading axis to sweep a
+                hyperparameter grid in one compilation)
+    placer:     kth-free dispatch (None = auto; "pallas" / "jnp" / "sort" /
+                "pallas_interpret")
+    faults:     one FaultConfig (no axis) or an iterable (adds a ``fault``
+                axis); None = fault-free
+    seeds:      one int (no axis) or an iterable (adds a ``seed`` axis)
+    warm_start: profile tables pre-filled with ground truth
+
+    ``run(w)`` returns a ``SimResult`` when no axis is present, else a
+    ``CampaignResult`` with ``axes`` ordered (fault, policy, seed) — the
+    legacy campaign layout.  ``totals_only=True`` skips materializing
+    per-job arrays (campaign memory: [*grid] aggregates instead of
+    [*grid, J]).
+    """
+
+    def __init__(self, policy: str | Policy = "paper", *,
+                 placer: str | None = None, faults=None, seeds=0,
+                 warm_start: bool = False):
+        self.policy = make_policy(policy) if isinstance(policy, str) else policy
+        self.placer = placer
+        self.warm_start = bool(warm_start)
+        if faults is None or isinstance(faults, FaultConfig):
+            self.faults = faults
+        else:
+            self.faults = tuple(faults)
+        self.seeds = seeds if isinstance(seeds, (int, np.integer)) \
+            else tuple(int(s) for s in seeds)
+
+    def run(self, w: Workload, *, totals_only: bool = False):
+        pol = self.policy
+        k = jnp.asarray(pol.k, jnp.float32)
+        u = jnp.asarray(pol.ucb_scale, jnp.float32)
+        if k.ndim > 1 or u.ndim > 1:
+            raise ValueError("policy leaves must be scalars or 1-D grids; "
+                             "flatten K x ucb meshes with .ravel()")
+        has_policy_axis = k.ndim == 1 or u.ndim == 1
+        k, u = jnp.broadcast_arrays(jnp.atleast_1d(k), jnp.atleast_1d(u))
+        G = k.shape[0]
+
+        has_seed_axis = not isinstance(self.seeds, (int, np.integer))
+        seeds = jnp.atleast_1d(jnp.asarray(self.seeds, jnp.int32))
+        R = seeds.shape[0]
+
+        has_fault_axis = isinstance(self.faults, tuple)
+        if self.faults is None:
+            fmat = _fault_vec(FaultConfig())[None]
+        elif has_fault_axis:
+            fmat = jnp.stack([_fault_vec(f) for f in self.faults])
+        else:
+            fmat = _fault_vec(self.faults)[None]
+        F = fmat.shape[0]
+
+        B = F * G * R
+        kb = jnp.broadcast_to(k[None, :, None], (F, G, R)).reshape(B)
+        ub = jnp.broadcast_to(u[None, :, None], (F, G, R)).reshape(B)
+        sb = jnp.broadcast_to(seeds[None, None, :], (F, G, R)).reshape(B)
+        fb = jnp.broadcast_to(fmat[:, None, None, :], (F, G, R, 4))
+
+        out = _batched_run(
+            _workload_arrays(w), replace(pol, k=kb, ucb_scale=ub),
+            sb, fb.reshape(B, 4), warm_start=self.warm_start,
+            placer=self.placer, totals_only=totals_only)
+
+        axes, lead = [], []
+        for name, present, size in (("fault", has_fault_axis, F),
+                                    ("policy", has_policy_axis, G),
+                                    ("seed", has_seed_axis, R)):
+            if present:
+                axes.append(name)
+                lead.append(size)
+        out = jax.tree.map(
+            lambda x: x.reshape(tuple(lead) + x.shape[1:]), out)
+
+        meta = dict(axes=tuple(axes), n_jobs=int(len(w.prog)),
+                    n_nodes=np.asarray(w.n_nodes), programs=w.programs,
+                    systems=w.systems)
+        if not axes:
+            return SimResult(**out, **meta)
+        coords = {}
+        if has_fault_axis:
+            coords["fault"] = self.faults
+        if has_policy_axis:
+            coords["policy"] = replace(pol, k=k, ucb_scale=u)
+        if has_seed_axis:
+            coords["seed"] = self.seeds
+        return CampaignResult(**out, **meta, coords=coords)

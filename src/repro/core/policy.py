@@ -1,0 +1,336 @@
+"""Composable scheduling policies: registry-backed, PyTree-parameterized.
+
+The paper's algorithm is one point in a family of selection rules factored
+along three orthogonal axes:
+
+  exploration  — what to do about (program, system) pairs that were never
+                 run (empty profile-table rows):
+                   first_released   submit to the first released unexplored
+                                    system (the paper's exploration phase)
+                   predictive_fill  fill unknown entries from the phase-model
+                                    prediction (no exploration runs wasted)
+                   optimistic_bound optimistic C lower bound for unknowns
+                                    (best known C x ``ucb_scale``)
+  feasibility  — which runtime enters the paper's K constraint
+                 ``T <= T_min * (1 + K)``:
+                   bare             the learned runtime itself (the paper)
+                   queue_aware      wait + runtime completion estimate (the
+                                    paper's stated future work)
+                   none             no K guard (every system feasible)
+  objective    — what to minimize over the feasible set:
+                   min_c            energy coefficient C, tie-break on T
+                                    (the paper's step 4)
+                   min_t            runtime (performance-first)
+                   min_avail        earliest availability (multi-cluster FIFO)
+                   random           uniform random system
+                   oracle           the paper rule on the TRUE tables
+
+The K guard binds only for ``min_c``: for ``min_t`` it is vacuous by
+construction (the argmin-T system is always feasible), and ``min_avail``
+/ ``random`` / ``oracle`` skip the table axes entirely.  The feasibility
+*transform* still matters for ``min_t`` — ``queue_aware`` + ``min_t`` is
+earliest-finish-time ("fastest_completion").
+
+A ``Policy`` is a frozen dataclass registered as a JAX PyTree: the three
+axis names are static metadata (they pick code paths), while the
+hyperparameters ``k`` and ``ucb_scale`` are leaves — so the engine can
+``vmap`` one compiled simulation over a whole policy-hyperparameter grid
+(e.g. K x ucb-scale) exactly as it vmaps over fault grids.
+
+Named compositions live in a registry (``@register_policy``); the paper's
+nine historical modes are thin entries here, and a new policy registered
+with three lines is automatically picked up by the CLI (``--policy``), the
+benchmarks, and the jax-vs-python differential test suite.
+
+Both selector implementations live here: ``select`` (branchless jnp, used
+by the scan engine) and ``select_py`` (float64 numpy mirror, used by the
+differential oracle ``simulator.simulate_py``).  They are the same
+composition expressed twice; keep them in lockstep.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+BIG = 1e30
+
+EXPLORATIONS = ("first_released", "predictive_fill", "optimistic_bound")
+FEASIBILITIES = ("bare", "queue_aware", "none")
+OBJECTIVES = ("min_c", "min_t", "min_avail", "random", "oracle")
+
+
+@dataclass(frozen=True)
+class Policy:
+    """One point (or a leaf-batched grid) of the policy family.
+
+    ``exploration``/``feasibility``/``objective`` are static metadata;
+    ``k`` and ``ucb_scale`` are PyTree leaves and may be arrays — a Policy
+    whose leaves carry a leading axis is a policy *grid* the engine vmaps
+    over in a single compilation.
+    """
+    exploration: str = "first_released"
+    feasibility: str = "bare"
+    objective: str = "min_c"
+    name: str = ""
+    k: float | jax.Array = 0.0           # allowed runtime-increase fraction
+    ucb_scale: float | jax.Array = 0.5   # optimism scale for unexplored C
+
+    def __post_init__(self):
+        if self.exploration not in EXPLORATIONS:
+            raise ValueError(f"exploration {self.exploration!r} not in "
+                             f"{EXPLORATIONS}")
+        if self.feasibility not in FEASIBILITIES:
+            raise ValueError(f"feasibility {self.feasibility!r} not in "
+                             f"{FEASIBILITIES}")
+        if self.objective not in OBJECTIVES:
+            raise ValueError(f"objective {self.objective!r} not in "
+                             f"{OBJECTIVES}")
+
+    def with_params(self, **params) -> "Policy":
+        """New Policy with replaced hyperparameter leaves (k, ucb_scale)."""
+        return dataclasses.replace(self, **params)
+
+    @property
+    def grid_size(self) -> int | None:
+        """Number of grid points when leaf-batched, else None."""
+        k = np.asarray(self.k)
+        u = np.asarray(self.ucb_scale)
+        if k.ndim == 0 and u.ndim == 0:
+            return None
+        return int(np.broadcast_shapes(k.shape, u.shape)[0])
+
+
+jax.tree_util.register_dataclass(
+    Policy, data_fields=("k", "ucb_scale"),
+    meta_fields=("exploration", "feasibility", "objective", "name"))
+
+
+# ---------------------------------------------------------------- registry
+
+_REGISTRY: dict[str, object] = {}
+
+#: The paper's nine historical selector modes, in their historical order.
+LEGACY_MODES = ("paper", "queue_aware", "predictive", "ucb", "fastest",
+                "greenest", "first_free", "random", "oracle")
+
+
+def register_policy(name: str):
+    """Decorator: register a Policy factory under ``name``.
+
+    The factory takes hyperparameter overrides (``k=``, ``ucb_scale=``) and
+    returns a ``Policy``.  Registered names are picked up by
+    ``make_policy``, the ``--policy`` CLI flag, and the differential test
+    sweep over the whole registry.
+    """
+    def deco(factory):
+        if name in _REGISTRY:
+            raise ValueError(f"policy {name!r} already registered")
+        _REGISTRY[name] = factory
+        return factory
+    return deco
+
+
+def policy_names() -> tuple[str, ...]:
+    """All registered policy names (legacy modes first, then extensions)."""
+    extra = tuple(n for n in _REGISTRY if n not in LEGACY_MODES)
+    return LEGACY_MODES + extra
+
+
+def make_policy(name: str, **params) -> Policy:
+    """Instantiate a registered policy, overriding hyperparameters."""
+    try:
+        factory = _REGISTRY[name]
+    except KeyError:
+        raise ValueError(f"unknown policy {name!r}; registered: "
+                         f"{policy_names()}") from None
+    return factory(**params)
+
+
+def parse_policy_spec(spec: str, **defaults) -> Policy:
+    """Parse a CLI policy spec ``name`` or ``name:key=val,key=val``.
+
+    Values parse as floats; e.g. ``ucb:k=0.1,ucb_scale=0.25``.  Keyword
+    ``defaults`` fill hyperparameters the spec does not set explicitly
+    (the CLI passes its ``--k`` here so ``--policy paper`` matches the
+    legacy ``--mode paper`` default).
+    """
+    name, _, rest = spec.partition(":")
+    params = {}
+    if rest:
+        for item in rest.split(","):
+            key, _, val = item.partition("=")
+            if not _ or not key:
+                raise ValueError(f"bad policy param {item!r} in {spec!r} "
+                                 "(expected key=val)")
+            params[key.strip()] = float(val)
+    return make_policy(name.strip(), **{**defaults, **params})
+
+
+def _entry(name, exploration="first_released", feasibility="bare",
+           objective="min_c"):
+    @register_policy(name)
+    def factory(**params):
+        return Policy(exploration=exploration, feasibility=feasibility,
+                      objective=objective, name=name, **params)
+    return factory
+
+
+# The paper + the historical beyond-paper modes as registry entries.
+_entry("paper")                                   # the paper's algorithm
+_entry("queue_aware", feasibility="queue_aware")  # paper's future work
+_entry("predictive", exploration="predictive_fill")
+_entry("ucb", exploration="optimistic_bound")
+_entry("fastest", objective="min_t")
+_entry("greenest", feasibility="none")            # argmin C, no K guard
+_entry("first_free", objective="min_avail")
+_entry("random", objective="random")
+_entry("oracle", objective="oracle")
+# New compositions the factored space exposes for free:
+_entry("fastest_completion", feasibility="queue_aware", objective="min_t")
+_entry("predictive_queue_aware", exploration="predictive_fill",
+       feasibility="queue_aware")
+
+
+# ------------------------------------------------------------ jnp selector
+
+def _lex_argmin(c_row, t_row, feasible):
+    """Masked lexicographic argmin: smallest C over ``feasible``, exact-tie
+    break on T.  If no system is feasible (possible only for pathological
+    K < 0 or sentinel-saturated rows), falls back to considering all —
+    never returns an out-of-range or BIG-biased index."""
+    feasible = jnp.where(jnp.any(feasible), feasible, True)
+    cbest = jnp.where(feasible, c_row, BIG).min()
+    tie = feasible & (c_row == cbest)
+    return jnp.argmin(jnp.where(tie, t_row, BIG))
+
+
+def _paper_rule(c_row, t_row, k):
+    """The paper's step 4: argmin C s.t. T <= T_min*(1+K); tie-break on T.
+    Rows must be fully known (no zeros)."""
+    feasible = t_row <= t_row.min() * (1.0 + k)
+    return _lex_argmin(c_row, t_row, feasible)
+
+
+def select(policy: Policy, *, c_row, t_row, runs_row, avail_row, k,
+           c_pred_row=None, t_pred_row=None, key=None):
+    """Composed branchless selector: returns the chosen system index
+    (traced int32) for one job.
+
+    c_row/t_row: learned tables for this program [S]; runs_row: run counts
+    [S]; avail_row: earliest start per system [S]; k: allowed
+    runtime-increase fraction (per-job effective value — overrides
+    ``policy.k``); *_pred: phase-model predictions [S] (the TRUE tables for
+    the oracle objective); key: PRNG key for the random objective.
+    """
+    obj = policy.objective
+    if obj == "min_avail":
+        return jnp.argmin(avail_row)
+    if obj == "random":
+        return jax.random.randint(key, (), 0, c_row.shape[0])
+    if obj == "oracle":
+        return _paper_rule(c_pred_row, t_pred_row, k)
+
+    known = runs_row > 0
+
+    expl = policy.exploration
+    if expl == "first_released":
+        c_eff = jnp.where(known, c_row, BIG)
+        t_eff = jnp.where(known, t_row, BIG)
+    elif expl == "predictive_fill":
+        c_eff = jnp.where(known, c_row, c_pred_row)
+        t_eff = jnp.where(known, t_row, t_pred_row)
+    else:  # optimistic_bound
+        # optimistic lower bound on C for unexplored systems: best known C
+        # scaled by ucb_scale => systems get tried when promising
+        c_floor = jnp.where(known, c_row, BIG).min() * policy.ucb_scale
+        c_eff = jnp.where(known, c_row, c_floor)
+        t_eff = jnp.where(known, t_row, jnp.where(known, t_row, BIG).min())
+
+    feas = policy.feasibility
+    if feas == "queue_aware":
+        wait = avail_row - avail_row.min()
+        t_sel = jnp.where(t_eff < BIG, t_eff + wait, BIG)
+    else:  # "bare" and "none" share the runtime estimate
+        t_sel = t_eff
+
+    if obj == "min_c":
+        if feas == "none":
+            exploit = _lex_argmin(c_eff, t_sel,
+                                  jnp.ones_like(c_eff, dtype=bool))
+        else:
+            exploit = _paper_rule(c_eff, t_sel, k)
+    else:  # min_t
+        exploit = jnp.argmin(t_sel)
+
+    if expl == "first_released":
+        explore = jnp.argmin(jnp.where(~known, avail_row, BIG))
+        return jnp.where(jnp.any(~known), explore, exploit)
+    return exploit
+
+
+# ---------------------------------------------------------- numpy mirror
+
+def _lex_argmin_py(c_row, t_row, feasible):
+    if not feasible.any():
+        feasible = np.ones_like(feasible, dtype=bool)
+    cbest = np.where(feasible, c_row, BIG).min()
+    tie = feasible & (c_row == cbest)
+    return int(np.argmin(np.where(tie, t_row, BIG)))
+
+
+def _paper_rule_py(c_row, t_row, k):
+    feasible = t_row <= t_row.min() * (1.0 + k)
+    return _lex_argmin_py(c_row, t_row, feasible)
+
+
+def select_py(policy: Policy, *, c_row, t_row, runs_row, avail_row, k,
+              c_pred_row=None, t_pred_row=None, rand_sel=None):
+    """float64 numpy mirror of ``select`` for differential testing.  The
+    random objective cannot be mirrored in numpy; the caller replays the
+    jax PRNG stream and passes the draw as ``rand_sel``."""
+    obj = policy.objective
+    if obj == "min_avail":
+        return int(np.argmin(avail_row))
+    if obj == "random":
+        return rand_sel
+    if obj == "oracle":
+        return _paper_rule_py(c_pred_row, t_pred_row, k)
+
+    known = runs_row > 0
+
+    expl = policy.exploration
+    if expl == "first_released":
+        c_eff = np.where(known, c_row, BIG)
+        t_eff = np.where(known, t_row, BIG)
+    elif expl == "predictive_fill":
+        c_eff = np.where(known, c_row, c_pred_row)
+        t_eff = np.where(known, t_row, t_pred_row)
+    else:  # optimistic_bound
+        c_floor = np.where(known, c_row, BIG).min() * float(policy.ucb_scale)
+        c_eff = np.where(known, c_row, c_floor)
+        t_eff = np.where(known, t_row, np.where(known, t_row, BIG).min())
+
+    feas = policy.feasibility
+    if feas == "queue_aware":
+        wait = avail_row - avail_row.min()
+        t_sel = np.where(t_eff < BIG, t_eff + wait, BIG)
+    else:
+        t_sel = t_eff
+
+    if obj == "min_c":
+        if feas == "none":
+            exploit = _lex_argmin_py(c_eff, t_sel,
+                                     np.ones(len(c_eff), dtype=bool))
+        else:
+            exploit = _paper_rule_py(c_eff, t_sel, k)
+    else:  # min_t
+        exploit = int(np.argmin(t_sel))
+
+    if expl == "first_released" and not known.all():
+        return int(np.argmin(np.where(~known, avail_row, BIG)))
+    return exploit

@@ -1,0 +1,139 @@
+"""Structured simulation results with named axes and derived metrics.
+
+``SimResult`` wraps one simulation's outputs; ``CampaignResult`` is the
+same shape with leading named axes (any of ``fault``/``policy``/``seed``)
+plus the grid coordinates they index.  Every array field carries the
+leading axes, so ``res.total_energy[f, g, r]`` and
+``res.system[f, g, r, j]`` line up by construction.
+
+Derived metrics (properties, cheap to compute lazily):
+  mean_slowdown   mean over jobs of (wait + runtime) / runtime
+  mean_wait       total_wait / n_jobs
+  utilization     per-system busy node-seconds / (nodes * makespan)
+
+``to_dict()`` flattens everything (including the derived metrics) for
+benchmark CSVs and the legacy dict-based callers; per-job arrays are
+``None`` on results produced with ``totals_only=True``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, fields
+
+import numpy as np
+import jax.numpy as jnp
+
+#: Array fields carrying only the leading (grid) axes.
+_TOTAL_FIELDS = ("total_energy", "makespan", "total_wait", "slowdown_sum")
+#: Array fields with a trailing per-job axis [..., J]; None if totals_only.
+_PERJOB_FIELDS = ("system", "start", "finish", "wait", "energy", "runtime",
+                  "nodes")
+#: Learned-table fields [..., P, S] and the per-system busy field [..., S].
+_TABLE_FIELDS = ("C_tab", "T_tab", "runs", "busy")
+
+
+@dataclass(frozen=True)
+class SimResult:
+    """One simulation run (``axes == ()``) or a stacked grid of them."""
+    # totals [*axes]
+    total_energy: jnp.ndarray
+    makespan: jnp.ndarray
+    total_wait: jnp.ndarray
+    slowdown_sum: jnp.ndarray
+    # per-system [*axes, S]
+    busy: jnp.ndarray
+    # learned tables [*axes, P, S]
+    C_tab: jnp.ndarray
+    T_tab: jnp.ndarray
+    runs: jnp.ndarray
+    # per-job [*axes, J]; None when produced with totals_only=True
+    system: jnp.ndarray | None = None
+    start: jnp.ndarray | None = None
+    finish: jnp.ndarray | None = None
+    wait: jnp.ndarray | None = None
+    energy: jnp.ndarray | None = None
+    runtime: jnp.ndarray | None = None
+    nodes: jnp.ndarray | None = None
+    # metadata
+    axes: tuple = ()
+    n_jobs: int = 0
+    n_nodes: np.ndarray | None = None        # [S]
+    programs: tuple = ()
+    systems: tuple = ()
+
+    @property
+    def totals_only(self) -> bool:
+        return self.system is None
+
+    @property
+    def mean_wait(self):
+        return self.total_wait / max(self.n_jobs, 1)
+
+    @property
+    def mean_slowdown(self):
+        """Mean over jobs of (wait + runtime) / runtime; 1.0 = no queueing."""
+        return self.slowdown_sum / max(self.n_jobs, 1)
+
+    @property
+    def utilization(self):
+        """Per-system busy node-seconds / (node count x makespan), shaped
+        [*axes, S]."""
+        denom = self.n_nodes * jnp.expand_dims(self.makespan, -1)
+        return self.busy / denom
+
+    def to_dict(self, arrays: bool = True) -> dict:
+        """Flatten to a plain dict (the legacy ``simulate_jax`` schema plus
+        the derived metrics).  ``arrays=False`` keeps only totals/derived —
+        handy for CSV rows."""
+        out = {k: getattr(self, k) for k in _TOTAL_FIELDS}
+        out["mean_wait"] = self.mean_wait
+        out["mean_slowdown"] = self.mean_slowdown
+        out["utilization"] = self.utilization
+        if arrays:
+            for k in _TABLE_FIELDS:
+                out[k] = getattr(self, k)
+            for k in _PERJOB_FIELDS:
+                if getattr(self, k) is not None:
+                    out[k] = getattr(self, k)
+        return out
+
+    def __repr__(self):
+        ax = ",".join(self.axes) if self.axes else "scalar"
+        kind = "totals" if self.totals_only else "full"
+        return (f"{type(self).__name__}(axes=[{ax}], jobs={self.n_jobs}, "
+                f"{kind})")
+
+
+@dataclass(frozen=True, repr=False)
+class CampaignResult(SimResult):
+    """A grid of simulations with named leading axes and their coordinates.
+
+    ``coords`` maps each axis name to what it indexes: ``fault`` -> the
+    FaultConfig tuple, ``policy`` -> the leaf-batched Policy, ``seed`` ->
+    the seed tuple.
+    """
+    coords: dict = field(default_factory=dict)
+
+    def index(self, **sel) -> "SimResult":
+        """Select one point per named axis, e.g. ``res.index(policy=3,
+        seed=0)``; axes not named are kept."""
+        bad = set(sel) - set(self.axes)
+        if bad:
+            raise KeyError(f"unknown axes {sorted(bad)}; have {self.axes}")
+        not_int = {a: v for a, v in sel.items()
+                   if not isinstance(v, (int, np.integer))}
+        if not_int:
+            raise TypeError(f"index() takes integer points, got {not_int}; "
+                            "slice arrays directly for ranges")
+        idx = tuple(sel.get(a, slice(None)) for a in self.axes)
+        kept = tuple(a for a in self.axes if a not in sel)
+        kw = {}
+        for f in fields(SimResult):
+            v = getattr(self, f.name)
+            kw[f.name] = v[idx] if (f.name in _TOTAL_FIELDS + _PERJOB_FIELDS
+                                    + _TABLE_FIELDS and v is not None) else v
+        kw["axes"] = kept
+        if kept:
+            coords = {a: v for a, v in self.coords.items() if a in kept}
+            return CampaignResult(coords=coords, **kw)
+        return SimResult(**kw)

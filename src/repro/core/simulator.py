@@ -1,279 +1,44 @@
-"""Discrete-event multi-system JMS simulator — campaign-scale engine.
+"""Legacy simulator surface + float64 python differential mirror.
 
-Models the paper's SCC: several computing systems (CC_1..CC_S), each a pool
-of interchangeable nodes with per-node free-times; a global job queue routed
-by a meta-scheduler (repro.core.algorithm).  Jobs are programs with known
-per-system ground-truth (T, C, E) from the phase model.
+The scan core and batching now live in ``repro.core.engine`` behind the
+``Scheduler`` facade; the policy family lives in ``repro.core.policy``.
+This module keeps the historical entry points working unchanged:
 
-Two equivalent implementations:
-  - ``simulate_jax``: lax.scan over the job stream through ONE jitted,
-    vmap-batched core shared with ``sweep_k`` and ``run_campaign`` — the
-    whole (fault-config x K x seed) grid of a campaign is a single jit;
-  - ``simulate_py``: plain-Python mirror covering every mode in
-    ``algorithm.MODES``, used for differential testing.
+  - ``simulate_jax(w, scfg)``      == ``Scheduler(policy).run(w)``
+  - ``sweep_k(w, scfg, ks)``       == ``Scheduler(policy-with-K-grid).run(w)``
+  - ``run_campaign(w, scfg, ...)`` == ``Scheduler(policy, faults, seeds).run(w)``
 
-Placement hot path: the per-step question "when are n_req[s] nodes of
-system s free?" is the n_req-th smallest entry of the node-free row.  The
-seed implementation re-sorted the full [S, maxN] matrix every step; the
-engine now radix-selects the kth value directly (repro.kernels.kth_free:
-Pallas kernel on TPU, pure-jnp twin elsewhere, O(S·maxN) per step and
-bit-exact against the sort oracle), and allocates nodes by thresholding
-against that value instead of double-argsort ranking.  Which of several
-nodes tied at the threshold get allocated is unspecified — they carry the
-same free time, so the node-free multiset (and hence every downstream
-placement) is identical either way.
+all returning the historical dict-of-arrays schema (now a superset: the
+structured-result derived metrics ride along).  They are thin shims over
+the same jitted engine, so their placements and totals are bit-identical
+to the facade's — asserted in tests/test_engine_api.py.
 
-Fault model (DESIGN.md §7): per-job deterministic pseudo-random straggler
-slowdowns and node-failure restarts (checkpoint-restart semantics: a failed
-job re-does ``restart_overhead`` of its work; energy scales accordingly).
-The learned (C, T) tables absorb these — the paper's history mechanism
-routes around chronically degraded systems automatically.
-
-Maintenance/outage windows (scenario library, repro.data.scenarios): a
-system accepts no new placements while a window [t0, t1) is open; jobs
-whose earliest start falls inside a window are pushed to its end.  Windows
-must be sorted by start and non-overlapping per system.  Jobs already
-running ride through (drain semantics).
-
-Accounting notes: energy is attributed per job (allocated nodes over the
-job's span, paper eq. 2); idle energy of unallocated nodes is not attributed
-to the suite (the paper compares job-attributed energy).  Learned-table
-updates apply as each job is *placed* (the paper stores them at completion;
-for the paper's simultaneous-submission experiment the two coincide —
-distinct programs never wait on each other's profile entries).
+``simulate_py`` is the plain-Python float64 mirror used for differential
+testing.  It dispatches through the same policy registry as the engine
+(``policy.select_py``), so every registered policy — including ones added
+after this writing — is differential-testable with zero extra mirror code.
 """
 
 from __future__ import annotations
-
-from dataclasses import dataclass
-from functools import partial
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.algorithm import select_system
-from repro.core.systems import ComputeSystem
-from repro.core.workload_model import (
-    NPB_PROFILES, NPB_NODES, npb_tables, predict_energy)
-from repro.kernels.kth_free import kth_free_time
-
-BIG = 1e30
-
-
-@dataclass(frozen=True)
-class SimConfig:
-    mode: str = "paper"
-    k: float = 0.0                 # allowed runtime-increase fraction
-    straggler_prob: float = 0.0
-    straggler_factor: float = 2.0
-    failure_prob: float = 0.0
-    restart_overhead: float = 0.5
-    seed: int = 0
-    # True => profile tables pre-filled with ground truth (the paper's
-    # Figs 1-4 regime: 'all 5 previously run programs', Tables 3-4 full).
-    warm_start: bool = False
-    # kth-free placement dispatch: None = auto (Pallas on TPU, jnp radix
-    # select elsewhere); or force "pallas"/"pallas_interpret"/"jnp"/"sort".
-    placer: str | None = None
-
-
-@dataclass(frozen=True)
-class FaultConfig:
-    """One point of a fault grid for ``run_campaign``."""
-    straggler_prob: float = 0.0
-    straggler_factor: float = 2.0
-    failure_prob: float = 0.0
-    restart_overhead: float = 0.5
-
-
-@dataclass(frozen=True)
-class Workload:
-    """Static description of a job stream over P programs x S systems."""
-    prog: np.ndarray            # [J] int32 program ids
-    arrival: np.ndarray         # [J] f32 submit times
-    k_job: np.ndarray           # [J] f32 per-job K (fraction); NaN -> global k
-    n_req: np.ndarray           # [P, S] nodes needed
-    T_true: np.ndarray          # [P, S] runtime ground truth
-    C_true: np.ndarray          # [P, S] J/Mop ground truth
-    E_true: np.ndarray          # [P, S] Joules ground truth
-    T_pred: np.ndarray          # [P, S] phase-model predictions
-    C_pred: np.ndarray
-    n_nodes: np.ndarray         # [S] node counts
-    programs: tuple = ()        # names, for reports
-    systems: tuple = ()
-    # [S, W, 2] maintenance windows (start, end), sorted, non-overlapping
-    # per system; None = no outages.
-    outage: np.ndarray | None = None
-
-
-def make_npb_workload(systems, order=("BT", "EP", "IS", "LU", "SP"),
-                      arrivals=None, k_job=None, repeats: int = 1,
-                      pred_noise: float = 0.0, noise_seed: int = 0,
-                      outage=None):
-    """The paper's experiment: NPB suite submitted (simultaneously by
-    default) to the four JSCC systems. ``repeats`` re-submits the suite."""
-    programs = tuple(sorted(set(order)))
-    pidx = {p: i for i, p in enumerate(programs)}
-    C, T, N = npb_tables(systems, programs)
-    mops = np.array([NPB_PROFILES[p].flops / 1e6 for p in programs])
-    E = C * mops[:, None]
-    rng = np.random.default_rng(noise_seed)
-    noise = (1.0 + pred_noise * rng.standard_normal(C.shape)) if pred_noise else 1.0
-    seq = list(order) * repeats
-    J = len(seq)
-    return Workload(
-        prog=np.array([pidx[p] for p in seq], np.int32),
-        arrival=np.zeros(J, np.float32) if arrivals is None
-        else np.asarray(arrivals, np.float32),
-        k_job=np.full(J, np.nan, np.float32) if k_job is None
-        else np.asarray(k_job, np.float32),
-        n_req=N, T_true=T, C_true=C, E_true=E,
-        T_pred=T * noise, C_pred=C * noise,
-        n_nodes=np.array([s.n_nodes for s in systems], np.int32),
-        programs=programs, systems=tuple(s.name for s in systems),
-        outage=None if outage is None else np.asarray(outage, np.float32),
-    )
-
-
-def _fault_factor(key, j, fvec):
-    """fvec: [straggler_prob, straggler_factor, failure_prob, restart_ovh]."""
-    u = jax.random.uniform(jax.random.fold_in(key, j), (2,))
-    slow = jnp.where(u[0] < fvec[0], fvec[1], 1.0)
-    fail = jnp.where(u[1] < fvec[2], 1.0 + fvec[3], 1.0)
-    return slow * fail
-
-
-def _workload_arrays(w: Workload) -> dict:
-    """Workload -> the jnp pytree the jitted core consumes."""
-    max_n = int(w.n_nodes.max())
-    node_exists = np.arange(max_n)[None, :] < w.n_nodes[:, None]   # [S, maxN]
-    arrs = {
-        "free0": jnp.where(jnp.asarray(node_exists), 0.0, BIG),
-        "prog": jnp.asarray(w.prog),
-        "arrival": jnp.asarray(w.arrival),
-        "n_req": jnp.asarray(w.n_req),
-        "T_true": jnp.asarray(w.T_true),
-        "C_true": jnp.asarray(w.C_true),
-        "E_true": jnp.asarray(w.E_true),
-        "T_pred": jnp.asarray(w.T_pred),
-        "C_pred": jnp.asarray(w.C_pred),
-    }
-    if w.outage is not None and w.outage.size:
-        arrs["outage"] = jnp.asarray(w.outage, jnp.float32)
-    return arrs
-
-
-def _push_out_of_outage(avail, outage):
-    """Earliest start per system, pushed past any open maintenance window.
-    Windows sorted by start per system, so one in-order pass resolves
-    cascades (a push landing inside the next window is pushed again)."""
-    for wi in range(outage.shape[1]):
-        o0, o1 = outage[:, wi, 0], outage[:, wi, 1]
-        avail = jnp.where((avail >= o0) & (avail < o1), o1, avail)
-    return avail
-
-
-def _scan_sim(arrs: dict, mode: str, warm_start: bool, placer: str | None,
-              kvec, seed, fvec):
-    """One full simulation as a lax.scan; every argument traced except the
-    static (mode, warm_start, placer)."""
-    T_true, C_true, E_true = arrs["T_true"], arrs["C_true"], arrs["E_true"]
-    T_pred, C_pred = arrs["T_pred"], arrs["C_pred"]
-    n_req, prog, arrival = arrs["n_req"], arrs["prog"], arrs["arrival"]
-    outage = arrs.get("outage")
-    P, S = T_true.shape
-    J = prog.shape[0]
-    # independent streams for selection and fault draws — folding a shared
-    # key with j and j+offset would collide once J exceeds the offset,
-    # which campaign streams (10k+ jobs) do
-    sel_key, fault_key = jax.random.split(jax.random.key(seed))
-
-    def step(carry, xs):
-        node_free, C_tab, T_tab, runs = carry
-        j, p, arr, k = xs
-
-        nreq_row = n_req[p]                                      # [S]
-        kth = kth_free_time(node_free, nreq_row, force=placer)
-        avail = jnp.maximum(arr, kth)
-        if outage is not None:
-            avail = _push_out_of_outage(avail, outage)
-
-        sel = select_system(
-            mode, c_row=C_tab[p], t_row=T_tab[p], runs_row=runs[p],
-            avail_row=avail, k=k, c_pred_row=C_pred[p], t_pred_row=T_pred[p],
-            key=jax.random.fold_in(sel_key, j))
-
-        factor = _fault_factor(fault_key, j, fvec)
-        T_act = T_true[p, sel] * factor
-        C_act = C_true[p, sel] * factor
-        E_act = E_true[p, sel] * factor
-        start = avail[sel]
-        finish = start + T_act
-
-        # allocate the n_req earliest-free nodes of sel: everything strictly
-        # below the kth free time, plus first-by-index ties at it
-        free_sel = node_free[sel]
-        need = nreq_row[sel]
-        below = free_sel < kth[sel]
-        tie = free_sel == kth[sel]
-        tie_rank = jnp.cumsum(tie) - 1
-        take = below | (tie & (tie_rank < need - jnp.sum(below)))
-        node_free = node_free.at[sel].set(jnp.where(take, finish, free_sel))
-
-        n = runs[p, sel].astype(jnp.float32)
-        C_tab = C_tab.at[p, sel].set((C_tab[p, sel] * n + C_act) / (n + 1))
-        T_tab = T_tab.at[p, sel].set((T_tab[p, sel] * n + T_act) / (n + 1))
-        runs = runs.at[p, sel].add(1)
-
-        out = (sel, start, finish, start - arr, E_act, T_act)
-        return (node_free, C_tab, T_tab, runs), out
-
-    if warm_start:
-        carry0 = (arrs["free0"], C_true, T_true, jnp.ones((P, S), jnp.int32))
-    else:
-        carry0 = (arrs["free0"], jnp.zeros((P, S)), jnp.zeros((P, S)),
-                  jnp.zeros((P, S), jnp.int32))
-    xs = (jnp.arange(J), prog, arrival, kvec)
-    (node_free, C_tab, T_tab, runs), (sel, start, finish, wait, E, T_act) = \
-        jax.lax.scan(step, carry0, xs)
-
-    return {
-        "system": sel, "start": start, "finish": finish, "wait": wait,
-        "energy": E, "runtime": T_act,
-        "total_energy": E.sum(), "makespan": finish.max(),
-        "total_wait": wait.sum(),
-        "C_tab": C_tab, "T_tab": T_tab, "runs": runs,
-    }
-
-
-@partial(jax.jit, static_argnames=("mode", "warm_start", "placer"))
-def _batched_sim(arrs, kvec, seeds, faults, *, mode, warm_start, placer):
-    """vmap the scan core over a flat batch axis: kvec [B, J], seeds [B],
-    faults [B, 4].  One compile per (shapes, mode, warm_start, placer)."""
-    return jax.vmap(
-        lambda kv, sd, fv: _scan_sim(arrs, mode, warm_start, placer,
-                                     kv, sd, fv))(kvec, seeds, faults)
-
-
-def _fault_vec(scfg: SimConfig | FaultConfig):
-    return jnp.array([scfg.straggler_prob, scfg.straggler_factor,
-                      scfg.failure_prob, scfg.restart_overhead], jnp.float32)
-
-
-def _kvec(w: Workload, k):
-    """Per-job K: the workload's explicit overrides win over the global k."""
-    kj = jnp.asarray(w.k_job)
-    return jnp.where(jnp.isnan(kj), jnp.float32(k), kj)
+from repro.core.engine import (                     # noqa: F401 (re-exports)
+    BIG, FaultConfig, Scheduler, SimConfig, Workload, make_npb_workload,
+)
+from repro.core.policy import (                     # noqa: F401 (re-exports)
+    make_policy, select_py, _paper_rule_py,
+)
 
 
 def simulate_jax(w: Workload, scfg: SimConfig):
-    """Run the sim; returns dict of per-job arrays + totals (all jnp)."""
-    out = _batched_sim(
-        _workload_arrays(w), _kvec(w, scfg.k)[None],
-        jnp.asarray([scfg.seed], jnp.int32), _fault_vec(scfg)[None],
-        mode=scfg.mode, warm_start=scfg.warm_start, placer=scfg.placer)
-    return jax.tree.map(lambda x: x[0], out)
+    """Run the sim; returns dict of per-job arrays + totals (all jnp).
+
+    Legacy shim: ``Scheduler(scfg.policy(), ...).run(w).to_dict()``.
+    """
+    return _scheduler_for(scfg).run(w).to_dict()
 
 
 def sweep_k(w: Workload, scfg: SimConfig, ks):
@@ -281,15 +46,11 @@ def sweep_k(w: Workload, scfg: SimConfig, ks):
 
     As in ``run_campaign``, explicit per-job overrides in ``w.k_job`` take
     precedence over the swept K at their positions; jobs with NaN k_job
-    (the default) follow the grid."""
-    ks = jnp.asarray(ks, jnp.float32)
-    B = ks.shape[0]
-    kvec = jax.vmap(lambda k: _kvec(w, k))(ks)
-    return _batched_sim(
-        _workload_arrays(w), kvec,
-        jnp.full((B,), scfg.seed, jnp.int32),
-        jnp.broadcast_to(_fault_vec(scfg), (B, 4)),
-        mode=scfg.mode, warm_start=scfg.warm_start, placer=scfg.placer)
+    (the default) follow the grid.  Legacy shim: a K-grid policy is one
+    leaf-batched ``Policy``.
+    """
+    pol = make_policy(scfg.mode, k=jnp.asarray(list(ks), jnp.float32))
+    return _scheduler_for(scfg, policy=pol).run(w).to_dict()
 
 
 def run_campaign(w: Workload, scfg: SimConfig, ks=None, seeds=None,
@@ -305,92 +66,42 @@ def run_campaign(w: Workload, scfg: SimConfig, ks=None, seeds=None,
     [..., J], totals become [...]).  Per-job K overrides in ``w.k_job``
     take precedence over the swept K at their positions.
     """
-    ks = jnp.asarray([scfg.k] if ks is None else list(ks), jnp.float32)
-    seeds = jnp.asarray([scfg.seed] if seeds is None else list(seeds),
-                        jnp.int32)
-    fmat = (_fault_vec(scfg)[None] if faults is None
-            else jnp.stack([_fault_vec(f) for f in faults]))
-    F, K, R = fmat.shape[0], ks.shape[0], seeds.shape[0]
+    ks = [scfg.k] if ks is None else list(ks)
+    pol = make_policy(scfg.mode, k=jnp.asarray(ks, jnp.float32))
+    seeds = [scfg.seed] if seeds is None else list(seeds)
+    sched = _scheduler_for(scfg, policy=pol, seeds=seeds,
+                           faults=None if faults is None else tuple(faults))
+    return sched.run(w).to_dict()
 
-    kvec_k = jax.vmap(lambda k: _kvec(w, k))(ks)                   # [K, J]
-    kvec = jnp.broadcast_to(kvec_k[None, :, None, :], (F, K, R, kvec_k.shape[1]))
-    seed_b = jnp.broadcast_to(seeds[None, None, :], (F, K, R))
-    fault_b = jnp.broadcast_to(fmat[:, None, None, :], (F, K, R, 4))
 
-    B = F * K * R
-    out = _batched_sim(
-        _workload_arrays(w), kvec.reshape(B, -1), seed_b.reshape(B),
-        fault_b.reshape(B, 4),
-        mode=scfg.mode, warm_start=scfg.warm_start, placer=scfg.placer)
-    lead = (K, R) if faults is None else (F, K, R)
-    return jax.tree.map(lambda x: x.reshape(lead + x.shape[1:]), out)
+def _scheduler_for(scfg: SimConfig, policy=None, seeds=None, faults=None):
+    """SimConfig -> Scheduler, preserving the legacy axis conventions."""
+    return Scheduler(
+        scfg.policy() if policy is None else policy,
+        placer=scfg.placer, warm_start=scfg.warm_start,
+        seeds=scfg.seed if seeds is None else seeds,
+        faults=FaultConfig(
+            straggler_prob=scfg.straggler_prob,
+            straggler_factor=scfg.straggler_factor,
+            failure_prob=scfg.failure_prob,
+            restart_overhead=scfg.restart_overhead,
+        ) if faults is None else faults)
 
 
 # ------------------------------------------------------------ python mirror
 
-def _paper_rule_py(c_row, t_row, k):
-    """numpy twin of algorithm._paper_rule."""
-    t_min = t_row.min()
-    feasible = t_row <= t_min * (1.0 + k)
-    score = np.where(feasible, c_row, BIG)
-    cbest = score.min()
-    tie = score <= cbest * (1 + 1e-9)
-    return int(np.argmin(np.where(tie, t_row, BIG)))
-
-
-def _select_py(mode, *, c_row, t_row, runs_row, avail_row, k,
-               c_pred_row, t_pred_row, rand_sel):
-    """numpy mirror of algorithm.select_system, every mode in MODES."""
-    known = runs_row > 0
-    any_unknown = bool((~known).any())
-    explore = int(np.argmin(np.where(~known, avail_row, BIG)))
-
-    if mode == "paper":
-        if any_unknown:
-            return explore
-        return _paper_rule_py(np.where(known, c_row, BIG),
-                              np.where(known, t_row, BIG), k)
-    if mode == "queue_aware":
-        if any_unknown:
-            return explore
-        wait = avail_row - avail_row.min()
-        comp = np.where(known, t_row + wait, BIG)
-        return _paper_rule_py(np.where(known, c_row, BIG), comp, k)
-    if mode == "predictive":
-        return _paper_rule_py(np.where(known, c_row, c_pred_row),
-                              np.where(known, t_row, t_pred_row), k)
-    if mode == "ucb":
-        c_floor = np.where(known, c_row, BIG).min() * 0.5
-        t_floor = np.where(known, t_row, BIG).min()
-        return _paper_rule_py(np.where(known, c_row, c_floor),
-                              np.where(known, t_row, t_floor), k)
-    if mode == "fastest":
-        if any_unknown:
-            return explore
-        return int(np.argmin(np.where(known, t_row, BIG)))
-    if mode == "greenest":
-        if any_unknown:
-            return explore
-        return int(np.argmin(np.where(known, c_row, BIG)))
-    if mode == "first_free":
-        return int(np.argmin(avail_row))
-    if mode == "random":
-        return rand_sel
-    if mode == "oracle":
-        return _paper_rule_py(c_pred_row, t_pred_row, k)
-    raise ValueError(f"unknown mode {mode!r}")
-
-
 def simulate_py(w: Workload, scfg: SimConfig):
     """Reference implementation for differential tests (no faults path).
 
-    Covers every mode in ``algorithm.MODES``.  All arithmetic runs in
-    float64 numpy — an independent-precision check of the f32 jax engine —
-    except the "random" draw, which replays the jax PRNG stream so the two
+    Dispatches through the policy registry (``scfg.mode`` may name ANY
+    registered policy).  All arithmetic runs in float64 numpy — an
+    independent-precision check of the f32 jax engine — except the
+    "random" draw, which replays the jax PRNG stream so the two
     implementations place identically.
     """
     assert scfg.straggler_prob == 0 and scfg.failure_prob == 0, \
         "python mirror covers the deterministic path"
+    pol = make_policy(scfg.mode)
     P, S = w.T_true.shape
     node_free = [list(np.zeros(int(n))) for n in w.n_nodes]
     if scfg.warm_start:
@@ -401,7 +112,7 @@ def simulate_py(w: Workload, scfg: SimConfig):
         T_tab = np.zeros((P, S))
         runs = np.zeros((P, S), np.int64)
     sel_key = (jax.random.split(jax.random.key(scfg.seed))[0]
-               if scfg.mode == "random" else None)
+               if pol.objective == "random" else None)
     out = []
     for j, p in enumerate(w.prog):
         arr = float(w.arrival[j])
@@ -418,11 +129,11 @@ def simulate_py(w: Workload, scfg: SimConfig):
                         avail[s] = o1
 
         rand_sel = None
-        if scfg.mode == "random":
+        if pol.objective == "random":
             rand_sel = int(jax.random.randint(
                 jax.random.fold_in(sel_key, j), (), 0, S))
-        sel = _select_py(
-            scfg.mode, c_row=C_tab[p], t_row=T_tab[p], runs_row=runs[p],
+        sel = select_py(
+            pol, c_row=C_tab[p], t_row=T_tab[p], runs_row=runs[p],
             avail_row=avail, k=k, c_pred_row=w.C_pred[p],
             t_pred_row=w.T_pred[p], rand_sel=rand_sel)
 

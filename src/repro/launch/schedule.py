@@ -1,28 +1,40 @@
 """Scheduler CLI: run the EcoSched simulator on a job stream or campaign.
 
+Policies come from the registry (``repro.core.policy``); pick one with
+``--policy name`` or ``--policy name:key=val,...`` (hyperparameters parse
+as floats), e.g.:
+
+    PYTHONPATH=src python -m repro.launch.schedule --policy paper:k=0.1
+    PYTHONPATH=src python -m repro.launch.schedule \
+        --policy ucb:k=0.1,ucb_scale=0.25
+
+(the legacy ``--mode NAME --k F`` spelling still works).
+
 Single run / K sweep (the paper's Figs 1-4 regime):
 
-    PYTHONPATH=src python -m repro.launch.schedule --mode paper --k 0.1
+    PYTHONPATH=src python -m repro.launch.schedule --policy paper:k=0.1
     PYTHONPATH=src python -m repro.launch.schedule --sweep-k 0,0.05,0.1,0.2
 
-Campaign grid — ONE jitted call simulates the whole
+Campaign grid — ONE jitted ``Scheduler.run`` simulates the whole
 (K grid x seed grid) over a scenario-generated job stream:
 
     PYTHONPATH=src python -m repro.launch.schedule \
         --jobs 10000 --scenario poisson --arrival-rate 0.5 \
-        --campaign-k 0,0.05,0.1,0.2,0.3 --campaign-seeds 4
+        --campaign-k 0,0.05,0.1,0.2,0.3 --campaign-seeds 4 --totals-only
 
 Trace replay (SWF):
 
     PYTHONPATH=src python -m repro.launch.schedule --trace my_log.swf \
         --campaign-k 0,0.1,0.3 --campaign-seeds 2
 
-Campaign API (repro.core.run_campaign):
-    run_campaign(w, scfg, ks, seeds, faults) -> dict whose entries carry
-    leading axes [K, R] (or [F, K, R] with a fault grid): per-job arrays
-    become [..., J], totals [...].  Everything runs in a single jit; the
+Facade (repro.core.Scheduler):
+    Scheduler(policy, placer=..., faults=..., seeds=...).run(w,
+    totals_only=...) -> SimResult / CampaignResult with named leading axes
+    (fault, policy, seed), derived metrics (mean slowdown, per-system
+    utilization), and ``.to_dict()``.  Everything runs in a single jit; the
     placement inner loop is the kth-free-time radix-select kernel
-    (repro.kernels.kth_free), not a per-step sort.
+    (repro.kernels.kth_free), not a per-step sort.  ``--totals-only`` keeps
+    per-job arrays out of memory on big grids (campaign memory).
 
 Scenario formats (repro.data.scenarios):
     --scenario {simultaneous, poisson, diurnal, bursty}  — arrival process
@@ -43,9 +55,9 @@ import argparse
 
 import numpy as np
 
-from repro.core import (JSCC_SYSTEMS, SimConfig, make_npb_workload,
-                        simulate_jax, sweep_k, run_campaign)
-from repro.core.algorithm import MODES
+from repro.core import (JSCC_SYSTEMS, FaultConfig, Scheduler,
+                        make_npb_workload, make_policy, parse_policy_spec,
+                        policy_names)
 from repro.data.scenarios import (make_stream_workload, maintenance_windows,
                                   load_swf, workload_from_trace,
                                   NPB_SMALL, NPB_LARGE, ARRIVAL_KINDS)
@@ -77,10 +89,24 @@ def build_workload(args):
     return make_npb_workload(JSCC_SYSTEMS, outage=outage)
 
 
+def build_policy(args):
+    if args.policy:
+        # --k fills in when the spec doesn't set k explicitly, so
+        # `--policy paper` == `--mode paper` (K defaults to 0.1)
+        return parse_policy_spec(args.policy, k=args.k)
+    return make_policy(args.mode, k=args.k)
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--mode", default="paper", choices=MODES)
-    ap.add_argument("--k", type=float, default=0.1)
+    ap.add_argument("--policy", default="", metavar="NAME[:k=v,...]",
+                    help="registered policy spec, e.g. paper:k=0.1 or "
+                         f"ucb:k=0.1,ucb_scale=0.25; registry: "
+                         f"{', '.join(policy_names())}")
+    ap.add_argument("--mode", default="paper", choices=policy_names(),
+                    help="legacy spelling of --policy NAME")
+    ap.add_argument("--k", type=float, default=0.1,
+                    help="legacy spelling of --policy NAME:k=F")
     ap.add_argument("--sweep-k", default="",
                     help="comma-separated K values (fractions)")
     ap.add_argument("--jobs", type=int, default=0,
@@ -97,9 +123,12 @@ def main():
                     metavar="S:T0:T1",
                     help="maintenance window on system S (repeatable)")
     ap.add_argument("--campaign-k", default="",
-                    help="comma-separated K grid -> run_campaign")
+                    help="comma-separated K grid -> one-jit campaign")
     ap.add_argument("--campaign-seeds", type=int, default=0,
                     help="number of seeds in the campaign grid")
+    ap.add_argument("--totals-only", action="store_true",
+                    help="campaign memory: aggregate metrics only, no "
+                         "per-job arrays (for huge job x grid products)")
     ap.add_argument("--stragglers", type=float, default=0.0)
     ap.add_argument("--failures", type=float, default=0.0)
     ap.add_argument("--cold", action="store_true",
@@ -108,19 +137,22 @@ def main():
     args = ap.parse_args()
 
     w = build_workload(args)
-    scfg = SimConfig(mode=args.mode, k=args.k, warm_start=not args.cold,
-                     straggler_prob=args.stragglers,
-                     failure_prob=args.failures, seed=args.seed)
+    pol = build_policy(args)
+    faults = FaultConfig(straggler_prob=args.stragglers,
+                         failure_prob=args.failures)
 
     if args.campaign_k:
-        ks = np.array([float(x) for x in args.campaign_k.split(",")])
+        ks = np.array([float(x) for x in args.campaign_k.split(",")],
+                      np.float32)
         seeds = [args.seed + i for i in range(max(args.campaign_seeds, 1))]
-        res = run_campaign(w, scfg, ks=ks, seeds=seeds)
-        E = np.asarray(res["total_energy"])         # [K, R]
-        M = np.asarray(res["makespan"])
-        W = np.asarray(res["total_wait"])
-        print(f"campaign: jobs={len(w.prog)} grid={len(ks)}Kx{len(seeds)}seed "
-              f"mode={args.mode}")
+        res = Scheduler(pol.with_params(k=ks), faults=faults, seeds=seeds,
+                        warm_start=not args.cold).run(
+            w, totals_only=args.totals_only)
+        E = np.asarray(res.total_energy)            # [K, R]
+        M = np.asarray(res.makespan)
+        W = np.asarray(res.total_wait)
+        print(f"campaign: jobs={res.n_jobs} grid={len(ks)}Kx{len(seeds)}seed "
+              f"policy={pol.name} axes={res.axes}")
         print("K,energy_J(mean),energy_J(std),makespan_s(mean),wait_s(mean),dE%")
         for i, k in enumerate(ks):
             print(f"{k:.2f},{E[i].mean():.0f},{E[i].std():.0f},"
@@ -129,25 +161,31 @@ def main():
         return
 
     if args.sweep_k:
-        ks = np.array([float(x) for x in args.sweep_k.split(",")])
-        res = sweep_k(w, scfg, ks)
-        E = np.asarray(res["total_energy"])
-        M = np.asarray(res["makespan"])
+        ks = np.array([float(x) for x in args.sweep_k.split(",")], np.float32)
+        res = Scheduler(pol.with_params(k=ks), faults=faults,
+                        seeds=args.seed, warm_start=not args.cold).run(w)
+        E = np.asarray(res.total_energy)
+        M = np.asarray(res.makespan)
         print("K,energy_J,makespan_s,dE%,dT%")
         for i, k in enumerate(ks):
             print(f"{k:.2f},{E[i]:.0f},{M[i]:.1f},"
                   f"{100*(E[i]-E[0])/E[0]:+.1f},{100*(M[i]-M[0])/M[0]:+.1f}")
         return
 
-    r = simulate_jax(w, scfg)
-    sel = np.asarray(r["system"])
-    print(f"mode={args.mode} K={args.k:.0%} jobs={len(w.prog)} "
+    r = Scheduler(pol, faults=faults, seeds=args.seed,
+                  warm_start=not args.cold).run(w)
+    sel = np.asarray(r.system)
+    k_str = np.format_float_positional(float(np.asarray(pol.k)), trim="-")
+    print(f"policy={pol.name} K={k_str} jobs={r.n_jobs} "
           f"warm={not args.cold}")
-    print(f"energy={float(r['total_energy'])/1e3:.1f} kJ  "
-          f"makespan={float(r['makespan']):.1f} s  "
-          f"total_wait={float(r['total_wait']):.1f} s")
+    print(f"energy={float(r.total_energy)/1e3:.1f} kJ  "
+          f"makespan={float(r.makespan):.1f} s  "
+          f"total_wait={float(r.total_wait):.1f} s  "
+          f"mean_slowdown={float(r.mean_slowdown):.2f}")
     counts = np.bincount(sel, minlength=len(w.systems))
     print("placements:", {w.systems[i]: int(c) for i, c in enumerate(counts)})
+    util = np.asarray(r.utilization)
+    print("utilization:", {w.systems[i]: f"{u:.1%}" for i, u in enumerate(util)})
 
 
 if __name__ == "__main__":

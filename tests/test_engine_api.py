@@ -1,0 +1,179 @@
+"""Scheduler facade + structured results + legacy-shim equivalence.
+
+Acceptance (ISSUE 2): for every legacy mode, ``simulate_jax`` / ``sweep_k``
+/ ``run_campaign`` must produce bit-identical placements and totals to the
+equivalent ``Scheduler(...).run(...)``; a single jitted ``Scheduler.run``
+must vmap a >=32-point policy-hyperparameter grid without re-tracing; the
+``totals_only`` path must match the full path's aggregates.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (JSCC_SYSTEMS, FaultConfig, Scheduler, SimConfig,
+                        CampaignResult, SimResult, make_npb_workload,
+                        make_policy, simulate_jax, sweep_k, run_campaign,
+                        MODES)
+from repro.core.engine import _batched_run
+from repro.data.scenarios import make_stream_workload
+
+
+@pytest.fixture(scope="module")
+def stream():
+    return make_stream_workload(JSCC_SYSTEMS, 30, arrival="poisson",
+                                rate=0.1, seed=9, pred_noise=0.05)
+
+
+# ------------------------------------------------------- deprecation shims
+
+@pytest.mark.parametrize("mode", MODES)
+def test_simulate_jax_shim_bit_identical(stream, mode):
+    scfg = SimConfig(mode=mode, k=0.1, warm_start=True, seed=5)
+    legacy = simulate_jax(stream, scfg)
+    res = Scheduler(make_policy(mode, k=0.1), warm_start=True, seeds=5).run(
+        stream)
+    np.testing.assert_array_equal(np.asarray(legacy["system"]),
+                                  np.asarray(res.system))
+    for key in ("start", "finish", "energy", "total_energy", "makespan",
+                "total_wait"):
+        np.testing.assert_array_equal(np.asarray(legacy[key]),
+                                      np.asarray(getattr(res, key)))
+
+
+def test_sweep_k_shim_bit_identical(stream):
+    ks = np.asarray([0.0, 0.1, 0.3], np.float32)
+    legacy = sweep_k(stream, SimConfig(mode="paper", warm_start=True), ks)
+    res = Scheduler(make_policy("paper", k=ks), warm_start=True).run(stream)
+    assert res.axes == ("policy",)
+    np.testing.assert_array_equal(np.asarray(legacy["system"]),
+                                  np.asarray(res.system))
+    np.testing.assert_array_equal(np.asarray(legacy["total_energy"]),
+                                  np.asarray(res.total_energy))
+
+
+def test_run_campaign_shim_bit_identical(stream):
+    ks, seeds = [0.0, 0.2], [0, 1, 2]
+    faults = [FaultConfig(), FaultConfig(straggler_prob=0.3)]
+    scfg = SimConfig(mode="paper")
+    legacy = run_campaign(stream, scfg, ks=ks, seeds=seeds, faults=faults)
+    res = Scheduler(make_policy("paper", k=np.asarray(ks, np.float32)),
+                    faults=faults, seeds=seeds).run(stream)
+    assert res.axes == ("fault", "policy", "seed")
+    assert np.asarray(res.total_energy).shape == (2, 2, 3)
+    np.testing.assert_array_equal(np.asarray(legacy["system"]),
+                                  np.asarray(res.system))
+    np.testing.assert_array_equal(np.asarray(legacy["total_energy"]),
+                                  np.asarray(res.total_energy))
+    np.testing.assert_array_equal(np.asarray(legacy["makespan"]),
+                                  np.asarray(res.makespan))
+
+
+# ------------------------------------------------- campaign memory (totals)
+
+def test_totals_only_matches_full_path(stream):
+    pol = make_policy("paper", k=np.asarray([0.0, 0.1], np.float32))
+    sched = Scheduler(pol, seeds=[0, 1], warm_start=False)
+    full = sched.run(stream)
+    tot = sched.run(stream, totals_only=True)
+    assert tot.totals_only and tot.system is None and tot.start is None
+    assert not full.totals_only
+    for key in ("total_energy", "makespan", "total_wait", "slowdown_sum",
+                "busy"):
+        np.testing.assert_allclose(np.asarray(getattr(tot, key)),
+                                   np.asarray(getattr(full, key)),
+                                   rtol=2e-5)
+    np.testing.assert_array_equal(np.asarray(tot.runs),
+                                  np.asarray(full.runs))
+    np.testing.assert_allclose(np.asarray(tot.mean_slowdown),
+                               np.asarray(full.mean_slowdown), rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(tot.utilization),
+                               np.asarray(full.utilization), rtol=2e-5)
+
+
+def test_totals_only_compensated_sum_long_stream():
+    """The Kahan-compensated carry must track the full path's array
+    reduction tightly even over thousands of sequential f32 adds."""
+    w = make_stream_workload(JSCC_SYSTEMS, 2000, arrival="poisson",
+                             rate=0.5, seed=3)
+    sched = Scheduler(make_policy("paper", k=0.1), warm_start=True)
+    full = sched.run(w)
+    tot = sched.run(w, totals_only=True)
+    np.testing.assert_allclose(float(tot.total_energy),
+                               float(full.total_energy), rtol=1e-5)
+    np.testing.assert_allclose(float(tot.slowdown_sum),
+                               float(full.slowdown_sum), rtol=1e-5)
+
+
+# ------------------------------------- policy-hyperparameter grid, one jit
+
+def test_policy_grid_32_points_single_compile(stream):
+    kk, uu = np.meshgrid(np.linspace(0.0, 0.35, 8).astype(np.float32),
+                         np.asarray([0.25, 0.5, 0.75, 1.0], np.float32))
+    pol = make_policy("ucb", k=kk.ravel(), ucb_scale=uu.ravel())
+    cache0 = _batched_run._cache_size()
+    res = Scheduler(pol).run(stream, totals_only=True)
+    assert _batched_run._cache_size() - cache0 <= 1, \
+        "32-point hyperparameter grid must share one compilation"
+    E = np.asarray(res.total_energy)
+    assert E.shape == (32,)
+    assert np.isfinite(E).all() and (E > 0).all()
+    # second run with different grid VALUES (same shape): cache hit
+    pol2 = pol.with_params(k=kk.ravel() + 0.01)
+    cache1 = _batched_run._cache_size()
+    Scheduler(pol2).run(stream, totals_only=True)
+    assert _batched_run._cache_size() == cache1
+
+
+# --------------------------------------------------------- structured results
+
+def test_simresult_metrics(stream):
+    res = Scheduler("paper", warm_start=True).run(stream)
+    assert isinstance(res, SimResult) and not isinstance(res, CampaignResult)
+    assert res.axes == () and res.n_jobs == 30
+    assert float(res.mean_slowdown) >= 1.0 - 1e-6
+    util = np.asarray(res.utilization)
+    assert util.shape == (4,)
+    assert (util >= 0).all() and (util <= 1 + 1e-6).all()
+    busy = np.asarray(res.busy)
+    np.testing.assert_allclose(
+        busy.sum(), float((np.asarray(res.runtime)
+                           * np.asarray(res.nodes)).sum()), rtol=1e-6)
+    d = res.to_dict()
+    for key in ("system", "total_energy", "mean_slowdown", "utilization"):
+        assert key in d
+    assert "system" not in res.to_dict(arrays=False)
+
+
+def test_campaign_result_axes_and_index(stream):
+    faults = [FaultConfig(), FaultConfig(straggler_prob=0.5)]
+    res = Scheduler(make_policy("paper", k=np.asarray([0.0, 0.1], np.float32)),
+                    faults=faults, seeds=[0, 1, 2]).run(stream)
+    assert isinstance(res, CampaignResult)
+    assert res.axes == ("fault", "policy", "seed")
+    assert set(res.coords) == {"fault", "policy", "seed"}
+    one = res.index(fault=1, policy=0, seed=2)
+    assert isinstance(one, SimResult) and one.axes == ()
+    np.testing.assert_array_equal(np.asarray(one.system),
+                                  np.asarray(res.system)[1, 0, 2])
+    part = res.index(seed=0)
+    assert part.axes == ("fault", "policy")
+    with pytest.raises(KeyError):
+        res.index(bogus=0)
+    with pytest.raises(TypeError, match="integer points"):
+        res.index(seed=slice(0, 2))
+
+
+def test_scheduler_accepts_name_or_policy(stream):
+    r1 = Scheduler("greenest", warm_start=True).run(stream)
+    r2 = Scheduler(make_policy("greenest"), warm_start=True).run(stream)
+    np.testing.assert_array_equal(np.asarray(r1.system),
+                                  np.asarray(r2.system))
+
+
+def test_seed_axis_changes_faulty_runs():
+    w = make_npb_workload(JSCC_SYSTEMS, repeats=3)
+    res = Scheduler("paper", seeds=range(4), warm_start=True,
+                    faults=FaultConfig(straggler_prob=0.5)).run(w)
+    assert res.axes == ("seed",)
+    E = np.asarray(res.total_energy)
+    assert len(np.unique(E)) > 1          # fault draws differ per seed

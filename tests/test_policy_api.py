@@ -1,0 +1,167 @@
+"""Policy registry + composed-selector tests.
+
+The load-bearing property: EVERY policy in the registry — including ones
+registered after this file was written — is differential-tested jax vs
+python with zero extra test code, because both engines dispatch through
+the same registry entry (``policy.select`` / ``policy.select_py``).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (JSCC_SYSTEMS, SimConfig, Scheduler, make_npb_workload,
+                        make_policy, parse_policy_spec, policy_names,
+                        register_policy, simulate_py, MODES)
+from repro.core.policy import (Policy, BIG, _paper_rule, _paper_rule_py,
+                               _lex_argmin)
+
+
+# ------------------------------------------------------------------ registry
+
+def test_registry_covers_all_legacy_modes():
+    names = policy_names()
+    for mode in MODES:
+        assert mode in names
+    assert len(set(names)) == len(names)
+
+
+def test_make_policy_unknown_name():
+    with pytest.raises(ValueError, match="unknown policy"):
+        make_policy("definitely_not_registered")
+
+
+def test_select_system_accepts_registered_extensions():
+    """The legacy shim dispatches through the registry, so post-paper
+    registrations work via the mode-string surface too."""
+    from repro.core import select_system
+    import jax
+    idx = int(select_system(
+        "fastest_completion",
+        c_row=jnp.asarray([1.0, 2.0], jnp.float32),
+        t_row=jnp.asarray([30.0, 20.0], jnp.float32),
+        runs_row=jnp.ones(2, jnp.int32),
+        avail_row=jnp.asarray([100.0, 0.0], jnp.float32),
+        k=jnp.float32(0.1),
+        c_pred_row=jnp.asarray([1.0, 2.0], jnp.float32),
+        t_pred_row=jnp.asarray([30.0, 20.0], jnp.float32),
+        key=jax.random.key(0)))
+    assert idx == 1
+    with pytest.raises(ValueError, match="unknown policy"):
+        select_system("not_a_policy", c_row=jnp.zeros(2), t_row=jnp.zeros(2),
+                      runs_row=jnp.ones(2, jnp.int32),
+                      avail_row=jnp.zeros(2), k=0.0)
+
+
+def test_policy_validates_axes():
+    with pytest.raises(ValueError, match="exploration"):
+        Policy(exploration="psychic")
+    with pytest.raises(ValueError, match="objective"):
+        Policy(objective="min_vibes")
+
+
+def test_register_policy_rejects_duplicates():
+    with pytest.raises(ValueError, match="already registered"):
+        @register_policy("paper")
+        def dup(**kw):
+            return Policy(**kw)
+
+
+def test_parse_policy_spec():
+    p = parse_policy_spec("ucb:k=0.15,ucb_scale=0.25")
+    assert p.name == "ucb" and p.exploration == "optimistic_bound"
+    assert float(p.k) == pytest.approx(0.15)
+    assert float(p.ucb_scale) == pytest.approx(0.25)
+    assert parse_policy_spec("paper").name == "paper"
+    with pytest.raises(ValueError, match="key=val"):
+        parse_policy_spec("paper:k")
+    # defaults fill unset hyperparameters; explicit spec values win
+    assert float(parse_policy_spec("paper", k=0.1).k) == pytest.approx(0.1)
+    assert float(parse_policy_spec("paper:k=0.3", k=0.1).k) == \
+        pytest.approx(0.3)
+
+
+def test_with_params_and_grid_size():
+    p = make_policy("paper", k=np.linspace(0, 0.3, 8).astype(np.float32))
+    assert p.grid_size == 8
+    assert make_policy("paper").grid_size is None
+    p2 = p.with_params(k=0.1)
+    assert p2.grid_size is None and p2.name == "paper"
+
+
+# ------------------------------------- whole-registry differential property
+
+@pytest.fixture(scope="module", params=[11, 23], ids=["stream-a", "stream-b"])
+def stream(request):
+    """20 mixed jobs, staggered arrivals, per-job K overrides, noisy
+    predictions — exercises every selector input."""
+    rng = np.random.default_rng(request.param)
+    order = tuple(rng.choice(["BT", "EP", "IS", "LU", "SP"], 20))
+    arrivals = np.cumsum(rng.exponential(25.0, 20)).astype(np.float32)
+    k_job = np.full(20, np.nan, np.float32)
+    k_job[::4] = 0.25
+    return make_npb_workload(JSCC_SYSTEMS, order=order, arrivals=arrivals,
+                             k_job=k_job, pred_noise=0.10,
+                             noise_seed=request.param)
+
+
+@pytest.mark.parametrize("name", policy_names())
+@pytest.mark.parametrize("warm", [True, False], ids=["warm", "cold"])
+def test_every_registered_policy_is_differential_tested(stream, name, warm):
+    """A newly registered policy gets jax-vs-python placement equality for
+    free: both sides dispatch through the registry."""
+    cfg = SimConfig(mode=name, k=0.1, warm_start=warm, seed=7)
+    res = Scheduler(make_policy(name, k=0.1), warm_start=warm, seeds=7).run(
+        stream)
+    ref = simulate_py(stream, cfg)
+    np.testing.assert_array_equal(np.asarray(res.system), ref["system"])
+    np.testing.assert_allclose(np.asarray(res.start), ref["start"],
+                               rtol=1e-5, atol=1e-3)
+    np.testing.assert_allclose(float(res.total_energy), ref["total_energy"],
+                               rtol=1e-5)
+
+
+# -------------------------------------------- hardened paper-rule tie-break
+
+def test_paper_rule_zero_c_ties_break_on_time():
+    """Freshly-learned zero-C rows: the old relative tolerance degenerated
+    at cbest == 0; the masked lexicographic argmin must still tie-break
+    zero-C candidates on T."""
+    c = jnp.asarray([0.0, 0.0, 1.0], jnp.float32)
+    t = jnp.asarray([50.0, 30.0, 10.0], jnp.float32)
+    assert int(_paper_rule(c, t, 10.0)) == 1
+    assert _paper_rule_py(np.asarray(c, np.float64),
+                          np.asarray(t, np.float64), 10.0) == 1
+
+
+def test_paper_rule_big_sentinel_does_not_widen_ties():
+    """A BIG sentinel in the row must not drag real candidates into the tie
+    set (the old ``cbest * (1 + 1e-9)`` widened with the magnitude)."""
+    c = jnp.asarray([BIG, 2.0, 2.0 + 1e-3], jnp.float32)
+    t = jnp.asarray([1.0, 20.0, 5.0], jnp.float32)
+    # 2.0 is the unique best C; 2.001 must NOT tie despite BIG in the row
+    assert int(_paper_rule(c, t, 100.0)) == 1
+
+
+def test_paper_rule_all_big_candidates():
+    c = jnp.asarray([BIG, BIG], jnp.float32)
+    t = jnp.asarray([5.0, 3.0], jnp.float32)
+    assert int(_paper_rule(c, t, 1.0)) == 1          # tie on C=BIG -> min T
+
+
+def test_paper_rule_all_infeasible_falls_back_in_range():
+    """Pathological K < 0 empties the feasible set; the rule must still
+    return an in-range lexicographic argmin, not a BIG-biased index 0."""
+    c = jnp.asarray([5.0, 1.0, 3.0], jnp.float32)
+    t = jnp.asarray([100.0, 200.0, 300.0], jnp.float32)
+    idx = int(_paper_rule(c, t, -0.9))               # t <= t_min*0.1: none
+    assert idx == 1                                  # falls back to argmin C
+    assert _paper_rule_py(np.asarray(c, np.float64),
+                          np.asarray(t, np.float64), -0.9) == 1
+
+
+def test_lex_argmin_empty_feasible_mask():
+    c = jnp.asarray([3.0, 1.0], jnp.float32)
+    t = jnp.asarray([1.0, 2.0], jnp.float32)
+    idx = int(_lex_argmin(c, t, jnp.zeros(2, bool)))
+    assert idx == 1
