@@ -28,9 +28,10 @@ def main() -> None:
         ("table6", table6.run),
         ("fig1_2", fig1_2_suite_vs_k.run),
         ("fig3_4", fig3_4_per_benchmark.run),
-        ("ablation", scheduler_ablation.run),
-        ("policy_grid", scheduler_ablation.run_policy_grid),
-        ("fault_tolerance", scheduler_ablation.run_fault_tolerance),
+        # the scheduler-ablation suites come from the module's own registry
+        # (single source — scheduler_ablation.main() writes the same rows
+        # to BENCH_scheduler.json)
+        *scheduler_ablation.SUITES,
         ("npb", npb_kernels.run),
         ("tpu_campaign", tpu_campaign.run),
         ("roofline", roofline_bench.run),

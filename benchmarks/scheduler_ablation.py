@@ -12,10 +12,21 @@ Policy hyperparameters (K, ucb_scale) are PyTree leaves, a 32-point
 K x ucb-scale mesh is ONE leaf-batched Policy — a single jitted
 ``Scheduler.run`` vmaps the whole grid without re-tracing per point
 (asserted on the jit cache).
+
+``run_queue_disciplines`` is the queue-discipline ablation (ISSUE 3):
+FCFS vs EASY backfilling on the contended SWF-replay and diurnal streams
+the classic HPC literature evaluates with backfill; EASY must strictly
+improve mean wait on at least one of them (asserted).
+
+Run as a module (``python benchmarks/scheduler_ablation.py``) to also
+write ``BENCH_scheduler.json`` (every row + per-point wall-clock) at the
+repo root, so the scheduler perf trajectory is tracked across commits.
 """
 
 from __future__ import annotations
 
+import json
+import pathlib
 import time
 
 import numpy as np
@@ -23,7 +34,8 @@ import numpy as np
 from repro.core import (JSCC_SYSTEMS, FaultConfig, Scheduler, make_policy,
                         policy_names)
 from repro.core.engine import _batched_run
-from repro.data.scenarios import make_stream_workload
+from repro.data.scenarios import (load_swf, make_stream_workload,
+                                  workload_from_trace)
 
 KS = (0.05, 0.10, 0.20)
 SEEDS = (0, 1)
@@ -73,6 +85,65 @@ def run_policy_grid():
              f"@K={kk.ravel()[best]:.2f},ucb={uu.ravel()[best]:.2f}")]
 
 
+def _synthetic_swf(n=250, seed=11):
+    """A contended SWF-style trace: heavy-tailed runtimes and node counts
+    with clustered submits — the workload shape EASY backfilling was made
+    for (long wide head jobs blocking short narrow ones)."""
+    rng = np.random.default_rng(seed)
+    submit = np.cumsum(rng.exponential(15.0, n)).astype(int)
+    runtime = np.where(rng.random(n) < 0.25,
+                       rng.integers(1500, 5000, n),      # long tail
+                       rng.integers(60, 400, n))         # short majority
+    procs = np.where(rng.random(n) < 0.3,
+                     rng.integers(96, 257, n),           # wide
+                     rng.integers(4, 33, n))             # narrow
+    lines = [f"{i + 1} {submit[i]} 0 {runtime[i]} {procs[i]} 100.0 0 "
+             f"{procs[i]} 0 0 1 1 1 1 1 1 -1 -1" for i in range(n)]
+    return load_swf(lines)
+
+
+def queue_streams():
+    """The two contended scenario streams of the queue ablation."""
+    return {
+        "swf": workload_from_trace(_synthetic_swf(), JSCC_SYSTEMS),
+        "diurnal": make_stream_workload(JSCC_SYSTEMS, 300, arrival="diurnal",
+                                        rate=0.8, seed=3, pred_noise=0.05),
+    }
+
+
+def run_queue_disciplines():
+    """FCFS vs EASY backfilling (paper selection rule, warm tables) on
+    SWF-replay and diurnal streams; every (stream, discipline) point is
+    timed individually.  EASY must strictly improve mean wait on at least
+    one stream (the ISSUE 3 acceptance criterion)."""
+    rows = []
+    improved = []
+    for tag, w in queue_streams().items():
+        waits = {}
+        for queue in ("fcfs", "easy_backfill:window=16"):
+            qname = queue.split(":")[0]
+            sched = Scheduler(make_policy("paper", k=0.10), warm_start=True,
+                              queue=queue)
+            sched.run(w)                 # warm the jit cache: time the scan,
+            t0 = time.perf_counter()     # not XLA compilation
+            res = sched.run(w)
+            mw = float(np.asarray(res.mean_wait))
+            us = (time.perf_counter() - t0) * 1e6
+            waits[qname] = mw
+            rows.append((
+                f"queue_{tag}_{qname}", us,
+                f"mean_wait={mw:.1f}s;max_wait={float(res.max_wait):.0f}s"
+                f";makespan={float(res.makespan):.0f}s"
+                f";backfill_rate={float(res.backfill_rate):.2f}"
+                f";util={float(np.asarray(res.utilization).mean()):.2f}"))
+        improved.append(waits["easy_backfill"] < waits["fcfs"])
+        rows.append((f"queue_{tag}_delta", 0.0,
+                     f"dwait={100 * (waits['easy_backfill'] / waits['fcfs'] - 1):+.1f}%"))
+    assert any(improved), \
+        "EASY backfilling improved mean wait on no stream (acceptance)"
+    return rows
+
+
 def run_fault_tolerance():
     """Same stream under a straggler/failure grid: the history mechanism
     routes around degraded systems (fault tolerance, DESIGN.md §7).  The
@@ -97,3 +168,36 @@ def run_fault_tolerance():
         rows.append((f"fault_{tag}", 0.0,
                      f"E={E[i].mean()/1e3:.0f}kJ;makespan={M[i].mean():.0f}s"))
     return rows
+
+
+#: The module's suite registry — the single source for both harnesses
+#: (benchmarks/run.py spreads it into its suite list; main() below writes
+#: the same rows to BENCH_scheduler.json).
+SUITES = (("ablation", run),
+          ("policy_grid", run_policy_grid),
+          ("fault_tolerance", run_fault_tolerance),
+          ("queue_disciplines", run_queue_disciplines))
+
+
+def main():
+    """Run every ablation suite, print the CSV, and persist the rows (with
+    per-point wall-clock) to BENCH_scheduler.json at the repo root."""
+    rows = []
+    print("name,us_per_call,derived")
+    for _, fn in SUITES:
+        for row in fn():
+            rows.append(row)
+            print(f"{row[0]},{row[1]:.1f},{row[2]}")
+    payload = {
+        "bench": "scheduler",
+        "generated_unix": time.time(),
+        "rows": [{"name": n, "us_per_call": round(us, 1), "derived": d}
+                 for n, us, d in rows],
+    }
+    out = pathlib.Path(__file__).resolve().parent.parent / "BENCH_scheduler.json"
+    out.write_text(json.dumps(payload, indent=2) + "\n")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -58,7 +58,8 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.policy import BIG, Policy, make_policy, select
+from repro.core.policy import (BIG, Policy, apply_queue_spec, make_policy,
+                               select)
 from repro.core.result import SimResult, CampaignResult
 from repro.core.workload_model import NPB_PROFILES, npb_tables
 from repro.kernels.kth_free import kth_free_time
@@ -85,9 +86,19 @@ class SimConfig:
     # kth-free placement dispatch: None = auto (Pallas on TPU, jnp radix
     # select elsewhere); or force "pallas"/"pallas_interpret"/"jnp"/"sort".
     placer: str | None = None
+    # queue-discipline overrides; "" / 0 defer to the registered policy's
+    # own metadata (so mode="easy_backfill" backfills out of the box)
+    queue: str = ""
+    queue_window: int = 0
 
     def policy(self) -> Policy:
-        return make_policy(self.mode, k=self.k)
+        pol = make_policy(self.mode, k=self.k)
+        over = {}
+        if self.queue:
+            over["queue"] = self.queue
+        if self.queue_window:
+            over["window"] = self.queue_window
+        return replace(pol, **over) if over else pol
 
 
 @dataclass(frozen=True)
@@ -187,10 +198,39 @@ def _push_out_of_outage(avail, outage):
     return avail
 
 
+def _earliest(node_free, nreq_row, arr, placer, outage):
+    """(kth free time, earliest start) per system for one job: the kth-free
+    radix select, floored at the arrival and pushed out of any open
+    maintenance window.  Shared by the FCFS step, the EASY reservation /
+    backfill guard, and the final placement."""
+    kth = kth_free_time(node_free, nreq_row, force=placer)
+    avail = jnp.maximum(arr, kth)
+    if outage is not None:
+        avail = _push_out_of_outage(avail, outage)
+    return kth, avail
+
+
+def _alloc(node_free, sel, kth_sel, need, finish):
+    """Allocate the ``need`` earliest-free nodes of system ``sel`` until
+    ``finish``: everything strictly below the kth free time, plus
+    first-by-index ties at it (the python mirror's stable argsort picks the
+    same nodes)."""
+    free_sel = node_free[sel]
+    below = free_sel < kth_sel
+    tie = free_sel == kth_sel
+    tie_rank = jnp.cumsum(tie) - 1
+    take = below | (tie & (tie_rank < need - jnp.sum(below)))
+    return node_free.at[sel].set(jnp.where(take, finish, free_sel))
+
+
 def _scan_sim(arrs: dict, policy: Policy, warm_start: bool,
               placer: str | None, totals_only: bool, seed, fvec):
     """One full simulation as a lax.scan; every argument traced except the
-    static (policy metadata, warm_start, placer, totals_only)."""
+    static (policy metadata, warm_start, placer, totals_only).  Dispatches
+    on the policy's static ``queue`` metadata: the FCFS path is the
+    historical arrival-order scan, bit-identical to the pre-queue-axis
+    engine; ``easy_backfill`` runs the windowed scan (``_scan_sim_easy``).
+    """
     T_true, C_true, E_true = arrs["T_true"], arrs["C_true"], arrs["E_true"]
     T_pred, C_pred = arrs["T_pred"], arrs["C_pred"]
     n_req, prog, arrival = arrs["n_req"], arrs["prog"], arrs["arrival"]
@@ -205,15 +245,22 @@ def _scan_sim(arrs: dict, policy: Policy, warm_start: bool,
     # which campaign streams (10k+ jobs) do
     sel_key, fault_key = jax.random.split(jax.random.key(seed))
 
+    if warm_start:
+        tabs0 = (C_true, T_true, jnp.ones((P, S), jnp.int32))
+    else:
+        tabs0 = (jnp.zeros((P, S)), jnp.zeros((P, S)),
+                 jnp.zeros((P, S), jnp.int32))
+
+    if policy.queue == "easy_backfill":
+        return _scan_sim_easy(arrs, policy, placer, totals_only,
+                              kvec, sel_key, fault_key, fvec, tabs0)
+
     def step(carry, xs):
         node_free, C_tab, T_tab, runs, acc = carry
         j, p, arr, k = xs
 
         nreq_row = n_req[p]                                      # [S]
-        kth = kth_free_time(node_free, nreq_row, force=placer)
-        avail = jnp.maximum(arr, kth)
-        if outage is not None:
-            avail = _push_out_of_outage(avail, outage)
+        kth, avail = _earliest(node_free, nreq_row, arr, placer, outage)
 
         sel = select(
             policy, c_row=C_tab[p], t_row=T_tab[p], runs_row=runs[p],
@@ -227,15 +274,8 @@ def _scan_sim(arrs: dict, policy: Policy, warm_start: bool,
         start = avail[sel]
         finish = start + T_act
 
-        # allocate the n_req earliest-free nodes of sel: everything strictly
-        # below the kth free time, plus first-by-index ties at it
-        free_sel = node_free[sel]
         need = nreq_row[sel]
-        below = free_sel < kth[sel]
-        tie = free_sel == kth[sel]
-        tie_rank = jnp.cumsum(tie) - 1
-        take = below | (tie & (tie_rank < need - jnp.sum(below)))
-        node_free = node_free.at[sel].set(jnp.where(take, finish, free_sel))
+        node_free = _alloc(node_free, sel, kth[sel], need, finish)
 
         n = runs[p, sel].astype(jnp.float32)
         C_tab = C_tab.at[p, sel].set((C_tab[p, sel] * n + C_act) / (n + 1))
@@ -244,7 +284,7 @@ def _scan_sim(arrs: dict, policy: Policy, warm_start: bool,
 
         wait = start - arr
         if totals_only:
-            sums, comps, fin_max, busy = acc
+            sums, comps, fin_max, busy, wait_max = acc
             # Kahan-compensated f32 sums: 10^5 sequential adds would
             # otherwise drift ~0.1% vs the full path's array reduction
             # (x64 is unavailable, so compensation stands in for f64)
@@ -252,38 +292,220 @@ def _scan_sim(arrs: dict, policy: Policy, warm_start: bool,
             y = add - comps
             t = sums + y
             acc = (t, (t - sums) - y, jnp.maximum(fin_max, finish),
-                   busy.at[sel].add(T_act * need))
+                   busy.at[sel].add(T_act * need),
+                   jnp.maximum(wait_max, wait))
             out = None
         else:
             out = (sel, start, finish, wait, E_act, T_act)
         return (node_free, C_tab, T_tab, runs, acc), out
 
     acc0 = ((jnp.zeros(3, jnp.float32), jnp.zeros(3, jnp.float32),
-             jnp.float32(0.0), jnp.zeros(S, jnp.float32))
+             jnp.float32(0.0), jnp.zeros(S, jnp.float32),
+             jnp.float32(0.0))
             if totals_only else ())
-    if warm_start:
-        carry0 = (arrs["free0"], C_true, T_true,
-                  jnp.ones((P, S), jnp.int32), acc0)
-    else:
-        carry0 = (arrs["free0"], jnp.zeros((P, S)), jnp.zeros((P, S)),
-                  jnp.zeros((P, S), jnp.int32), acc0)
+    carry0 = (arrs["free0"], *tabs0, acc0)
     xs = (jnp.arange(J), prog, arrival, kvec)
     (node_free, C_tab, T_tab, runs, acc), ys = jax.lax.scan(step, carry0, xs)
 
-    tabs = {"C_tab": C_tab, "T_tab": T_tab, "runs": runs}
+    tabs = {"C_tab": C_tab, "T_tab": T_tab, "runs": runs,
+            "n_backfilled": jnp.zeros((), jnp.int32)}
     if totals_only:
-        sums, _, fin_max, busy = acc
+        sums, _, fin_max, busy, wait_max = acc
         return {"total_energy": sums[0], "makespan": fin_max,
                 "total_wait": sums[1], "slowdown_sum": sums[2],
-                "busy": busy, **tabs}
+                "max_wait": wait_max, "busy": busy, **tabs}
     sel, start, finish, wait, E, T_act = ys
     nodes = n_req[prog, sel]                                     # [J]
     busy = jnp.zeros(S, jnp.float32).at[sel].add(T_act * nodes)
     return {
         "system": sel, "start": start, "finish": finish, "wait": wait,
         "energy": E, "runtime": T_act, "nodes": nodes,
+        "backfilled": jnp.zeros(J, bool),
         "total_energy": E.sum(), "makespan": finish.max(),
-        "total_wait": wait.sum(),
+        "total_wait": wait.sum(), "max_wait": wait.max(),
+        "slowdown_sum": ((wait + T_act) / T_act).sum(), "busy": busy,
+        **tabs,
+    }
+
+
+def _scan_sim_easy(arrs: dict, policy: Policy, placer: str | None,
+                   totals_only: bool, kvec, sel_key, fault_key, fvec, tabs0):
+    """EASY-backfilling scan: J + W steps over a bounded pending window.
+
+    The carry grows a pending buffer of W + 1 job-id slots (ascending,
+    padded with the sentinel J).  Each step pushes the arriving job (steps
+    past J are the drain tail) and places AT MOST one job:
+
+      1. the head (oldest pending) — forced when the window overflows
+         (FCFS fallback), or placed when its reserved start ``r_h`` (policy
+         selection over current node-free times) is <= ``now``, the latest
+         arrival time (BIG during the drain, so the tail drains FCFS);
+      2. otherwise the first pending job (arrival order) whose tentative
+         allocation does not push the head's earliest start on its
+         reserved system past ``r_h`` — the EASY no-delay reservation
+         guard.  (No "starts now" requirement: the scan's only events are
+         arrivals, so a backfill may carry a future start — it fills the
+         gap under the reservation exactly as an event-driven EASY would
+         at the next completion event.)
+      3. or nothing: the head keeps waiting for a backfill opportunity.
+
+    Because at most one job is placed per step and a full window forces a
+    head placement, every job is placed within J + W steps.  Placement
+    math (kth-free selection, allocation tie-breaks, table updates, fault
+    draws keyed by job id) is shared with the FCFS step, so ``fcfs`` and
+    ``easy_backfill`` differ only in placement ORDER, never in per-job
+    semantics.  Per-step outputs carry (job id | sentinel); the full path
+    scatters them back into arrival-indexed [J] arrays after the scan.
+    """
+    T_true, C_true, E_true = arrs["T_true"], arrs["C_true"], arrs["E_true"]
+    T_pred, C_pred = arrs["T_pred"], arrs["C_pred"]
+    n_req, prog, arrival = arrs["n_req"], arrs["prog"], arrs["arrival"]
+    outage = arrs.get("outage")
+    P, S = T_true.shape
+    J = prog.shape[0]
+    W = int(policy.window)
+    Wc = W + 1                           # buffer capacity (push-then-place)
+
+    def sel_for(j, node_free, C_tab, T_tab, runs):
+        """Policy selection + earliest start for job id j (sentinel-safe:
+        j == J evaluates job J-1; callers mask the result)."""
+        jj = jnp.minimum(j, J - 1)
+        p = prog[jj]
+        kth, avail = _earliest(node_free, n_req[p], arrival[jj], placer,
+                               outage)
+        sel = select(
+            policy, c_row=C_tab[p], t_row=T_tab[p], runs_row=runs[p],
+            avail_row=avail, k=kvec[jj], c_pred_row=C_pred[p],
+            t_pred_row=T_pred[p], key=jax.random.fold_in(sel_key, jj))
+        return jj, p, kth, avail, sel
+
+    def step(carry, xs):
+        node_free, C_tab, T_tab, runs, acc, pend, nbf = carry
+        jx, now = xs
+
+        # push the arrival into the first sentinel slot (the invariant
+        # size <= W at step start keeps the index in range; drain steps
+        # push the sentinel J over a sentinel — a no-op)
+        size0 = jnp.sum(pend < J)
+        pend = pend.at[jnp.minimum(size0, Wc - 1)].set(jx)
+        size = size0 + (jx < J)
+
+        # head-of-queue reservation from current node-free times
+        h = pend[0]
+        head_valid = h < J
+        hj, p_h, _, avail_h, sel_h = sel_for(h, node_free, C_tab, T_tab,
+                                             runs)
+        r_h = avail_h[sel_h]
+        forced = size == Wc                       # window full: FCFS fallback
+        place_head = head_valid & (forced | (r_h <= now))
+
+        # EASY backfill: first pending job (arrival order) whose tentative
+        # allocation cannot delay the head's reservation on its reserved
+        # system
+        chosen = jnp.where(place_head, 0, Wc)     # slot index; Wc = none
+        may_backfill = head_valid & ~place_head
+        for ci in range(1, Wc):
+            b = pend[ci]
+            live = may_backfill & (b < J) & (chosen == Wc)
+            bj, p_b, kth_b, avail_b, sel_b = sel_for(b, node_free, C_tab,
+                                                     T_tab, runs)
+            s_b = avail_b[sel_b]
+            fin_b = s_b + T_true[p_b, sel_b] * _fault_factor(fault_key, bj,
+                                                             fvec)
+            trial = _alloc(node_free, sel_b, kth_b[sel_b], n_req[p_b, sel_b],
+                           fin_b)
+            _, avail_h2 = _earliest(trial, n_req[p_h], arrival[hj], placer,
+                                    outage)
+            ok = avail_h2[sel_h] <= r_h
+            chosen = jnp.where(live & ok, ci, chosen)
+
+        # place the chosen job (if any): same math as the FCFS step body
+        placed = chosen < Wc
+        j_pl = jnp.where(placed, pend[jnp.minimum(chosen, Wc - 1)], J)
+        jj, p, kth, avail, sel = sel_for(j_pl, node_free, C_tab, T_tab, runs)
+        factor = _fault_factor(fault_key, jj, fvec)
+        T_act = T_true[p, sel] * factor
+        C_act = C_true[p, sel] * factor
+        E_act = E_true[p, sel] * factor
+        start = avail[sel]
+        finish = start + T_act
+        need = n_req[p, sel]
+        node_free = jnp.where(
+            placed, _alloc(node_free, sel, kth[sel], need, finish),
+            node_free)
+
+        n = runs[p, sel].astype(jnp.float32)
+        C_tab = C_tab.at[p, sel].set(jnp.where(
+            placed, (C_tab[p, sel] * n + C_act) / (n + 1), C_tab[p, sel]))
+        T_tab = T_tab.at[p, sel].set(jnp.where(
+            placed, (T_tab[p, sel] * n + T_act) / (n + 1), T_tab[p, sel]))
+        runs = runs.at[p, sel].add(jnp.where(placed, 1, 0))
+
+        was_backfill = placed & (chosen > 0)
+        nbf = nbf + was_backfill.astype(jnp.int32)
+
+        # pop the chosen slot (shift the tail left; chosen == Wc: no-op)
+        shifted = jnp.concatenate([pend[1:], jnp.full((1,), J, jnp.int32)])
+        pend = jnp.where(jnp.arange(Wc) < chosen, pend, shifted)
+
+        wait = start - arrival[jj]
+        if totals_only:
+            sums, comps, fin_max, busy, wait_max = acc
+            add = jnp.where(placed,
+                            jnp.stack([E_act, wait, (wait + T_act) / T_act]),
+                            0.0)
+            y = add - comps
+            t = sums + y
+            acc = (t, (t - sums) - y,
+                   jnp.maximum(fin_max, jnp.where(placed, finish, 0.0)),
+                   busy.at[sel].add(jnp.where(placed, T_act * need, 0.0)),
+                   jnp.maximum(wait_max, jnp.where(placed, wait, 0.0)))
+            out = None
+        else:
+            out = (j_pl, sel, start, finish, wait, E_act, T_act,
+                   was_backfill)
+        return (node_free, C_tab, T_tab, runs, acc, pend, nbf), out
+
+    acc0 = ((jnp.zeros(3, jnp.float32), jnp.zeros(3, jnp.float32),
+             jnp.float32(0.0), jnp.zeros(S, jnp.float32),
+             jnp.float32(0.0))
+            if totals_only else ())
+    pend0 = jnp.full((Wc,), J, jnp.int32)
+    carry0 = (arrs["free0"], *tabs0, acc0, pend0, jnp.zeros((), jnp.int32))
+    T_steps = J + W
+    jxs = jnp.concatenate([jnp.arange(J, dtype=jnp.int32),
+                           jnp.full((W,), J, jnp.int32)])
+    nows = jnp.concatenate([arrival, jnp.full((W,), BIG, jnp.float32)])
+    (node_free, C_tab, T_tab, runs, acc, pend, nbf), ys = jax.lax.scan(
+        step, carry0, (jxs, nows), length=T_steps)
+
+    tabs = {"C_tab": C_tab, "T_tab": T_tab, "runs": runs,
+            "n_backfilled": nbf}
+    if totals_only:
+        sums, _, fin_max, busy, wait_max = acc
+        return {"total_energy": sums[0], "makespan": fin_max,
+                "total_wait": sums[1], "slowdown_sum": sums[2],
+                "max_wait": wait_max, "busy": busy, **tabs}
+
+    # scatter per-step outputs back to arrival order; sentinel ids drop
+    j_pl, sel_s, start_s, fin_s, wait_s, E_s, T_s, bf_s = ys
+    def scat(vals, dtype):
+        return jnp.zeros(J, dtype).at[j_pl].set(vals, mode="drop")
+    sel = scat(sel_s, sel_s.dtype)
+    start = scat(start_s, jnp.float32)
+    finish = scat(fin_s, jnp.float32)
+    wait = scat(wait_s, jnp.float32)
+    E = scat(E_s, jnp.float32)
+    T_act = scat(T_s, jnp.float32)
+    backfilled = scat(bf_s, bool)
+    nodes = n_req[prog, sel]                                     # [J]
+    busy = jnp.zeros(S, jnp.float32).at[sel].add(T_act * nodes)
+    return {
+        "system": sel, "start": start, "finish": finish, "wait": wait,
+        "energy": E, "runtime": T_act, "nodes": nodes,
+        "backfilled": backfilled,
+        "total_energy": E.sum(), "makespan": finish.max(),
+        "total_wait": wait.sum(), "max_wait": wait.max(),
         "slowdown_sum": ((wait + T_act) / T_act).sum(), "busy": busy,
         **tabs,
     }
@@ -320,6 +542,9 @@ class Scheduler:
                 axis); None = fault-free
     seeds:      one int (no axis) or an iterable (adds a ``seed`` axis)
     warm_start: profile tables pre-filled with ground truth
+    queue:      queue-discipline spec overriding the policy's metadata:
+                "fcfs" | "easy_backfill" | "easy_backfill:window=W"
+                (None = keep the policy's own discipline)
 
     ``run(w)`` returns a ``SimResult`` when no axis is present, else a
     ``CampaignResult`` with ``axes`` ordered (fault, policy, seed) — the
@@ -330,8 +555,10 @@ class Scheduler:
 
     def __init__(self, policy: str | Policy = "paper", *,
                  placer: str | None = None, faults=None, seeds=0,
-                 warm_start: bool = False):
+                 warm_start: bool = False, queue: str | None = None):
         self.policy = make_policy(policy) if isinstance(policy, str) else policy
+        if queue is not None:
+            self.policy = apply_queue_spec(self.policy, queue)
         self.placer = placer
         self.warm_start = bool(warm_start)
         if faults is None or isinstance(faults, FaultConfig):

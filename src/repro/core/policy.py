@@ -1,7 +1,7 @@
 """Composable scheduling policies: registry-backed, PyTree-parameterized.
 
 The paper's algorithm is one point in a family of selection rules factored
-along three orthogonal axes:
+along four orthogonal axes:
 
   exploration  — what to do about (program, system) pairs that were never
                  run (empty profile-table rows):
@@ -24,6 +24,24 @@ along three orthogonal axes:
                    min_avail        earliest availability (multi-cluster FIFO)
                    random           uniform random system
                    oracle           the paper rule on the TRUE tables
+  queue        — the discipline deciding WHICH pending job is placed next
+                 (an engine axis: it reorders placement decisions, not the
+                 per-job system selection):
+                   fcfs             strict arrival order (the paper; every
+                                    job is placed, with a possibly-future
+                                    start, the moment it arrives)
+                   easy_backfill    EASY backfilling over a bounded pending
+                                    window of ``window`` jobs: the oldest
+                                    pending job (the head) holds a
+                                    reservation computed from current
+                                    node-free times, and a later pending
+                                    job may be placed early only if it
+                                    cannot delay that reservation (the
+                                    no-delay guard; backfills may carry
+                                    future starts — see the engine
+                                    docstring); when the window overflows
+                                    the head is force-placed (FCFS
+                                    fallback)
 
 The K guard binds only for ``min_c``: for ``min_t`` it is vacuous by
 construction (the argmin-T system is always feasible), and ``min_avail``
@@ -31,11 +49,14 @@ construction (the argmin-T system is always feasible), and ``min_avail``
 *transform* still matters for ``min_t`` — ``queue_aware`` + ``min_t`` is
 earliest-finish-time ("fastest_completion").
 
-A ``Policy`` is a frozen dataclass registered as a JAX PyTree: the three
+A ``Policy`` is a frozen dataclass registered as a JAX PyTree: the four
 axis names are static metadata (they pick code paths), while the
 hyperparameters ``k`` and ``ucb_scale`` are leaves — so the engine can
 ``vmap`` one compiled simulation over a whole policy-hyperparameter grid
-(e.g. K x ucb-scale) exactly as it vmaps over fault grids.
+(e.g. K x ucb-scale) exactly as it vmaps over fault grids.  ``window``
+(the EASY pending-window bound) is static metadata too, NOT a leaf: it
+sets the shape of the scan carry (the pending buffer), so changing it
+retraces — exactly like changing the discipline itself.
 
 Named compositions live in a registry (``@register_policy``); the paper's
 nine historical modes are thin entries here, and a new policy registered
@@ -62,16 +83,17 @@ BIG = 1e30
 EXPLORATIONS = ("first_released", "predictive_fill", "optimistic_bound")
 FEASIBILITIES = ("bare", "queue_aware", "none")
 OBJECTIVES = ("min_c", "min_t", "min_avail", "random", "oracle")
+QUEUES = ("fcfs", "easy_backfill")
 
 
 @dataclass(frozen=True)
 class Policy:
     """One point (or a leaf-batched grid) of the policy family.
 
-    ``exploration``/``feasibility``/``objective`` are static metadata;
-    ``k`` and ``ucb_scale`` are PyTree leaves and may be arrays — a Policy
-    whose leaves carry a leading axis is a policy *grid* the engine vmaps
-    over in a single compilation.
+    ``exploration``/``feasibility``/``objective``/``queue``/``window`` are
+    static metadata; ``k`` and ``ucb_scale`` are PyTree leaves and may be
+    arrays — a Policy whose leaves carry a leading axis is a policy *grid*
+    the engine vmaps over in a single compilation.
     """
     exploration: str = "first_released"
     feasibility: str = "bare"
@@ -79,6 +101,8 @@ class Policy:
     name: str = ""
     k: float | jax.Array = 0.0           # allowed runtime-increase fraction
     ucb_scale: float | jax.Array = 0.5   # optimism scale for unexplored C
+    queue: str = "fcfs"                  # queue discipline (engine axis)
+    window: int = 8                      # EASY pending-window bound (static)
 
     def __post_init__(self):
         if self.exploration not in EXPLORATIONS:
@@ -90,6 +114,13 @@ class Policy:
         if self.objective not in OBJECTIVES:
             raise ValueError(f"objective {self.objective!r} not in "
                              f"{OBJECTIVES}")
+        if self.queue not in QUEUES:
+            raise ValueError(f"queue {self.queue!r} not in {QUEUES}")
+        # the window sizes the scan-carry pending buffer: a static int >= 1
+        # (CLI specs arrive as floats; normalize on the frozen instance)
+        object.__setattr__(self, "window", int(self.window))
+        if self.window < 1:
+            raise ValueError(f"window must be >= 1, got {self.window}")
 
     def with_params(self, **params) -> "Policy":
         """New Policy with replaced hyperparameter leaves (k, ucb_scale)."""
@@ -107,7 +138,8 @@ class Policy:
 
 jax.tree_util.register_dataclass(
     Policy, data_fields=("k", "ucb_scale"),
-    meta_fields=("exploration", "feasibility", "objective", "name"))
+    meta_fields=("exploration", "feasibility", "objective", "name",
+                 "queue", "window"))
 
 
 # ---------------------------------------------------------------- registry
@@ -154,10 +186,12 @@ def make_policy(name: str, **params) -> Policy:
 def parse_policy_spec(spec: str, **defaults) -> Policy:
     """Parse a CLI policy spec ``name`` or ``name:key=val,key=val``.
 
-    Values parse as floats; e.g. ``ucb:k=0.1,ucb_scale=0.25``.  Keyword
-    ``defaults`` fill hyperparameters the spec does not set explicitly
-    (the CLI passes its ``--k`` here so ``--policy paper`` matches the
-    legacy ``--mode paper`` default).
+    Values parse as floats (``window`` as int, ``queue`` as a discipline
+    name); e.g. ``ucb:k=0.1,ucb_scale=0.25`` or
+    ``paper:k=0.1,queue=easy_backfill,window=16``.  Keyword ``defaults``
+    fill hyperparameters the spec does not set explicitly (the CLI passes
+    its ``--k`` here so ``--policy paper`` matches the legacy ``--mode
+    paper`` default).
     """
     name, _, rest = spec.partition(":")
     params = {}
@@ -167,16 +201,54 @@ def parse_policy_spec(spec: str, **defaults) -> Policy:
             if not _ or not key:
                 raise ValueError(f"bad policy param {item!r} in {spec!r} "
                                  "(expected key=val)")
-            params[key.strip()] = float(val)
+            key = key.strip()
+            if key == "queue":
+                params[key] = val.strip()
+            elif key == "window":
+                params[key] = int(val)
+            else:
+                params[key] = float(val)
     return make_policy(name.strip(), **{**defaults, **params})
 
 
+def parse_queue_spec(spec: str) -> tuple:
+    """Parse a CLI queue spec ``fcfs`` | ``easy_backfill[:window=W]`` into
+    ``(discipline, window-or-None)``."""
+    name, _, rest = spec.partition(":")
+    name = name.strip()
+    if name not in QUEUES:
+        raise ValueError(f"unknown queue discipline {name!r}; known: "
+                         f"{QUEUES}")
+    window = None
+    if rest:
+        key, eq, val = rest.partition("=")
+        if key.strip() != "window" or not eq:
+            raise ValueError(f"bad queue param {rest!r} in {spec!r} "
+                             "(expected window=W)")
+        window = int(val)
+    return name, window
+
+
+def apply_queue_spec(policy: Policy, spec: str) -> Policy:
+    """Return ``policy`` with its queue discipline overridden by a CLI
+    spec (``parse_queue_spec`` grammar).  The single place queue specs are
+    applied — used by ``Scheduler(queue=...)`` and the ``--queue`` flag."""
+    name, window = parse_queue_spec(spec)
+    over = {"queue": name}
+    if window is not None:
+        over["window"] = window
+    return dataclasses.replace(policy, **over)
+
+
 def _entry(name, exploration="first_released", feasibility="bare",
-           objective="min_c"):
+           objective="min_c", queue="fcfs", window=8):
     @register_policy(name)
     def factory(**params):
-        return Policy(exploration=exploration, feasibility=feasibility,
-                      objective=objective, name=name, **params)
+        base = dict(exploration=exploration, feasibility=feasibility,
+                    objective=objective, name=name, queue=queue,
+                    window=window)
+        base.update(params)          # spec overrides (incl. queue/window)
+        return Policy(**base)
     return factory
 
 
@@ -194,6 +266,11 @@ _entry("oracle", objective="oracle")
 _entry("fastest_completion", feasibility="queue_aware", objective="min_t")
 _entry("predictive_queue_aware", exploration="predictive_fill",
        feasibility="queue_aware")
+# Queue-discipline axis (ISSUE 3): the paper's selection rule under EASY
+# backfilling, and its queue-aware variant (reservation-conscious selection
+# composes naturally with reservation-based backfill).
+_entry("easy_backfill", queue="easy_backfill")
+_entry("easy_queue_aware", feasibility="queue_aware", queue="easy_backfill")
 
 
 # ------------------------------------------------------------ jnp selector

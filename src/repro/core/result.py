@@ -10,6 +10,12 @@ Derived metrics (properties, cheap to compute lazily):
   mean_slowdown   mean over jobs of (wait + runtime) / runtime
   mean_wait       total_wait / n_jobs
   utilization     per-system busy node-seconds / (nodes * makespan)
+  backfill_rate   fraction of jobs placed out of arrival order by the
+                  EASY queue discipline (0 under fcfs)
+
+Queue-discipline fields (ISSUE 3): ``n_backfilled`` / ``max_wait`` are
+totals on every result; the per-job ``backfilled`` mask rides with the
+other per-job arrays (``None`` when ``totals_only``).
 
 ``to_dict()`` flattens everything (including the derived metrics) for
 benchmark CSVs and the legacy dict-based callers; per-job arrays are
@@ -24,10 +30,11 @@ import numpy as np
 import jax.numpy as jnp
 
 #: Array fields carrying only the leading (grid) axes.
-_TOTAL_FIELDS = ("total_energy", "makespan", "total_wait", "slowdown_sum")
+_TOTAL_FIELDS = ("total_energy", "makespan", "total_wait", "slowdown_sum",
+                 "max_wait", "n_backfilled")
 #: Array fields with a trailing per-job axis [..., J]; None if totals_only.
 _PERJOB_FIELDS = ("system", "start", "finish", "wait", "energy", "runtime",
-                  "nodes")
+                  "nodes", "backfilled")
 #: Learned-table fields [..., P, S] and the per-system busy field [..., S].
 _TABLE_FIELDS = ("C_tab", "T_tab", "runs", "busy")
 
@@ -46,6 +53,9 @@ class SimResult:
     C_tab: jnp.ndarray
     T_tab: jnp.ndarray
     runs: jnp.ndarray
+    # queue-discipline totals [*axes]
+    max_wait: jnp.ndarray | None = None
+    n_backfilled: jnp.ndarray | None = None
     # per-job [*axes, J]; None when produced with totals_only=True
     system: jnp.ndarray | None = None
     start: jnp.ndarray | None = None
@@ -54,6 +64,7 @@ class SimResult:
     energy: jnp.ndarray | None = None
     runtime: jnp.ndarray | None = None
     nodes: jnp.ndarray | None = None
+    backfilled: jnp.ndarray | None = None
     # metadata
     axes: tuple = ()
     n_jobs: int = 0
@@ -81,14 +92,25 @@ class SimResult:
         denom = self.n_nodes * jnp.expand_dims(self.makespan, -1)
         return self.busy / denom
 
+    @property
+    def backfill_rate(self):
+        """Fraction of jobs placed out of arrival order (EASY backfill);
+        0.0 under the fcfs discipline."""
+        if self.n_backfilled is None:
+            return None
+        return self.n_backfilled / max(self.n_jobs, 1)
+
     def to_dict(self, arrays: bool = True) -> dict:
         """Flatten to a plain dict (the legacy ``simulate_jax`` schema plus
         the derived metrics).  ``arrays=False`` keeps only totals/derived —
         handy for CSV rows."""
-        out = {k: getattr(self, k) for k in _TOTAL_FIELDS}
+        out = {k: getattr(self, k) for k in _TOTAL_FIELDS
+               if getattr(self, k) is not None}
         out["mean_wait"] = self.mean_wait
         out["mean_slowdown"] = self.mean_slowdown
         out["utilization"] = self.utilization
+        if self.backfill_rate is not None:
+            out["backfill_rate"] = self.backfill_rate
         if arrays:
             for k in _TABLE_FIELDS:
                 out[k] = getattr(self, k)

@@ -49,7 +49,7 @@ def sweep_k(w: Workload, scfg: SimConfig, ks):
     (the default) follow the grid.  Legacy shim: a K-grid policy is one
     leaf-batched ``Policy``.
     """
-    pol = make_policy(scfg.mode, k=jnp.asarray(list(ks), jnp.float32))
+    pol = scfg.policy().with_params(k=jnp.asarray(list(ks), jnp.float32))
     return _scheduler_for(scfg, policy=pol).run(w).to_dict()
 
 
@@ -67,7 +67,7 @@ def run_campaign(w: Workload, scfg: SimConfig, ks=None, seeds=None,
     take precedence over the swept K at their positions.
     """
     ks = [scfg.k] if ks is None else list(ks)
-    pol = make_policy(scfg.mode, k=jnp.asarray(ks, jnp.float32))
+    pol = scfg.policy().with_params(k=jnp.asarray(ks, jnp.float32))
     seeds = [scfg.seed] if seeds is None else list(seeds)
     sched = _scheduler_for(scfg, policy=pol, seeds=seeds,
                            faults=None if faults is None else tuple(faults))
@@ -90,34 +90,31 @@ def _scheduler_for(scfg: SimConfig, policy=None, seeds=None, faults=None):
 
 # ------------------------------------------------------------ python mirror
 
-def simulate_py(w: Workload, scfg: SimConfig):
-    """Reference implementation for differential tests (no faults path).
+class _PySim:
+    """Mutable float64 simulation state shared by the mirror's queue
+    disciplines: per-node free-time lists, learned tables, and the
+    placement primitives that must stay in lockstep with the jax engine
+    (``_earliest`` / ``_alloc`` / the table update in ``_scan_sim``)."""
 
-    Dispatches through the policy registry (``scfg.mode`` may name ANY
-    registered policy).  All arithmetic runs in float64 numpy — an
-    independent-precision check of the f32 jax engine — except the
-    "random" draw, which replays the jax PRNG stream so the two
-    implementations place identically.
-    """
-    assert scfg.straggler_prob == 0 and scfg.failure_prob == 0, \
-        "python mirror covers the deterministic path"
-    pol = make_policy(scfg.mode)
-    P, S = w.T_true.shape
-    node_free = [list(np.zeros(int(n))) for n in w.n_nodes]
-    if scfg.warm_start:
-        C_tab, T_tab = w.C_true.copy(), w.T_true.copy()
-        runs = np.ones((P, S), np.int64)
-    else:
-        C_tab = np.zeros((P, S))
-        T_tab = np.zeros((P, S))
-        runs = np.zeros((P, S), np.int64)
-    sel_key = (jax.random.split(jax.random.key(scfg.seed))[0]
-               if pol.objective == "random" else None)
-    out = []
-    for j, p in enumerate(w.prog):
-        arr = float(w.arrival[j])
-        kj = float(w.k_job[j])
-        k = scfg.k if np.isnan(kj) else kj
+    def __init__(self, w: Workload, scfg: SimConfig, pol):
+        self.w, self.scfg, self.pol = w, scfg, pol
+        P, S = w.T_true.shape
+        self.S = S
+        self.node_free = [list(np.zeros(int(n))) for n in w.n_nodes]
+        if scfg.warm_start:
+            self.C_tab, self.T_tab = w.C_true.copy(), w.T_true.copy()
+            self.runs = np.ones((P, S), np.int64)
+        else:
+            self.C_tab = np.zeros((P, S))
+            self.T_tab = np.zeros((P, S))
+            self.runs = np.zeros((P, S), np.int64)
+        self.sel_key = (jax.random.split(jax.random.key(scfg.seed))[0]
+                        if pol.objective == "random" else None)
+
+    def avail_for(self, p: int, arr: float, node_free=None) -> np.ndarray:
+        """Earliest start per system (float64 kth-free + outage push)."""
+        w, S = self.w, self.S
+        node_free = self.node_free if node_free is None else node_free
         avail = np.empty(S)
         for s in range(S):
             free = sorted(node_free[s])
@@ -127,35 +124,118 @@ def simulate_py(w: Workload, scfg: SimConfig):
                 for o0, o1 in w.outage[s]:
                     if o0 <= avail[s] < o1:
                         avail[s] = o1
+        return avail
 
+    def choose(self, j: int):
+        """Policy selection for job j under current state: returns
+        (p, arr, avail, sel)."""
+        w = self.w
+        p = int(w.prog[j])
+        arr = float(w.arrival[j])
+        kj = float(w.k_job[j])
+        k = self.scfg.k if np.isnan(kj) else kj
+        avail = self.avail_for(p, arr)
         rand_sel = None
-        if pol.objective == "random":
+        if self.pol.objective == "random":
             rand_sel = int(jax.random.randint(
-                jax.random.fold_in(sel_key, j), (), 0, S))
+                jax.random.fold_in(self.sel_key, j), (), 0, self.S))
         sel = select_py(
-            pol, c_row=C_tab[p], t_row=T_tab[p], runs_row=runs[p],
-            avail_row=avail, k=k, c_pred_row=w.C_pred[p],
-            t_pred_row=w.T_pred[p], rand_sel=rand_sel)
+            self.pol, c_row=self.C_tab[p], t_row=self.T_tab[p],
+            runs_row=self.runs[p], avail_row=avail, k=k,
+            c_pred_row=w.C_pred[p], t_pred_row=w.T_pred[p],
+            rand_sel=rand_sel)
+        return p, arr, avail, sel
 
+    @staticmethod
+    def alloc(node_free, sel: int, need: int, finish: float):
+        """Allocate the ``need`` earliest-free nodes (stable argsort ==
+        the engine's first-by-index tie-break)."""
+        idx = np.argsort(node_free[sel])[:need]
+        for i in idx:
+            node_free[sel][int(i)] = finish
+
+    def place(self, j: int):
+        """Place job j (the FCFS step body): allocate, update tables,
+        return the per-job record."""
+        w = self.w
+        p, arr, avail, sel = self.choose(j)
         T_act = float(w.T_true[p, sel])
         E_act = float(w.E_true[p, sel])
         C_act = float(w.C_true[p, sel])
         start = float(avail[sel])
         finish = start + T_act
-        need = int(w.n_req[p, sel])
-        idx = np.argsort(node_free[sel])[:need]
-        for i in idx:
-            node_free[sel][int(i)] = finish
-        n = runs[p, sel]
-        C_tab[p, sel] = (C_tab[p, sel] * n + C_act) / (n + 1)
-        T_tab[p, sel] = (T_tab[p, sel] * n + T_act) / (n + 1)
-        runs[p, sel] += 1
-        out.append((sel, start, finish, start - arr, E_act, T_act))
+        self.alloc(self.node_free, sel, int(w.n_req[p, sel]), finish)
+        n = self.runs[p, sel]
+        self.C_tab[p, sel] = (self.C_tab[p, sel] * n + C_act) / (n + 1)
+        self.T_tab[p, sel] = (self.T_tab[p, sel] * n + T_act) / (n + 1)
+        self.runs[p, sel] += 1
+        return (sel, start, finish, start - arr, E_act, T_act)
+
+
+def _easy_order_py(sim: _PySim, J: int, window: int):
+    """Replay the engine's EASY-backfill step decisions (one placement per
+    step, bounded pending window, no-delay reservation guard); yields
+    (job, backfilled) in placement order."""
+    w = sim.w
+    pend: list[int] = []
+    for t in range(J + window):
+        now = float(w.arrival[t]) if t < J else np.inf
+        if t < J:
+            pend.append(t)
+        if not pend:
+            continue
+        h = pend[0]
+        p_h, arr_h, avail_h, sel_h = sim.choose(h)
+        r_h = float(avail_h[sel_h])
+        chosen = None
+        if len(pend) == window + 1 or r_h <= now:   # overflow: FCFS fallback
+            chosen = 0
+        else:
+            for ci in range(1, len(pend)):
+                b = pend[ci]
+                p_b, _, avail_b, sel_b = sim.choose(b)
+                s_b = float(avail_b[sel_b])
+                trial = [list(fl) for fl in sim.node_free]
+                sim.alloc(trial, sel_b, int(w.n_req[p_b, sel_b]),
+                          s_b + float(w.T_true[p_b, sel_b]))
+                if sim.avail_for(p_h, arr_h, trial)[sel_h] <= r_h:
+                    chosen = ci
+                    break
+        if chosen is not None:
+            yield pend.pop(chosen), chosen > 0
+
+
+def simulate_py(w: Workload, scfg: SimConfig):
+    """Reference implementation for differential tests (no faults path).
+
+    Dispatches through the policy registry (``scfg.mode`` may name ANY
+    registered policy) and mirrors both queue disciplines — FCFS arrival
+    order and EASY backfilling (reservation semantics replayed step for
+    step).  All arithmetic runs in float64 numpy — an independent-precision
+    check of the f32 jax engine — except the "random" draw, which replays
+    the jax PRNG stream so the two implementations place identically.
+    """
+    assert scfg.straggler_prob == 0 and scfg.failure_prob == 0, \
+        "python mirror covers the deterministic path"
+    pol = scfg.policy()
+    sim = _PySim(w, scfg, pol)
+    J = len(w.prog)
+    if pol.queue == "easy_backfill":
+        order = _easy_order_py(sim, J, int(pol.window))
+    else:
+        order = ((j, False) for j in range(J))
+    out = [None] * J
+    backfilled = np.zeros(J, bool)
+    for j, bf in order:
+        out[j] = sim.place(j)
+        backfilled[j] = bf
+    assert all(rec is not None for rec in out), "job left unplaced"
 
     sel, start, finish, wait, E, T_act = map(np.array, zip(*out))
     return {
         "system": sel, "start": start, "finish": finish, "wait": wait,
-        "energy": E, "runtime": T_act,
+        "energy": E, "runtime": T_act, "backfilled": backfilled,
+        "n_backfilled": int(backfilled.sum()),
         "total_energy": E.sum(), "makespan": finish.max(),
-        "total_wait": wait.sum(),
+        "total_wait": wait.sum(), "max_wait": wait.max(),
     }

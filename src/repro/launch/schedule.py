@@ -10,6 +10,13 @@ as floats), e.g.:
 
 (the legacy ``--mode NAME --k F`` spelling still works).
 
+Queue discipline (``--queue``): placement order over the pending queue —
+``fcfs`` (strict arrival order, the paper) or EASY backfilling with a
+bounded pending window::
+
+    PYTHONPATH=src python -m repro.launch.schedule --jobs 200 \
+        --scenario diurnal --queue easy_backfill:window=16
+
 Single run / K sweep (the paper's Figs 1-4 regime):
 
     PYTHONPATH=src python -m repro.launch.schedule --policy paper:k=0.1
@@ -57,7 +64,8 @@ import numpy as np
 
 from repro.core import (JSCC_SYSTEMS, FaultConfig, Scheduler,
                         make_npb_workload, make_policy, parse_policy_spec,
-                        policy_names)
+                        policy_names, QUEUES)
+from repro.core.policy import apply_queue_spec
 from repro.data.scenarios import (make_stream_workload, maintenance_windows,
                                   load_swf, workload_from_trace,
                                   NPB_SMALL, NPB_LARGE, ARRIVAL_KINDS)
@@ -93,8 +101,12 @@ def build_policy(args):
     if args.policy:
         # --k fills in when the spec doesn't set k explicitly, so
         # `--policy paper` == `--mode paper` (K defaults to 0.1)
-        return parse_policy_spec(args.policy, k=args.k)
-    return make_policy(args.mode, k=args.k)
+        pol = parse_policy_spec(args.policy, k=args.k)
+    else:
+        pol = make_policy(args.mode, k=args.k)
+    if args.queue:
+        pol = apply_queue_spec(pol, args.queue)
+    return pol
 
 
 def main():
@@ -107,6 +119,9 @@ def main():
                     help="legacy spelling of --policy NAME")
     ap.add_argument("--k", type=float, default=0.1,
                     help="legacy spelling of --policy NAME:k=F")
+    ap.add_argument("--queue", default="", metavar="DISC[:window=W]",
+                    help="queue discipline overriding the policy's own: "
+                         f"{' | '.join(QUEUES)}; e.g. easy_backfill:window=16")
     ap.add_argument("--sweep-k", default="",
                     help="comma-separated K values (fractions)")
     ap.add_argument("--jobs", type=int, default=0,
@@ -176,12 +191,15 @@ def main():
                   warm_start=not args.cold).run(w)
     sel = np.asarray(r.system)
     k_str = np.format_float_positional(float(np.asarray(pol.k)), trim="-")
-    print(f"policy={pol.name} K={k_str} jobs={r.n_jobs} "
+    q_str = pol.queue if pol.queue == "fcfs" else \
+        f"{pol.queue}(window={pol.window})"
+    print(f"policy={pol.name} K={k_str} queue={q_str} jobs={r.n_jobs} "
           f"warm={not args.cold}")
     print(f"energy={float(r.total_energy)/1e3:.1f} kJ  "
           f"makespan={float(r.makespan):.1f} s  "
           f"total_wait={float(r.total_wait):.1f} s  "
-          f"mean_slowdown={float(r.mean_slowdown):.2f}")
+          f"mean_slowdown={float(r.mean_slowdown):.2f}  "
+          f"backfill_rate={float(r.backfill_rate):.1%}")
     counts = np.bincount(sel, minlength=len(w.systems))
     print("placements:", {w.systems[i]: int(c) for i, c in enumerate(counts)})
     util = np.asarray(r.utilization)

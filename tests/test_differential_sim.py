@@ -89,6 +89,129 @@ def test_no_notimplemented_paths():
         simulate_py(w, SimConfig(mode=mode, k=0.1, warm_start=True))
 
 
+# ------------------------------------------- EASY backfilling differentials
+
+def _contended_stream(n=50, rate=1.2, kind="poisson", seed=3):
+    """High arrival rate => real queueing, so the EASY window actually
+    holds heads and evaluates backfill candidates."""
+    return make_stream_workload(JSCC_SYSTEMS, n, arrival=kind, rate=rate,
+                                seed=seed, pred_noise=0.05)
+
+
+@pytest.mark.parametrize("warm", [True, False], ids=["warm", "cold"])
+@pytest.mark.parametrize("window", [2, 8])
+def test_differential_easy_backfill(warm, window):
+    """jax == python across the reservation/backfill decision sequence,
+    warm and cold tables, small and default windows."""
+    w = _contended_stream()
+    cfg = SimConfig(mode="easy_backfill", k=0.1, warm_start=warm,
+                    queue_window=window)
+    assert_differential(w, cfg)
+    # the mirror's n_backfilled must agree too (placement ORDER, not just
+    # final placements)
+    rj = simulate_jax(w, cfg)
+    rp = simulate_py(w, cfg)
+    np.testing.assert_array_equal(np.asarray(rj["backfilled"]),
+                                  rp["backfilled"])
+    assert int(rj["n_backfilled"]) == rp["n_backfilled"]
+
+
+@pytest.mark.parametrize("mode", ["queue_aware", "fastest", "predictive"])
+def test_differential_easy_composes_with_selectors(mode):
+    """The queue discipline is an orthogonal axis: any selector composes
+    with easy_backfill and stays differentially exact."""
+    w = _contended_stream(n=40, kind="bursty", rate=0.8, seed=5)
+    assert_differential(w, SimConfig(mode=mode, k=0.1, warm_start=True,
+                                     queue="easy_backfill", queue_window=4))
+
+
+def test_differential_easy_with_outage_windows():
+    outage = maintenance_windows(
+        4, {1: [(0.0, 400.0)], 3: [(50.0, 250.0)]})
+    w = make_stream_workload(JSCC_SYSTEMS, 35, arrival="poisson", rate=0.8,
+                             seed=8, outage=outage)
+    assert_differential(w, SimConfig(mode="easy_backfill", k=0.1,
+                                     warm_start=True, queue_window=6))
+
+
+def test_differential_easy_trace_replay():
+    swf = "\n".join(
+        f"{i+1} {i*15} 0 {200 + 61*i % 2400} {2 ** (2 + i % 7)} 100.0 0 "
+        f"{2 ** (2 + i % 7)} 1000 0 1 1 1 1 1 1 -1 -1"
+        for i in range(50)).splitlines()
+    w = workload_from_trace(load_swf(swf), JSCC_SYSTEMS)
+    assert_differential(w, SimConfig(mode="easy_backfill", k=0.2,
+                                     warm_start=True))
+
+
+def test_differential_easy_window_full_fallback():
+    """window=1 leaves no backfill slots: every placement is the forced
+    head (FCFS fallback), so placements must be identical to fcfs — and
+    the python mirror must agree."""
+    w = _contended_stream(n=30)
+    cfg = SimConfig(mode="paper", k=0.1, warm_start=True,
+                    queue="easy_backfill", queue_window=1)
+    assert_differential(w, cfg)
+    easy = simulate_jax(w, cfg)
+    fcfs = simulate_jax(w, SimConfig(mode="paper", k=0.1, warm_start=True))
+    np.testing.assert_array_equal(np.asarray(easy["system"]),
+                                  np.asarray(fcfs["system"]))
+    np.testing.assert_array_equal(np.asarray(easy["start"]),
+                                  np.asarray(fcfs["start"]))
+    assert int(easy["n_backfilled"]) == 0
+
+
+def _blocking_workload(n_ep=4):
+    """Hand-built EASY showcase on the real NPB tables: with K huge every
+    job picks min-C KNL (38 nodes); LU needs 4 nodes there, so ten LUs
+    saturate it (9 run, the 10th is the held head reserving the first LU
+    finish); EP needs only 2 nodes — the idle pair — and runs ~8 s, far
+    inside the ~100 s reservation gap."""
+    from dataclasses import replace
+    order = ("LU",) * 10 + ("EP",) * n_ep
+    w = make_npb_workload(JSCC_SYSTEMS, order=order,
+                          arrivals=np.zeros(len(order), np.float32))
+    return replace(w, k_job=np.full(len(order), 5.0, np.float32))
+
+
+def test_easy_backfill_never_delays_head():
+    """The EASY no-delay guard: the narrow EP jobs backfill into the
+    2-node gap under the head's reservation, and the held head (10th LU)
+    starts exactly when it would under FCFS."""
+    w = _blocking_workload()
+    cfg = SimConfig(mode="paper", warm_start=True,
+                    queue="easy_backfill", queue_window=8)
+    assert_differential(w, cfg)
+    fcfs = simulate_jax(w, SimConfig(mode="paper", warm_start=True))
+    easy = simulate_jax(w, cfg)
+    f_start = np.asarray(fcfs["start"])
+    e_start = np.asarray(easy["start"])
+    # the held head is not delayed by the backfills
+    np.testing.assert_allclose(e_start[9], f_start[9], rtol=1e-6)
+    # no job starts later than under FCFS in this scenario
+    assert (e_start <= f_start * (1 + 1e-6) + 1e-3).all()
+    # the EPs really did jump the queue
+    assert np.asarray(easy["backfilled"])[10:].all()
+
+
+def test_easy_backfill_improves_wait_when_gap_exists():
+    """The blocked wide head + narrow short jobs: EASY strictly beats
+    FCFS wait (the gap under the reservation is capacity FCFS wastes),
+    and the metrics fields report it."""
+    w = _blocking_workload()
+    fcfs = simulate_jax(w, SimConfig(mode="paper", warm_start=True))
+    easy = simulate_jax(w, SimConfig(mode="paper", warm_start=True,
+                                     queue="easy_backfill", queue_window=8))
+    assert float(easy["total_wait"]) < float(fcfs["total_wait"])
+    assert float(easy["max_wait"]) <= float(fcfs["max_wait"]) + 1e-3
+    assert int(easy["n_backfilled"]) >= 4
+    # the python mirror agrees on the improvement, not just placements
+    rp = simulate_py(w, SimConfig(mode="paper", warm_start=True,
+                                  queue="easy_backfill", queue_window=8))
+    np.testing.assert_allclose(float(easy["total_wait"]), rp["total_wait"],
+                               rtol=1e-5, atol=1e-3)
+
+
 # ------------------------------------------------- kth-free placement kernel
 
 def test_kth_free_matches_sort_bitexact():

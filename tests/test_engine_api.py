@@ -12,8 +12,8 @@ import pytest
 
 from repro.core import (JSCC_SYSTEMS, FaultConfig, Scheduler, SimConfig,
                         CampaignResult, SimResult, make_npb_workload,
-                        make_policy, simulate_jax, sweep_k, run_campaign,
-                        MODES)
+                        make_policy, policy_names, simulate_jax, sweep_k,
+                        run_campaign, MODES)
 from repro.core.engine import _batched_run
 from repro.data.scenarios import make_stream_workload
 
@@ -161,6 +161,97 @@ def test_campaign_result_axes_and_index(stream):
         res.index(bogus=0)
     with pytest.raises(TypeError, match="integer points"):
         res.index(seed=slice(0, 2))
+
+
+# ------------------------------------------------- queue-discipline axis
+
+@pytest.mark.parametrize("name", [n for n in policy_names()
+                                  if make_policy(n).queue == "fcfs"])
+def test_explicit_fcfs_bit_identical_per_mode(stream, name):
+    """Acceptance (ISSUE 3): --queue fcfs must reproduce the pre-axis
+    engine bit for bit, asserted per registered policy.  The legacy
+    ``simulate_jax`` path is the pre-axis behaviour anchor (its own
+    bit-identity to the seed engine is pinned by the differential and
+    shim suites above)."""
+    legacy = simulate_jax(stream, SimConfig(mode=name, k=0.1,
+                                            warm_start=True, seed=2))
+    res = Scheduler(make_policy(name, k=0.1), warm_start=True, seeds=2,
+                    queue="fcfs").run(stream)
+    np.testing.assert_array_equal(np.asarray(legacy["system"]),
+                                  np.asarray(res.system))
+    for key in ("start", "finish", "total_energy", "makespan"):
+        np.testing.assert_array_equal(np.asarray(legacy[key]),
+                                      np.asarray(getattr(res, key)))
+    assert int(res.n_backfilled) == 0
+    assert not np.asarray(res.backfilled).any()
+
+
+def test_legacy_shims_honor_queue_override(stream):
+    """sweep_k / run_campaign must respect SimConfig.queue, not silently
+    fall back to FCFS (regression: the shims rebuilt the policy from
+    scfg.mode and dropped the override)."""
+    scfg = SimConfig(mode="paper", warm_start=True, queue="easy_backfill",
+                     queue_window=4)
+    ks = [0.0, 0.1]
+    swept = sweep_k(stream, scfg, ks)
+    camp = run_campaign(stream, scfg, ks=ks, seeds=[0])
+    for i, k in enumerate(ks):
+        single = Scheduler(make_policy("easy_backfill", k=k, window=4),
+                           warm_start=True).run(stream)
+        np.testing.assert_array_equal(np.asarray(swept["system"])[i],
+                                      np.asarray(single.system))
+        np.testing.assert_array_equal(np.asarray(camp["system"])[i, 0],
+                                      np.asarray(single.system))
+
+
+def test_scheduler_queue_kwarg_overrides_policy():
+    s = Scheduler("paper", queue="easy_backfill:window=4")
+    assert s.policy.queue == "easy_backfill" and s.policy.window == 4
+    s2 = Scheduler("easy_backfill", queue="fcfs")
+    assert s2.policy.queue == "fcfs"
+    with pytest.raises(ValueError, match="unknown queue"):
+        Scheduler("paper", queue="lifo")
+
+
+def test_easy_backfill_metrics_and_grid(stream):
+    """Backfill metrics flow through CampaignResult axes, .index(), and
+    the totals_only path; the K-grid easy run shares one compilation."""
+    ks = np.asarray([0.0, 0.1], np.float32)
+    pol = make_policy("easy_backfill", k=ks, window=6)
+    sched = Scheduler(pol, seeds=[0, 1], warm_start=True)
+    full = sched.run(stream)
+    assert full.axes == ("policy", "seed")
+    assert np.asarray(full.n_backfilled).shape == (2, 2)
+    assert np.asarray(full.backfilled).shape == (2, 2, 30)
+    assert np.asarray(full.max_wait).shape == (2, 2)
+    one = full.index(policy=0, seed=1)
+    assert np.asarray(one.backfilled).shape == (30,)
+    np.testing.assert_array_equal(
+        np.asarray(one.backfilled).sum(), np.asarray(one.n_backfilled))
+    d = one.to_dict()
+    for key in ("n_backfilled", "max_wait", "backfill_rate", "backfilled"):
+        assert key in d
+    tot = sched.run(stream, totals_only=True)
+    assert tot.backfilled is None
+    np.testing.assert_array_equal(np.asarray(tot.n_backfilled),
+                                  np.asarray(full.n_backfilled))
+    np.testing.assert_allclose(np.asarray(tot.total_wait),
+                               np.asarray(full.total_wait),
+                               rtol=2e-5, atol=1e-2)
+    np.testing.assert_allclose(np.asarray(tot.max_wait),
+                               np.asarray(full.max_wait),
+                               rtol=2e-5, atol=1e-2)
+
+
+def test_easy_backfill_grid_single_compile(stream):
+    """The queue discipline keeps hyperparameter leaves batched: a K x ucb
+    grid under easy_backfill is still ONE compilation."""
+    kk = np.linspace(0.0, 0.3, 8).astype(np.float32)
+    pol = make_policy("easy_backfill", k=kk, window=4)
+    cache0 = _batched_run._cache_size()
+    res = Scheduler(pol).run(stream, totals_only=True)
+    assert _batched_run._cache_size() - cache0 <= 1
+    assert np.asarray(res.total_energy).shape == (8,)
 
 
 def test_scheduler_accepts_name_or_policy(stream):

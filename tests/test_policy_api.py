@@ -58,6 +58,32 @@ def test_policy_validates_axes():
         Policy(exploration="psychic")
     with pytest.raises(ValueError, match="objective"):
         Policy(objective="min_vibes")
+    with pytest.raises(ValueError, match="queue"):
+        Policy(queue="lifo")
+    with pytest.raises(ValueError, match="window"):
+        Policy(queue="easy_backfill", window=0)
+    # CLI specs deliver floats; the frozen instance normalizes to int
+    assert Policy(queue="easy_backfill", window=4.0).window == 4
+
+
+def test_parse_queue_spec():
+    from repro.core import parse_queue_spec
+    assert parse_queue_spec("fcfs") == ("fcfs", None)
+    assert parse_queue_spec("easy_backfill") == ("easy_backfill", None)
+    assert parse_queue_spec("easy_backfill:window=16") == \
+        ("easy_backfill", 16)
+    with pytest.raises(ValueError, match="unknown queue"):
+        parse_queue_spec("lifo")
+    with pytest.raises(ValueError, match="window=W"):
+        parse_queue_spec("easy_backfill:depth=3")
+
+
+def test_parse_policy_spec_queue_params():
+    p = parse_policy_spec("paper:k=0.2,queue=easy_backfill,window=12")
+    assert p.queue == "easy_backfill" and p.window == 12
+    assert float(p.k) == pytest.approx(0.2)
+    assert parse_policy_spec("easy_backfill").queue == "easy_backfill"
+    assert parse_policy_spec("easy_backfill:window=3").window == 3
 
 
 def test_register_policy_rejects_duplicates():
