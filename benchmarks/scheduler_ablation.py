@@ -18,9 +18,18 @@ FCFS vs EASY backfilling on the contended SWF-replay and diurnal streams
 the classic HPC literature evaluates with backfill; EASY must strictly
 improve mean wait on at least one of them (asserted).
 
+``run_window_scaling`` is the batched-candidate-evaluation proof
+(ISSUE 4): the EASY warm wall-clock across W in {4, 8, 16, 32} with the
+FCFS baseline, asserted >= 5x faster than the PR 3 unrolled loop's
+committed W=16 row (machine-speed-normalized via the FCFS baseline) and
+sub-linear in W.
+
 Run as a module (``python benchmarks/scheduler_ablation.py``) to also
-write ``BENCH_scheduler.json`` (every row + per-point wall-clock) at the
-repo root, so the scheduler perf trajectory is tracked across commits.
+write ``BENCH_scheduler.json`` (every row + per-point wall-clock; rows
+that only carry derived metrics are marked ``"timed": false``) at the
+repo root, so the scheduler perf trajectory is tracked across commits —
+``tests/test_bench_guard.py`` gates regressions against the committed
+rows in CI.
 """
 
 from __future__ import annotations
@@ -29,6 +38,7 @@ import json
 import pathlib
 import time
 
+import jax
 import numpy as np
 
 from repro.core import (JSCC_SYSTEMS, FaultConfig, Scheduler, make_policy,
@@ -39,6 +49,40 @@ from repro.data.scenarios import (load_swf, make_stream_workload,
 
 KS = (0.05, 0.10, 0.20)
 SEEDS = (0, 1)
+
+#: PR 3's committed warm wall-clock (BENCH_scheduler.json @ 9d6f3dd) for
+#: the python-unrolled EASY scan at W=16 on the SWF stream, with its FCFS
+#: row as the machine-speed anchor.  The batched candidate evaluation
+#: (ISSUE 4) must beat the unrolled number by >= 5x; the anchor converts
+#: that bar to the machine actually running the benchmark.
+PR3_EASY_W16_US = 1_357_624.3
+PR3_FCFS_US = 31_567.4
+
+
+def _warm_us(sched, w, repeats: int = 3):
+    """Warm wall-clock of one ``Scheduler.run``: first call compiles, then
+    best-of-``repeats`` timed calls (device-synced) — the scan, not XLA
+    compilation or scheduler noise.  Returns ``(microseconds, result)``
+    with the last run's result, so callers read metrics without paying
+    for yet another simulation."""
+    jax.block_until_ready(sched.run(w).total_energy)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        res = sched.run(w)
+        jax.block_until_ready(res.total_energy)
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6, res
+
+
+def machine_speed_factor(fresh_fcfs_us: float, anchor_us: float) -> float:
+    """How much slower this machine is than the one that produced the
+    anchor FCFS measurement.  Unclamped on purpose: scaling a bound by
+    this ratio makes it machine-invariant in both directions (a faster
+    machine shrinks the absolute bound proportionally), and best-of-N
+    warm timing cannot fluke *below* the hardware's real speed, so a
+    ratio < 1 always means genuinely faster hardware."""
+    return fresh_fcfs_us / anchor_us
 
 
 def _stream(n_jobs=200, seed=0):
@@ -124,11 +168,8 @@ def run_queue_disciplines():
             qname = queue.split(":")[0]
             sched = Scheduler(make_policy("paper", k=0.10), warm_start=True,
                               queue=queue)
-            sched.run(w)                 # warm the jit cache: time the scan,
-            t0 = time.perf_counter()     # not XLA compilation
-            res = sched.run(w)
+            us, res = _warm_us(sched, w)
             mw = float(np.asarray(res.mean_wait))
-            us = (time.perf_counter() - t0) * 1e6
             waits[qname] = mw
             rows.append((
                 f"queue_{tag}_{qname}", us,
@@ -141,6 +182,49 @@ def run_queue_disciplines():
                      f"dwait={100 * (waits['easy_backfill'] / waits['fcfs'] - 1):+.1f}%"))
     assert any(improved), \
         "EASY backfilling improved mean wait on no stream (acceptance)"
+    return rows
+
+
+def run_window_scaling():
+    """EASY window-scaling sweep on the contended SWF stream: warm
+    wall-clock for W in {4, 8, 16, 32} with the (W-independent) FCFS
+    baseline.  Two asserted properties of the batched candidate
+    evaluation (ISSUE 4):
+
+    - >= 5x faster at W=16 than the PR 3 unrolled loop's committed row
+      (the hard-coded ``PR3_*`` anchors, normalized to this machine's
+      speed through the FCFS baseline);
+    - sub-linear cost growth in W: the 8x window increase 4 -> 32 must
+      cost well under 8x (one shared sort + one [W, maxN] row query per
+      step, so the per-step kernel work barely scales with W).
+    """
+    w = queue_streams()["swf"]
+    pol = make_policy("paper", k=0.10)
+    fcfs_us, _ = _warm_us(Scheduler(pol, warm_start=True), w)
+    rows = [("queue_window_fcfs", fcfs_us, "baseline;window-independent")]
+    by_w = {}
+    for window in (4, 8, 16, 32):
+        sched = Scheduler(pol, warm_start=True,
+                          queue=f"easy_backfill:window={window}")
+        us, res = _warm_us(sched, w)
+        by_w[window] = us
+        rows.append((
+            f"queue_window_w{window}", us,
+            f"mean_wait={float(res.mean_wait):.1f}s"
+            f";backfill_rate={float(res.backfill_rate):.2f}"
+            f";x_fcfs={us / fcfs_us:.1f}"))
+    speed = machine_speed_factor(fcfs_us, PR3_FCFS_US)
+    gain = PR3_EASY_W16_US * speed / by_w[16]
+    rows.append(("queue_window_gain_vs_pr3", 0.0,
+                 f"gain={gain:.1f}x;speed_factor={speed:.2f}"
+                 f";w32_over_w4={by_w[32] / by_w[4]:.2f}"))
+    assert gain >= 5.0, (
+        f"batched EASY at W=16 is only {gain:.1f}x faster than the PR 3 "
+        f"committed row (>= 5x required): {by_w[16]:.0f}us vs "
+        f"{PR3_EASY_W16_US:.0f}us @ speed factor {speed:.2f}")
+    assert by_w[32] < 8.0 * by_w[4], (
+        f"window cost not sub-linear: W=32 {by_w[32]:.0f}us vs "
+        f"W=4 {by_w[4]:.0f}us (8x window must cost < 8x)")
     return rows
 
 
@@ -176,25 +260,52 @@ def run_fault_tolerance():
 SUITES = (("ablation", run),
           ("policy_grid", run_policy_grid),
           ("fault_tolerance", run_fault_tolerance),
-          ("queue_disciplines", run_queue_disciplines))
+          ("queue_disciplines", run_queue_disciplines),
+          ("window_scaling", run_window_scaling))
 
 
-def main():
-    """Run every ablation suite, print the CSV, and persist the rows (with
-    per-point wall-clock) to BENCH_scheduler.json at the repo root."""
+def main(argv=None):
+    """Run the ablation suites (all by default; ``--suites a,b`` for a
+    subset — the bench-smoke PR job runs only the queue suites), print
+    the CSV, and persist the rows (with per-point wall-clock) to
+    BENCH_scheduler.json at the repo root.  Rows that only carry derived
+    metrics (no wall-clock of their own) are marked ``"timed": false``
+    so the regression gate and averaging tools never mistake their 0.0
+    for a measurement."""
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--suites", default="",
+                    help="comma-separated subset of: "
+                         + ",".join(n for n, _ in SUITES))
+    args = ap.parse_args(argv)
+    wanted = set(args.suites.split(",")) if args.suites else None
+    if wanted is not None:
+        unknown = wanted - {n for n, _ in SUITES}
+        if unknown:
+            ap.error(f"unknown suites {sorted(unknown)}")
     rows = []
     print("name,us_per_call,derived")
-    for _, fn in SUITES:
+    for name, fn in SUITES:
+        if wanted is not None and name not in wanted:
+            continue
         for row in fn():
             rows.append(row)
             print(f"{row[0]},{row[1]:.1f},{row[2]}")
+    fresh = [{"name": n, "us_per_call": round(us, 1), "timed": us > 0,
+              "derived": d}
+             for n, us, d in rows]
+    out = pathlib.Path(__file__).resolve().parent.parent / "BENCH_scheduler.json"
+    if wanted is not None and out.exists():
+        # subset runs refresh their own rows IN the existing file — never
+        # drop the other suites' committed rows from the artifact
+        by_name = {r["name"]: r for r in fresh}
+        old = json.loads(out.read_text())["rows"]
+        fresh = [by_name.pop(r["name"], r) for r in old] + list(by_name.values())
     payload = {
         "bench": "scheduler",
         "generated_unix": time.time(),
-        "rows": [{"name": n, "us_per_call": round(us, 1), "derived": d}
-                 for n, us, d in rows],
+        "rows": fresh,
     }
-    out = pathlib.Path(__file__).resolve().parent.parent / "BENCH_scheduler.json"
     out.write_text(json.dumps(payload, indent=2) + "\n")
     print(f"wrote {out}")
 

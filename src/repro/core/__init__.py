@@ -9,7 +9,8 @@ from repro.core.workload_model import (
 from repro.core.profiles import ProfileStore, k_auto
 from repro.core.policy import (
     Policy, register_policy, make_policy, policy_names, parse_policy_spec,
-    parse_queue_spec, EXPLORATIONS, FEASIBILITIES, OBJECTIVES, QUEUES,
+    parse_queue_spec, select_batched,
+    EXPLORATIONS, FEASIBILITIES, OBJECTIVES, QUEUES,
 )
 from repro.core.algorithm import select_system, MODES
 from repro.core.result import SimResult, CampaignResult

@@ -59,10 +59,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.policy import (BIG, Policy, apply_queue_spec, make_policy,
-                               select)
+                               select, select_batched)
 from repro.core.result import SimResult, CampaignResult
 from repro.core.workload_model import NPB_PROFILES, npb_tables
-from repro.kernels.kth_free import kth_free_time
+from repro.kernels.kth_free import kth_free_time, kth_free_time_shared
 
 
 @dataclass(frozen=True)
@@ -191,7 +191,8 @@ def _workload_arrays(w: Workload) -> dict:
 def _push_out_of_outage(avail, outage):
     """Earliest start per system, pushed past any open maintenance window.
     Windows sorted by start per system, so one in-order pass resolves
-    cascades (a push landing inside the next window is pushed again)."""
+    cascades (a push landing inside the next window is pushed again).
+    ``avail``'s last axis is the system axis (leading axes broadcast)."""
     for wi in range(outage.shape[1]):
         o0, o1 = outage[:, wi, 0], outage[:, wi, 1]
         avail = jnp.where((avail >= o0) & (avail < o1), o1, avail)
@@ -205,6 +206,18 @@ def _earliest(node_free, nreq_row, arr, placer, outage):
     backfill guard, and the final placement."""
     kth = kth_free_time(node_free, nreq_row, force=placer)
     avail = jnp.maximum(arr, kth)
+    if outage is not None:
+        avail = _push_out_of_outage(avail, outage)
+    return kth, avail
+
+
+def _earliest_shared(node_free, nreq_rows, arr_col, placer, outage):
+    """``_earliest`` for a whole candidate batch against ONE node-free
+    table: [W, S] requests -> ([W, S] kth, [W, S] earliest start), via the
+    shared-table kernel entry (one sort serves every candidate).
+    ``arr_col``: [W, 1] per-candidate arrival floors."""
+    kth = kth_free_time_shared(node_free, nreq_rows, force=placer)
+    avail = jnp.maximum(arr_col, kth)
     if outage is not None:
         avail = _push_out_of_outage(avail, outage)
     return kth, avail
@@ -224,11 +237,12 @@ def _alloc(node_free, sel, kth_sel, need, finish):
 
 
 def _scan_sim(arrs: dict, policy: Policy, warm_start: bool,
-              placer: str | None, totals_only: bool, seed, fvec):
+              placer: str | None, totals_only: bool, seed, fvec,
+              easy_eval: str = "batched"):
     """One full simulation as a lax.scan; every argument traced except the
-    static (policy metadata, warm_start, placer, totals_only).  Dispatches
-    on the policy's static ``queue`` metadata: the FCFS path is the
-    historical arrival-order scan, bit-identical to the pre-queue-axis
+    static (policy metadata, warm_start, placer, totals_only, easy_eval).
+    Dispatches on the policy's static ``queue`` metadata: the FCFS path is
+    the historical arrival-order scan, bit-identical to the pre-queue-axis
     engine; ``easy_backfill`` runs the windowed scan (``_scan_sim_easy``).
     """
     T_true, C_true, E_true = arrs["T_true"], arrs["C_true"], arrs["E_true"]
@@ -253,7 +267,8 @@ def _scan_sim(arrs: dict, policy: Policy, warm_start: bool,
 
     if policy.queue == "easy_backfill":
         return _scan_sim_easy(arrs, policy, placer, totals_only,
-                              kvec, sel_key, fault_key, fvec, tabs0)
+                              kvec, sel_key, fault_key, fvec, tabs0,
+                              easy_eval)
 
     def step(carry, xs):
         node_free, C_tab, T_tab, runs, acc = carry
@@ -329,7 +344,8 @@ def _scan_sim(arrs: dict, policy: Policy, warm_start: bool,
 
 
 def _scan_sim_easy(arrs: dict, policy: Policy, placer: str | None,
-                   totals_only: bool, kvec, sel_key, fault_key, fvec, tabs0):
+                   totals_only: bool, kvec, sel_key, fault_key, fvec, tabs0,
+                   easy_eval: str = "batched"):
     """EASY-backfilling scan: J + W steps over a bounded pending window.
 
     The carry grows a pending buffer of W + 1 job-id slots (ascending,
@@ -356,6 +372,20 @@ def _scan_sim_easy(arrs: dict, policy: Policy, placer: str | None,
     ``easy_backfill`` differ only in placement ORDER, never in per-job
     semantics.  Per-step outputs carry (job id | sentinel); the full path
     scatters them back into arrival-indexed [J] arrays after the scan.
+
+    Candidate evaluation (``easy_eval``, static): every trial allocation
+    in a step is computed against the SAME starting node-free table, so
+    the W + 1 slots are independent and the first-fit choice is a masked
+    argmin over slot index.  ``"batched"`` (default) scores all slots in
+    one shared-table [W+1, S] kth-free call (``kth_free_time_shared`` —
+    one sort serves every candidate) + one vmapped ``select`` + one
+    vmapped tentative allocation; the no-delay guard then needs only the
+    head's RESERVED system, so one per-row kth query over the trials'
+    ``sel_h`` rows ([W+1, maxN]) rechecks every candidate at once — two
+    batched kernel calls per step instead of ~2W sequential radix walks.
+    ``"unrolled"`` is the historical python-unrolled loop, kept as the
+    bit-identity reference (``tests/test_easy_batched.py`` asserts the
+    two agree exactly across the whole policy registry).
     """
     T_true, C_true, E_true = arrs["T_true"], arrs["C_true"], arrs["E_true"]
     T_pred, C_pred = arrs["T_pred"], arrs["C_pred"]
@@ -379,6 +409,31 @@ def _scan_sim_easy(arrs: dict, policy: Policy, placer: str | None,
             t_pred_row=T_pred[p], key=jax.random.fold_in(sel_key, jj))
         return jj, p, kth, avail, sel
 
+    def eval_candidates(node_free, C_tab, T_tab, runs, pend):
+        """Score every pending slot against the SAME node-free table in
+        one batched pass (sentinel slots evaluate job J-1; callers mask).
+        Returns per-slot [Wc]-leading arrays: job ids, programs, chosen
+        systems, starts, actual runtimes, fault factors, node needs, and
+        the [Wc, S, maxN] tentative-allocation stack."""
+        jjs = jnp.minimum(pend, J - 1)                            # [Wc]
+        ps = prog[jjs]                                            # [Wc]
+        kths, avails = _earliest_shared(node_free, n_req[ps],
+                                        arrival[jjs][:, None], placer,
+                                        outage)                   # [Wc, S]
+        keys = jax.vmap(lambda j: jax.random.fold_in(sel_key, j))(jjs)
+        sels = select_batched(
+            policy, c_rows=C_tab[ps], t_rows=T_tab[ps], runs_rows=runs[ps],
+            avail_rows=avails, k=kvec[jjs], c_pred_rows=C_pred[ps],
+            t_pred_rows=T_pred[ps], keys=keys)                    # [Wc]
+        factors = jax.vmap(lambda j: _fault_factor(fault_key, j, fvec))(jjs)
+        idx = jnp.arange(Wc)
+        starts = avails[idx, sels]                                # [Wc]
+        T_acts = T_true[ps, sels] * factors
+        needs = n_req[ps, sels]
+        trials = jax.vmap(_alloc, in_axes=(None, 0, 0, 0, 0))(
+            node_free, sels, kths[idx, sels], needs, starts + T_acts)
+        return jjs, ps, sels, starts, T_acts, factors, needs, trials
+
     def step(carry, xs):
         node_free, C_tab, T_tab, runs, acc, pend, nbf = carry
         jx, now = xs
@@ -389,50 +444,98 @@ def _scan_sim_easy(arrs: dict, policy: Policy, placer: str | None,
         size0 = jnp.sum(pend < J)
         pend = pend.at[jnp.minimum(size0, Wc - 1)].set(jx)
         size = size0 + (jx < J)
-
-        # head-of-queue reservation from current node-free times
-        h = pend[0]
-        head_valid = h < J
-        hj, p_h, _, avail_h, sel_h = sel_for(h, node_free, C_tab, T_tab,
-                                             runs)
-        r_h = avail_h[sel_h]
         forced = size == Wc                       # window full: FCFS fallback
-        place_head = head_valid & (forced | (r_h <= now))
+        head_valid = pend[0] < J
 
-        # EASY backfill: first pending job (arrival order) whose tentative
-        # allocation cannot delay the head's reservation on its reserved
-        # system
-        chosen = jnp.where(place_head, 0, Wc)     # slot index; Wc = none
-        may_backfill = head_valid & ~place_head
-        for ci in range(1, Wc):
-            b = pend[ci]
-            live = may_backfill & (b < J) & (chosen == Wc)
-            bj, p_b, kth_b, avail_b, sel_b = sel_for(b, node_free, C_tab,
-                                                     T_tab, runs)
-            s_b = avail_b[sel_b]
-            fin_b = s_b + T_true[p_b, sel_b] * _fault_factor(fault_key, bj,
-                                                             fvec)
-            trial = _alloc(node_free, sel_b, kth_b[sel_b], n_req[p_b, sel_b],
-                           fin_b)
-            _, avail_h2 = _earliest(trial, n_req[p_h], arrival[hj], placer,
-                                    outage)
-            ok = avail_h2[sel_h] <= r_h
-            chosen = jnp.where(live & ok, ci, chosen)
+        if easy_eval == "batched":
+            # one batched evaluation of all Wc slots; slot 0 is the head
+            jjs, ps, sels, starts, T_acts, factors, needs, trials = \
+                eval_candidates(node_free, C_tab, T_tab, runs, pend)
+            hj, p_h, sel_h = jjs[0], ps[0], sels[0]
+            r_h = starts[0]                       # head reservation
+            place_head = head_valid & (forced | (r_h <= now))
 
-        # place the chosen job (if any): same math as the FCFS step body
-        placed = chosen < Wc
-        j_pl = jnp.where(placed, pend[jnp.minimum(chosen, Wc - 1)], J)
-        jj, p, kth, avail, sel = sel_for(j_pl, node_free, C_tab, T_tab, runs)
-        factor = _fault_factor(fault_key, jj, fvec)
-        T_act = T_true[p, sel] * factor
+            # EASY no-delay guard for ALL candidates at once: a trial can
+            # only delay the head on the head's RESERVED system, so one
+            # per-row kth query over the trials' sel_h rows answers every
+            # candidate (rows untouched by a trial reproduce r_h exactly,
+            # so their guard passes as it must)
+            # (every kth mode is bit-exact, so absent an explicit placer
+            # the recheck picks the cheapest: one sort op over [Wc, maxN]
+            # beats Wc radix walks inside a scan)
+            kth_h2 = kth_free_time(
+                trials[:, sel_h, :],
+                jnp.broadcast_to(n_req[p_h, sel_h], (Wc,)),
+                force=placer or "sort")
+            avail_h2 = jnp.maximum(arrival[hj], kth_h2)           # [Wc]
+            if outage is not None:
+                # only sel_h's windows apply; [1, W0, 2] broadcasts the
+                # shared push over the [Wc] candidate vector
+                avail_h2 = _push_out_of_outage(avail_h2, outage[sel_h][None])
+            ok = avail_h2 <= r_h                                  # [Wc]
+
+            # first-fit == masked argmin over slot index (Wc = none)
+            idx = jnp.arange(Wc)
+            elig = jnp.where(idx == 0, place_head,
+                             head_valid & ~place_head & (pend < J) & ok)
+            chosen = jnp.min(jnp.where(elig, idx, Wc))
+            placed = chosen < Wc
+            ci = jnp.minimum(chosen, Wc - 1)
+
+            # gather the chosen slot: its trial allocation was computed
+            # against the real starting node_free, so it IS the placement
+            jj, p, sel = jjs[ci], ps[ci], sels[ci]
+            factor = factors[ci]
+            T_act = T_acts[ci]
+            start = starts[ci]
+            need = needs[ci]
+            j_pl = jnp.where(placed, pend[ci], J)
+            node_free = jnp.where(placed, trials[ci], node_free)
+        else:
+            # head-of-queue reservation from current node-free times
+            h = pend[0]
+            hj, p_h, _, avail_h, sel_h = sel_for(h, node_free, C_tab, T_tab,
+                                                 runs)
+            r_h = avail_h[sel_h]
+            place_head = head_valid & (forced | (r_h <= now))
+
+            # EASY backfill: first pending job (arrival order) whose
+            # tentative allocation cannot delay the head's reservation on
+            # its reserved system
+            chosen = jnp.where(place_head, 0, Wc)     # slot index; Wc = none
+            may_backfill = head_valid & ~place_head
+            for ci in range(1, Wc):
+                b = pend[ci]
+                live = may_backfill & (b < J) & (chosen == Wc)
+                bj, p_b, kth_b, avail_b, sel_b = sel_for(b, node_free, C_tab,
+                                                         T_tab, runs)
+                s_b = avail_b[sel_b]
+                fin_b = s_b + T_true[p_b, sel_b] * _fault_factor(
+                    fault_key, bj, fvec)
+                trial = _alloc(node_free, sel_b, kth_b[sel_b],
+                               n_req[p_b, sel_b], fin_b)
+                _, avail_h2 = _earliest(trial, n_req[p_h], arrival[hj],
+                                        placer, outage)
+                ok = avail_h2[sel_h] <= r_h
+                chosen = jnp.where(live & ok, ci, chosen)
+
+            # place the chosen job (if any): same math as the FCFS step
+            placed = chosen < Wc
+            j_pl = jnp.where(placed, pend[jnp.minimum(chosen, Wc - 1)], J)
+            jj, p, kth, avail, sel = sel_for(j_pl, node_free, C_tab, T_tab,
+                                             runs)
+            factor = _fault_factor(fault_key, jj, fvec)
+            T_act = T_true[p, sel] * factor
+            start = avail[sel]
+            need = n_req[p, sel]
+            node_free = jnp.where(
+                placed,
+                _alloc(node_free, sel, kth[sel], need, start + T_act),
+                node_free)
+
         C_act = C_true[p, sel] * factor
         E_act = E_true[p, sel] * factor
-        start = avail[sel]
         finish = start + T_act
-        need = n_req[p, sel]
-        node_free = jnp.where(
-            placed, _alloc(node_free, sel, kth[sel], need, finish),
-            node_free)
 
         n = runs[p, sel].astype(jnp.float32)
         C_tab = C_tab.at[p, sel].set(jnp.where(
@@ -511,15 +614,16 @@ def _scan_sim_easy(arrs: dict, policy: Policy, placer: str | None,
     }
 
 
-@partial(jax.jit, static_argnames=("warm_start", "placer", "totals_only"))
+@partial(jax.jit, static_argnames=("warm_start", "placer", "totals_only",
+                                   "easy_eval"))
 def _batched_run(arrs, policy, seeds, faults, *, warm_start, placer,
-                 totals_only):
+                 totals_only, easy_eval="batched"):
     """vmap the scan core over a flat batch axis: policy leaves [B], seeds
     [B], faults [B, 4].  One compile per (shapes, policy metadata,
-    warm_start, placer, totals_only)."""
+    warm_start, placer, totals_only, easy_eval)."""
     return jax.vmap(
         lambda pol, sd, fv: _scan_sim(arrs, pol, warm_start, placer,
-                                      totals_only, sd, fv))(
+                                      totals_only, sd, fv, easy_eval))(
         policy, seeds, faults)
 
 
@@ -545,6 +649,10 @@ class Scheduler:
     queue:      queue-discipline spec overriding the policy's metadata:
                 "fcfs" | "easy_backfill" | "easy_backfill:window=W"
                 (None = keep the policy's own discipline)
+    easy_eval:  EASY candidate-evaluation strategy (static): "batched"
+                (default — one [W, S] kth-free call per step) or
+                "unrolled" (the historical per-slot loop, kept as the
+                bit-identity reference; ~W x slower at large windows)
 
     ``run(w)`` returns a ``SimResult`` when no axis is present, else a
     ``CampaignResult`` with ``axes`` ordered (fault, policy, seed) — the
@@ -555,10 +663,15 @@ class Scheduler:
 
     def __init__(self, policy: str | Policy = "paper", *,
                  placer: str | None = None, faults=None, seeds=0,
-                 warm_start: bool = False, queue: str | None = None):
+                 warm_start: bool = False, queue: str | None = None,
+                 easy_eval: str = "batched"):
         self.policy = make_policy(policy) if isinstance(policy, str) else policy
         if queue is not None:
             self.policy = apply_queue_spec(self.policy, queue)
+        if easy_eval not in ("batched", "unrolled"):
+            raise ValueError(f"easy_eval {easy_eval!r} not in "
+                             "('batched', 'unrolled')")
+        self.easy_eval = easy_eval
         self.placer = placer
         self.warm_start = bool(warm_start)
         if faults is None or isinstance(faults, FaultConfig):
@@ -601,7 +714,8 @@ class Scheduler:
         out = _batched_run(
             _workload_arrays(w), replace(pol, k=kb, ucb_scale=ub),
             sb, fb.reshape(B, 4), warm_start=self.warm_start,
-            placer=self.placer, totals_only=totals_only)
+            placer=self.placer, totals_only=totals_only,
+            easy_eval=self.easy_eval)
 
         axes, lead = [], []
         for name, present, size in (("fault", has_fault_axis, F),

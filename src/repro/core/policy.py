@@ -350,6 +350,29 @@ def select(policy: Policy, *, c_row, t_row, runs_row, avail_row, k,
     return exploit
 
 
+def select_batched(policy: Policy, *, c_rows, t_rows, runs_rows, avail_rows,
+                   k, c_pred_rows=None, t_pred_rows=None, keys=None):
+    """``select`` over a leading candidate axis: one call scores a whole
+    batch of pending jobs (the EASY window) against their per-candidate
+    table rows and availability vectors.
+
+    Every argument is the batched counterpart of the ``select`` keyword of
+    the same stem, with a leading [W] axis: c_rows/t_rows/runs_rows/
+    avail_rows/\\*_pred_rows are [W, S], ``k`` is [W] (per-candidate
+    effective K), ``keys`` is a [W] PRNG key array (fold_in per job id —
+    required for the random objective, optional otherwise).  Returns [W]
+    int32 chosen systems, bit-identical per row to W scalar ``select``
+    calls: the vmap only adds a leading axis to elementwise comparisons
+    and per-row reductions, and jax PRNG draws are deterministic per key.
+    """
+    def one(c_row, t_row, runs_row, avail_row, kk, c_pred, t_pred, key):
+        return select(policy, c_row=c_row, t_row=t_row, runs_row=runs_row,
+                      avail_row=avail_row, k=kk, c_pred_row=c_pred,
+                      t_pred_row=t_pred, key=key)
+    return jax.vmap(one)(c_rows, t_rows, runs_rows, avail_rows, k,
+                         c_pred_rows, t_pred_rows, keys)
+
+
 # ---------------------------------------------------------- numpy mirror
 
 def _lex_argmin_py(c_row, t_row, feasible):

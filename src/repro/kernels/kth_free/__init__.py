@@ -1,3 +1,7 @@
-from repro.kernels.kth_free.ops import kth_free_time
-from repro.kernels.kth_free.kernel import kth_free_pallas, radix_select_kth
-from repro.kernels.kth_free.ref import kth_free_ref
+from repro.kernels.kth_free.ops import (kth_free_time, kth_free_time_batched,
+                                        kth_free_time_shared)
+from repro.kernels.kth_free.kernel import (kth_free_pallas,
+                                           kth_free_pallas_batched,
+                                           radix_select_kth,
+                                           radix_select_kth_batched)
+from repro.kernels.kth_free.ref import kth_free_batched_ref, kth_free_ref

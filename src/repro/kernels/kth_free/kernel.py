@@ -64,6 +64,16 @@ def radix_select_kth(node_free, n_req):
     return _ordered_u32_to_f32(val)
 
 
+def radix_select_kth_batched(node_free, n_req):
+    """Batched radix select over a leading candidate axis (the EASY
+    window's W tentative allocations per step are independent, so one
+    vectorized call replaces W sequential selects).  node_free:
+    [W, S, maxN] f32; n_req: [W, S] int.  Returns [W, S] f32, bit-exact
+    per slice against ``radix_select_kth`` (the bit walk is integer
+    counting — vmap only adds a leading axis to the counts)."""
+    return jax.vmap(radix_select_kth)(node_free, n_req)
+
+
 def _kth_free_kernel(free_ref, nreq_ref, out_ref):
     out_ref[...] = radix_select_kth(free_ref[...], nreq_ref[...][:, 0])
 
@@ -79,3 +89,24 @@ def kth_free_pallas(node_free, n_req, *, interpret: bool = True):
         out_shape=jax.ShapeDtypeStruct((S,), jnp.float32),
         interpret=interpret,
     )(node_free.astype(jnp.float32), n_req.astype(jnp.int32)[:, None])
+
+
+def _kth_free_kernel_batched(free_ref, nreq_ref, out_ref):
+    out_ref[...] = radix_select_kth(free_ref[0], nreq_ref[0, :, 0])[None]
+
+
+def kth_free_pallas_batched(node_free, n_req, *, interpret: bool = True):
+    """Pallas twin of ``radix_select_kth_batched``: the grid runs one
+    program instance per candidate, each radix-selecting its own [S, maxN]
+    block.  node_free: [W, S, maxN] f32; n_req: [W, S] int32.  Returns
+    [W, S] f32."""
+    W, S, N = node_free.shape
+    return pl.pallas_call(
+        _kth_free_kernel_batched,
+        grid=(W,),
+        in_specs=[pl.BlockSpec((1, S, N), lambda w: (w, 0, 0)),
+                  pl.BlockSpec((1, S, 1), lambda w: (w, 0, 0))],
+        out_specs=pl.BlockSpec((1, S), lambda w: (w, 0)),
+        out_shape=jax.ShapeDtypeStruct((W, S), jnp.float32),
+        interpret=interpret,
+    )(node_free.astype(jnp.float32), n_req.astype(jnp.int32)[..., None])

@@ -15,9 +15,13 @@ from __future__ import annotations
 from functools import partial
 
 import jax
+import jax.numpy as jnp
 
-from repro.kernels.kth_free.kernel import kth_free_pallas, radix_select_kth
-from repro.kernels.kth_free.ref import kth_free_ref
+from repro.kernels.kth_free.kernel import (kth_free_pallas,
+                                           kth_free_pallas_batched,
+                                           radix_select_kth,
+                                           radix_select_kth_batched)
+from repro.kernels.kth_free.ref import kth_free_batched_ref, kth_free_ref
 
 
 @partial(jax.jit, static_argnames=("force",))
@@ -33,4 +37,45 @@ def kth_free_time(node_free, n_req, *, force: str | None = None):
         return radix_select_kth(node_free, n_req)
     if mode == "sort":
         return kth_free_ref(node_free, n_req)
+    raise ValueError(f"unknown kth_free mode {mode!r}")
+
+
+@partial(jax.jit, static_argnames=("force",))
+def kth_free_time_shared(node_free, n_req, *, force: str | None = None):
+    """Many requests against ONE node-free table: node_free [S, maxN] f32,
+    n_req [W, S] int -> [W, S] f32 (per candidate w and system s, the
+    n_req[w, s]-th smallest entry of row s).
+
+    With a shared table the W order statistics per row share one sort —
+    O(S·maxN·log maxN) total versus W independent O(S·maxN) radix walks —
+    which wins for any W > a few, so the auto mode is the sort path on
+    every backend (the selected values are input elements either way, so
+    all modes stay bit-exact).  ``force`` keeps the radix / Pallas twins
+    reachable (they broadcast the table into the batched entry point) for
+    differential coverage."""
+    if (force or "sort") == "sort":
+        srt = jnp.sort(node_free, axis=-1)                       # [S, maxN]
+        idx = jnp.clip(n_req - 1, 0, node_free.shape[-1] - 1)    # [W, S]
+        return srt[jnp.arange(node_free.shape[0])[None, :], idx]
+    free_b = jnp.broadcast_to(node_free, n_req.shape[:1] + node_free.shape)
+    return kth_free_time_batched(free_b, n_req, force=force)
+
+
+@partial(jax.jit, static_argnames=("force",))
+def kth_free_time_batched(node_free, n_req, *, force: str | None = None):
+    """Batched twin of ``kth_free_time`` over a leading candidate axis.
+    node_free: [W, S, maxN] f32 (one node-free table per candidate —
+    broadcast a shared table for same-state candidate scoring, or stack W
+    tentative allocations for the EASY head recheck); n_req: [W, S] int.
+    Returns [W, S] f32.  Same dispatch modes, bit-exact per slice against
+    the unbatched entry point."""
+    mode = force or ("pallas" if jax.default_backend() == "tpu" else "jnp")
+    if mode == "pallas":
+        return kth_free_pallas_batched(node_free, n_req, interpret=False)
+    if mode == "pallas_interpret":
+        return kth_free_pallas_batched(node_free, n_req, interpret=True)
+    if mode == "jnp":
+        return radix_select_kth_batched(node_free, n_req)
+    if mode == "sort":
+        return kth_free_batched_ref(node_free, n_req)
     raise ValueError(f"unknown kth_free mode {mode!r}")

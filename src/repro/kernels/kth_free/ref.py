@@ -7,6 +7,7 @@ entry of the node-free row.  The reference answers it the obvious way
 sorting.  The two must agree bit-exactly.
 """
 
+import jax
 import jax.numpy as jnp
 
 
@@ -16,3 +17,10 @@ def kth_free_ref(node_free, n_req):
     sorted_free = jnp.sort(node_free, axis=1)
     idx = jnp.clip(n_req - 1, 0, node_free.shape[1] - 1)
     return jnp.take_along_axis(sorted_free, idx[:, None], axis=1)[:, 0]
+
+
+def kth_free_batched_ref(node_free, n_req):
+    """Vmapped sort oracle for the batched entry point.  node_free:
+    [W, S, maxN] f32 (one node-free table per candidate); n_req: [W, S]
+    int.  Returns [W, S] f32."""
+    return jax.vmap(kth_free_ref)(node_free, n_req)

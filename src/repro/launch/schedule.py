@@ -122,6 +122,12 @@ def main():
     ap.add_argument("--queue", default="", metavar="DISC[:window=W]",
                     help="queue discipline overriding the policy's own: "
                          f"{' | '.join(QUEUES)}; e.g. easy_backfill:window=16")
+    ap.add_argument("--easy-eval", default="batched",
+                    choices=("batched", "unrolled"),
+                    help="EASY candidate evaluation: batched (one [W, S] "
+                         "kth-free call per step) or the historical "
+                         "unrolled per-slot loop (bit-identical, ~W x "
+                         "slower; debugging/A-B only)")
     ap.add_argument("--sweep-k", default="",
                     help="comma-separated K values (fractions)")
     ap.add_argument("--jobs", type=int, default=0,
@@ -161,7 +167,8 @@ def main():
                       np.float32)
         seeds = [args.seed + i for i in range(max(args.campaign_seeds, 1))]
         res = Scheduler(pol.with_params(k=ks), faults=faults, seeds=seeds,
-                        warm_start=not args.cold).run(
+                        warm_start=not args.cold,
+                        easy_eval=args.easy_eval).run(
             w, totals_only=args.totals_only)
         E = np.asarray(res.total_energy)            # [K, R]
         M = np.asarray(res.makespan)
@@ -178,7 +185,8 @@ def main():
     if args.sweep_k:
         ks = np.array([float(x) for x in args.sweep_k.split(",")], np.float32)
         res = Scheduler(pol.with_params(k=ks), faults=faults,
-                        seeds=args.seed, warm_start=not args.cold).run(w)
+                        seeds=args.seed, warm_start=not args.cold,
+                        easy_eval=args.easy_eval).run(w)
         E = np.asarray(res.total_energy)
         M = np.asarray(res.makespan)
         print("K,energy_J,makespan_s,dE%,dT%")
@@ -188,7 +196,7 @@ def main():
         return
 
     r = Scheduler(pol, faults=faults, seeds=args.seed,
-                  warm_start=not args.cold).run(w)
+                  warm_start=not args.cold, easy_eval=args.easy_eval).run(w)
     sel = np.asarray(r.system)
     k_str = np.format_float_positional(float(np.asarray(pol.k)), trim="-")
     q_str = pol.queue if pol.queue == "fcfs" else \

@@ -1,0 +1,79 @@
+"""CI benchmark-regression gate (ISSUE 4).
+
+PR 4 bought a >= 5x warm wall-clock win on the EASY scan (batched
+candidate evaluation); this guard keeps the next refactor from silently
+giving it back.  It re-measures the small queue-discipline benchmark and
+fails when the warm ``us_per_call`` for ``queue_swf_easy_backfill``
+regresses more than 2x past the committed ``BENCH_scheduler.json`` row.
+
+Machine normalization: CI runners and dev boxes are not the machine that
+produced the committed row, so the raw 2x ratio would flag hardware, not
+code.  The FCFS row on the same stream is the anchor — its scan shares
+the kernels and workload shape but none of the EASY window machinery —
+and the gate compares against ``2x * committed * max(fresh_fcfs /
+committed_fcfs, 1)``.
+
+Tier-1 (``pytest -x -q`` runs it) but ``slow``-marked, so the quick loop
+skips it; the dedicated ``bench-smoke`` CI job runs it on every PR.
+"""
+
+import json
+import pathlib
+import sys
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "benchmarks"))
+
+pytestmark = pytest.mark.slow
+
+GATE = 2.0                      # allowed warm wall-clock regression factor
+
+
+def _committed_rows() -> dict:
+    payload = json.loads((ROOT / "BENCH_scheduler.json").read_text())
+    return {r["name"]: r for r in payload["rows"]}
+
+
+def test_committed_rows_carry_timed_flag():
+    """Every committed row says whether its us_per_call is a measurement;
+    derived-only rows (e.g. ``queue_swf_delta``) must be ``timed: false``
+    so no tool ever averages their phantom zeros."""
+    rows = _committed_rows()
+    assert rows, "BENCH_scheduler.json has no rows"
+    for name, row in rows.items():
+        assert "timed" in row, f"row {name!r} lacks the timed flag"
+        assert row["timed"] == (row["us_per_call"] > 0), \
+            f"row {name!r}: timed flag inconsistent with us_per_call"
+    # the two rows the gate leans on must be real measurements
+    assert rows["queue_swf_easy_backfill"]["timed"]
+    assert rows["queue_swf_fcfs"]["timed"]
+
+
+def test_easy_backfill_warm_wallclock_gate():
+    """Fresh warm wall-clock for the W=16 EASY scan on the SWF stream
+    must stay within GATE x of the committed row (machine-normalized)."""
+    from scheduler_ablation import _warm_us, machine_speed_factor, \
+        queue_streams
+    from repro.core import Scheduler, make_policy
+
+    rows = _committed_rows()
+    committed_easy = rows["queue_swf_easy_backfill"]["us_per_call"]
+    committed_fcfs = rows["queue_swf_fcfs"]["us_per_call"]
+
+    w = queue_streams()["swf"]
+    pol = make_policy("paper", k=0.10)
+    fresh_fcfs, _ = _warm_us(Scheduler(pol, warm_start=True), w)
+    fresh_easy, _ = _warm_us(
+        Scheduler(pol, warm_start=True, queue="easy_backfill:window=16"), w)
+
+    speed = machine_speed_factor(fresh_fcfs, committed_fcfs)
+    bound = GATE * committed_easy * speed
+    assert fresh_easy <= bound, (
+        f"EASY warm wall-clock regressed: fresh {fresh_easy:.0f}us > "
+        f"{GATE}x committed {committed_easy:.0f}us (machine speed factor "
+        f"{speed:.2f} from FCFS {fresh_fcfs:.0f}us vs committed "
+        f"{committed_fcfs:.0f}us) — if the regression is intentional, "
+        f"regenerate BENCH_scheduler.json via "
+        f"`python benchmarks/scheduler_ablation.py` and commit it")

@@ -1,0 +1,135 @@
+"""Bit-identity of the batched EASY candidate evaluation vs the PR 3 loop.
+
+The batched step (``easy_eval="batched"``, the default) is semantics-
+preserving by construction: every trial allocation in a step is computed
+against the SAME starting node-free table, so the window slots are
+independent and the first-fit choice is a masked argmin over slot index.
+These tests pin the construction against the historical python-unrolled
+loop (``easy_eval="unrolled"``): placements, starts, totals, learned
+tables, and backfill flags must agree BIT-EXACTLY — no tolerances — for
+every registered policy, warm and cold, with and without outage windows,
+on synthetic and trace-replay streams, under both result paths
+(full per-job arrays and ``totals_only``) and under forced placement
+backends.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (JSCC_SYSTEMS, FaultConfig, Scheduler, make_policy,
+                        policy_names)
+from repro.data.scenarios import (load_swf, maintenance_windows,
+                                  make_stream_workload, workload_from_trace)
+
+PER_JOB = ("system", "start", "finish", "wait", "energy", "runtime",
+           "nodes", "backfilled")
+TOTALS = ("total_energy", "makespan", "total_wait", "max_wait",
+          "slowdown_sum", "busy", "n_backfilled", "C_tab", "T_tab", "runs")
+
+
+def assert_bit_identical(w, pol, *, warm=True, seeds=7, faults=None,
+                         placer=None, totals_only=False):
+    kw = dict(warm_start=warm, seeds=seeds, faults=faults, placer=placer)
+    rb = Scheduler(pol, **kw).run(w, totals_only=totals_only)
+    ru = Scheduler(pol, easy_eval="unrolled", **kw).run(
+        w, totals_only=totals_only)
+    fields = TOTALS if totals_only else PER_JOB + TOTALS
+    for field in fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(rb, field)), np.asarray(getattr(ru, field)),
+            err_msg=f"batched != unrolled on {field!r}")
+
+
+def _contended_stream(n=40, rate=1.0, kind="poisson", seed=3):
+    """High arrival rate => real queueing: held heads and live backfill
+    candidates, so the two evaluation strategies face real decisions."""
+    return make_stream_workload(JSCC_SYSTEMS, n, arrival=kind, rate=rate,
+                                seed=seed, pred_noise=0.05)
+
+
+# ----------------------------------------------- whole-registry sweep (slow)
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", policy_names())
+@pytest.mark.parametrize("warm", [True, False], ids=["warm", "cold"])
+def test_registry_bit_identity(name, warm):
+    """Every registered policy, warm and cold: the batched scan must be
+    indistinguishable from the PR 3 loop, down to the last bit."""
+    w = _contended_stream()
+    pol = make_policy(name, k=0.1).with_params(
+        queue="easy_backfill", window=4)
+    assert_bit_identical(w, pol, warm=warm)
+
+
+# --------------------------------------------------- targeted quick coverage
+
+@pytest.mark.parametrize("name", ["paper", "random", "queue_aware", "ucb"])
+def test_bit_identity_quick(name):
+    """Quick-tier subset: selector axes that exercise every batched input
+    (tables, availability, PRNG keys, optimism bounds)."""
+    assert_bit_identical(_contended_stream(),
+                         make_policy(name, k=0.1).with_params(
+                             queue="easy_backfill", window=6))
+
+
+def test_bit_identity_cold_with_faults():
+    """Cold tables + straggler/failure draws: the per-candidate fault
+    factors are keyed by job id and must replay identically."""
+    w = _contended_stream(seed=11)
+    pol = make_policy("easy_backfill", k=0.1)
+    assert_bit_identical(
+        w, pol, warm=False,
+        faults=FaultConfig(straggler_prob=0.3, straggler_factor=2.5,
+                           failure_prob=0.2, restart_overhead=0.5))
+
+
+def test_bit_identity_with_outage_windows():
+    """Outage pushes hit both the candidate scoring and the head recheck
+    (the reduced single-system push must match the full per-system one)."""
+    outage = maintenance_windows(
+        4, {1: [(0.0, 400.0)], 2: [(100.0, 300.0), (500.0, 650.0)]})
+    w = make_stream_workload(JSCC_SYSTEMS, 35, arrival="poisson", rate=0.8,
+                             seed=8, outage=outage)
+    assert_bit_identical(w, make_policy("easy_backfill", k=0.1))
+    assert_bit_identical(w, make_policy("easy_queue_aware", k=0.1))
+
+
+def test_bit_identity_trace_replay():
+    swf = "\n".join(
+        f"{i+1} {i*15} 0 {200 + 61*i % 2400} {2 ** (2 + i % 7)} 100.0 0 "
+        f"{2 ** (2 + i % 7)} 1000 0 1 1 1 1 1 1 -1 -1"
+        for i in range(50)).splitlines()
+    w = workload_from_trace(load_swf(swf), JSCC_SYSTEMS)
+    assert_bit_identical(w, make_policy("easy_backfill", k=0.2))
+
+
+def test_bit_identity_window_overflow_and_degenerate():
+    """window=1 (every placement is the forced head) and an overflowing
+    window=2 on a bursty stream: the FCFS-fallback edge must agree too."""
+    w = _contended_stream(kind="bursty", rate=0.8, seed=5)
+    for window in (1, 2):
+        assert_bit_identical(
+            w, make_policy("paper", k=0.1).with_params(
+                queue="easy_backfill", window=window))
+
+
+def test_bit_identity_totals_only():
+    """Campaign-memory path: the masked Kahan accumulator sees the same
+    per-step addends, so [*grid] aggregates are bit-identical as well."""
+    w = _contended_stream(seed=13)
+    assert_bit_identical(w, make_policy("easy_backfill", k=0.1),
+                         totals_only=True)
+
+
+@pytest.mark.parametrize("placer", ["sort", "pallas_interpret"])
+def test_bit_identity_forced_placers(placer):
+    """Explicit placer forcing routes the batched scoring through the
+    broadcast batched kernel (not the shared-sort fast path) — still
+    bit-identical."""
+    assert_bit_identical(_contended_stream(n=25),
+                         make_policy("easy_backfill", k=0.1), placer=placer)
+
+
+def test_scheduler_validates_easy_eval():
+    with pytest.raises(ValueError, match="easy_eval"):
+        Scheduler("easy_backfill", easy_eval="vectorised")

@@ -101,7 +101,12 @@ def test_stencil_boundary_is_dirichlet_zero():
 # ---------------------------------------------------------------- kth free
 
 from repro.kernels.kth_free import (kth_free_ref, kth_free_pallas,  # noqa: E402
-                                    radix_select_kth)
+                                    kth_free_batched_ref,
+                                    kth_free_pallas_batched,
+                                    kth_free_time, kth_free_time_batched,
+                                    kth_free_time_shared,
+                                    radix_select_kth,
+                                    radix_select_kth_batched)
 
 
 @pytest.mark.parametrize("s,n,seed", [
@@ -129,6 +134,81 @@ def test_kth_free_clips_out_of_range_requests():
     nreq = jnp.asarray(np.array([0, 99], np.int32))   # clipped to [1, N]
     out = np.asarray(radix_select_kth(free, nreq))
     np.testing.assert_array_equal(out, [0.0, 11.0])
+
+
+def _batched_case(wn, s, n, seed, sentinel_row=True):
+    """Random [W, S, maxN] free-time stack with BIG sentinels, idle ties,
+    and (optionally) one all-sentinel padding row."""
+    rng = np.random.default_rng(seed)
+    free = rng.uniform(0, 1e6, (wn, s, n)).astype(np.float32)
+    free[rng.random((wn, s, n)) < 0.3] = 1e30
+    free[rng.random((wn, s, n)) < 0.3] = 0.0
+    if sentinel_row:
+        free[0, 0, :] = 1e30               # a fully-padded (nonexistent) row
+    nreq = rng.integers(1, n + 1, (wn, s)).astype(np.int32)
+    return jnp.asarray(free), jnp.asarray(nreq)
+
+
+@pytest.mark.parametrize("wn,s,n,seed", [
+    (1, 4, 136, 0),       # W=1 degenerate (window=0 candidate batch)
+    (9, 4, 136, 1),       # the JSCC node matrix, default window + head
+    (17, 3, 129, 2),      # W=16 window, non-multiple-of-lane width
+    (5, 2, 8, 3),
+    (33, 7, 200, 4),      # W=32 window, wide stack
+])
+def test_kth_free_batched_sweep(wn, s, n, seed):
+    """Batched radix + batched Pallas vs the vmapped jnp.sort oracle,
+    bit for bit, across candidate-count/system/node shapes."""
+    free, nreq = _batched_case(wn, s, n, seed)
+    ref = np.asarray(kth_free_batched_ref(free, nreq))
+    sel = np.asarray(radix_select_kth_batched(free, nreq))
+    pal = np.asarray(kth_free_pallas_batched(free, nreq, interpret=True))
+    np.testing.assert_array_equal(ref, sel)
+    np.testing.assert_array_equal(ref, pal)
+
+
+def test_kth_free_batched_matches_unbatched_per_slice():
+    """The batched entry point is exactly W unbatched calls."""
+    free, nreq = _batched_case(6, 4, 64, 5)
+    out = np.asarray(kth_free_time_batched(free, nreq, force="jnp"))
+    for wi in range(6):
+        np.testing.assert_array_equal(
+            out[wi], np.asarray(kth_free_time(free[wi], nreq[wi],
+                                              force="jnp")))
+
+
+@pytest.mark.parametrize("force", ["jnp", "sort", "pallas_interpret"])
+def test_kth_free_batched_dispatch_modes_agree(force):
+    free, nreq = _batched_case(8, 4, 136, 6)
+    ref = np.asarray(kth_free_batched_ref(free, nreq))
+    np.testing.assert_array_equal(
+        ref, np.asarray(kth_free_time_batched(free, nreq, force=force)))
+
+
+@pytest.mark.parametrize("wn", [1, 8, 17])
+@pytest.mark.parametrize("force", [None, "jnp", "sort", "pallas_interpret"])
+def test_kth_free_shared_bit_exact(wn, force):
+    """Shared-table entry (one sort serves all W candidates) vs the
+    broadcast batched oracle, every dispatch mode, including the W=1
+    degenerate batch and an all-sentinel padding row."""
+    rng = np.random.default_rng(40 + wn)
+    free = rng.uniform(0, 1e6, (4, 136)).astype(np.float32)
+    free[rng.random((4, 136)) < 0.3] = 1e30
+    free[rng.random((4, 136)) < 0.3] = 0.0
+    free[2, :] = 1e30                      # all-sentinel system row
+    nreq = rng.integers(1, 137, (wn, 4)).astype(np.int32)
+    free, nreq = jnp.asarray(free), jnp.asarray(nreq)
+    ref = np.asarray(kth_free_batched_ref(
+        jnp.broadcast_to(free, (wn,) + free.shape), nreq))
+    np.testing.assert_array_equal(
+        ref, np.asarray(kth_free_time_shared(free, nreq, force=force)))
+
+
+def test_kth_free_shared_clips_out_of_range_requests():
+    free = jnp.asarray(np.arange(12, dtype=np.float32).reshape(2, 6))
+    nreq = jnp.asarray(np.array([[0, 99], [1, 6]], np.int32))
+    out = np.asarray(kth_free_time_shared(free, nreq))
+    np.testing.assert_array_equal(out, [[0.0, 11.0], [0.0, 11.0]])
 
 
 # ---------------------------------------------------------------- SSD scan
