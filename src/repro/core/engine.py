@@ -58,11 +58,12 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.policy import (BIG, Policy, apply_queue_spec, make_policy,
-                               select, select_batched)
+from repro.core.policy import (BIG, UNCAPPED, Policy, apply_queue_spec,
+                               make_policy, select, select_batched)
 from repro.core.result import SimResult, CampaignResult
 from repro.core.workload_model import NPB_PROFILES, npb_tables
-from repro.kernels.kth_free import kth_free_time, kth_free_time_shared
+from repro.kernels.kth_free import (kth_free_time, kth_free_time_rows,
+                                    kth_free_time_shared)
 
 
 @dataclass(frozen=True)
@@ -90,6 +91,13 @@ class SimConfig:
     # own metadata (so mode="easy_backfill" backfills out of the box)
     queue: str = ""
     queue_window: int = 0
+    # SCC power cap (Watts); inf = uncapped.  A finite cap routes onto the
+    # event-granular core.  Must ride the built policy's leaf so the
+    # sweep_k/run_campaign shims pass it through (ISSUE 5 regression).
+    power_cap: float = float("inf")
+    # scan granularity override: "" = auto ("events" for conservative /
+    # capped, "arrival" otherwise), or "arrival" / "events" explicitly.
+    core: str = ""
 
     def policy(self) -> Policy:
         pol = make_policy(self.mode, k=self.k)
@@ -98,6 +106,8 @@ class SimConfig:
             over["queue"] = self.queue
         if self.queue_window:
             over["window"] = self.queue_window
+        if self.power_cap != float("inf"):
+            over["power_cap"] = float(self.power_cap)
         return replace(pol, **over) if over else pol
 
 
@@ -128,6 +138,9 @@ class Workload:
     # [S, W, 2] maintenance windows (start, end), sorted, non-overlapping
     # per system; None = no outages.
     outage: np.ndarray | None = None
+    # [S] per-node idle watts (systems.py power model); None = 0 W (no
+    # idle draw, power metrics degenerate to job-attributed power only).
+    idle_w: np.ndarray | None = None
 
 
 def make_npb_workload(systems, order=("BT", "EP", "IS", "LU", "SP"),
@@ -156,6 +169,7 @@ def make_npb_workload(systems, order=("BT", "EP", "IS", "LU", "SP"),
         n_nodes=np.array([s.n_nodes for s in systems], np.int32),
         programs=programs, systems=tuple(s.name for s in systems),
         outage=None if outage is None else np.asarray(outage, np.float32),
+        idle_w=np.array([s.idle_w for s in systems], np.float32),
     )
 
 
@@ -182,6 +196,13 @@ def _workload_arrays(w: Workload) -> dict:
         "E_true": jnp.asarray(w.E_true),
         "T_pred": jnp.asarray(w.T_pred),
         "C_pred": jnp.asarray(w.C_pred),
+        # power model: per-job average draw (paper eq. 1-2: the phase
+        # components integrate to E, so E/T is the job's step-function
+        # contribution to the cluster trace) + per-system idle watts
+        "w_pow": jnp.asarray(w.E_true / np.maximum(w.T_true, 1e-30),
+                             jnp.float32),
+        "idle_w": jnp.zeros(len(w.n_nodes), jnp.float32)
+        if w.idle_w is None else jnp.asarray(w.idle_w, jnp.float32),
     }
     if w.outage is not None and w.outage.size:
         arrs["outage"] = jnp.asarray(w.outage, jnp.float32)
@@ -223,27 +244,52 @@ def _earliest_shared(node_free, nreq_rows, arr_col, placer, outage):
     return kth, avail
 
 
-def _alloc(node_free, sel, kth_sel, need, finish):
-    """Allocate the ``need`` earliest-free nodes of system ``sel`` until
-    ``finish``: everything strictly below the kth free time, plus
-    first-by-index ties at it (the python mirror's stable argsort picks the
-    same nodes)."""
+def _alloc_mask(node_free, sel, kth_sel, need):
+    """The nodes ``_alloc`` takes on system ``sel``: everything strictly
+    below the kth free time, plus first-by-index ties at it (the python
+    mirror's stable argsort picks the same nodes).  Exposed separately so
+    the event core can mirror an allocation onto its node-power table."""
     free_sel = node_free[sel]
     below = free_sel < kth_sel
     tie = free_sel == kth_sel
     tie_rank = jnp.cumsum(tie) - 1
-    take = below | (tie & (tie_rank < need - jnp.sum(below)))
-    return node_free.at[sel].set(jnp.where(take, finish, free_sel))
+    return below | (tie & (tie_rank < need - jnp.sum(below)))
+
+
+def _alloc(node_free, sel, kth_sel, need, finish):
+    """Allocate the ``need`` earliest-free nodes of system ``sel`` until
+    ``finish`` (see ``_alloc_mask`` for the tie-break)."""
+    take = _alloc_mask(node_free, sel, kth_sel, need)
+    return node_free.at[sel].set(jnp.where(take, finish, node_free[sel]))
+
+
+def _idle_energy(arrs, makespan, busy):
+    """Idle draw of UNallocated existing nodes over the makespan (Joules).
+    Job-attributed energy already covers allocated nodes' idle component
+    (predict_energy integrates idle_w over the job span), so this is the
+    complement the paper's site-level power view adds."""
+    idle_w = arrs["idle_w"]                                      # [S]
+    n_exist = jnp.sum(arrs["free0"] < BIG, axis=1)               # [S]
+    return (jnp.sum(idle_w * n_exist) * makespan
+            - jnp.sum(idle_w * busy))
 
 
 def _scan_sim(arrs: dict, policy: Policy, warm_start: bool,
               placer: str | None, totals_only: bool, seed, fvec,
-              easy_eval: str = "batched"):
+              easy_eval: str = "batched", core: str = "arrival",
+              retries: bool = False):
     """One full simulation as a lax.scan; every argument traced except the
-    static (policy metadata, warm_start, placer, totals_only, easy_eval).
-    Dispatches on the policy's static ``queue`` metadata: the FCFS path is
-    the historical arrival-order scan, bit-identical to the pre-queue-axis
-    engine; ``easy_backfill`` runs the windowed scan (``_scan_sim_easy``).
+    static (policy metadata, warm_start, placer, totals_only, easy_eval,
+    core, retries).  Dispatch:
+
+    - ``core="arrival"`` (default): the historical arrival-indexed scans —
+      the FCFS path bit-identical to the pre-queue-axis engine, EASY via
+      the windowed scan (``_scan_sim_easy``);
+    - ``core="events"`` (or ``queue="conservative"``, which requires it):
+      the event-granular scan (``_scan_sim_events``) whose clock advances
+      through merged arrival + completion events — the core that can
+      defer placements under an SCC power cap and re-queue mid-job
+      failures (``retries``).
     """
     T_true, C_true, E_true = arrs["T_true"], arrs["C_true"], arrs["E_true"]
     T_pred, C_pred = arrs["T_pred"], arrs["C_pred"]
@@ -265,6 +311,14 @@ def _scan_sim(arrs: dict, policy: Policy, warm_start: bool,
         tabs0 = (jnp.zeros((P, S)), jnp.zeros((P, S)),
                  jnp.zeros((P, S), jnp.int32))
 
+    if policy.queue == "conservative":
+        return _scan_sim_cons(arrs, policy, placer, totals_only,
+                              kvec, sel_key, fault_key, fvec, tabs0,
+                              retries)
+    if core == "events":
+        return _scan_sim_events(arrs, policy, placer, totals_only,
+                                kvec, sel_key, fault_key, fvec, tabs0,
+                                retries)
     if policy.queue == "easy_backfill":
         return _scan_sim_easy(arrs, policy, placer, totals_only,
                               kvec, sel_key, fault_key, fvec, tabs0,
@@ -328,18 +382,35 @@ def _scan_sim(arrs: dict, policy: Policy, warm_start: bool,
         sums, _, fin_max, busy, wait_max = acc
         return {"total_energy": sums[0], "makespan": fin_max,
                 "total_wait": sums[1], "slowdown_sum": sums[2],
-                "max_wait": wait_max, "busy": busy, **tabs}
+                "max_wait": wait_max, "busy": busy,
+                **_power_totals(arrs, fin_max, busy), **tabs}
     sel, start, finish, wait, E, T_act = ys
     nodes = n_req[prog, sel]                                     # [J]
     busy = jnp.zeros(S, jnp.float32).at[sel].add(T_act * nodes)
+    makespan = finish.max()
     return {
         "system": sel, "start": start, "finish": finish, "wait": wait,
         "energy": E, "runtime": T_act, "nodes": nodes,
         "backfilled": jnp.zeros(J, bool),
-        "total_energy": E.sum(), "makespan": finish.max(),
+        "total_energy": E.sum(), "makespan": makespan,
         "total_wait": wait.sum(), "max_wait": wait.max(),
         "slowdown_sum": ((wait + T_act) / T_act).sum(), "busy": busy,
-        **tabs,
+        **_power_totals(arrs, makespan, busy), **tabs,
+    }
+
+
+def _power_totals(arrs, makespan, busy, peak_power=None, capped_delay=None):
+    """The SCC power fields every result carries.  The arrival-indexed
+    scans do not track a cluster power trace (placements may carry future
+    starts, so no running peak exists): they report ``peak_power`` NaN and
+    zero ``capped_delay``; ``idle_energy`` is derivable from busy
+    node-seconds on every core."""
+    return {
+        "peak_power": jnp.float32(jnp.nan) if peak_power is None
+        else peak_power,
+        "capped_delay": jnp.float32(0.0) if capped_delay is None
+        else capped_delay,
+        "idle_energy": _idle_energy(arrs, makespan, busy),
     }
 
 
@@ -588,7 +659,8 @@ def _scan_sim_easy(arrs: dict, policy: Policy, placer: str | None,
         sums, _, fin_max, busy, wait_max = acc
         return {"total_energy": sums[0], "makespan": fin_max,
                 "total_wait": sums[1], "slowdown_sum": sums[2],
-                "max_wait": wait_max, "busy": busy, **tabs}
+                "max_wait": wait_max, "busy": busy,
+                **_power_totals(arrs, fin_max, busy), **tabs}
 
     # scatter per-step outputs back to arrival order; sentinel ids drop
     j_pl, sel_s, start_s, fin_s, wait_s, E_s, T_s, bf_s = ys
@@ -603,27 +675,734 @@ def _scan_sim_easy(arrs: dict, policy: Policy, placer: str | None,
     backfilled = scat(bf_s, bool)
     nodes = n_req[prog, sel]                                     # [J]
     busy = jnp.zeros(S, jnp.float32).at[sel].add(T_act * nodes)
+    makespan = finish.max()
     return {
         "system": sel, "start": start, "finish": finish, "wait": wait,
         "energy": E, "runtime": T_act, "nodes": nodes,
         "backfilled": backfilled,
-        "total_energy": E.sum(), "makespan": finish.max(),
+        "total_energy": E.sum(), "makespan": makespan,
         "total_wait": wait.sum(), "max_wait": wait.max(),
         "slowdown_sum": ((wait + T_act) / T_act).sum(), "busy": busy,
-        **tabs,
+        **_power_totals(arrs, makespan, busy), **tabs,
     }
 
 
+def _scan_sim_events(arrs: dict, policy: Policy, placer: str | None,
+                     totals_only: bool, kvec, sel_key, fault_key, fvec,
+                     tabs0, retries: bool = False):
+    """Event-granular scan: the clock advances through the merged stream
+    of arrival AND completion events, so the pending buffer is
+    re-evaluated whenever nodes free up.
+
+    Carry: node-free AND node-power tables, learned tables, a pending
+    buffer of ``window + 1`` slots (job id + per-slot effective arrival /
+    retry flag / accrued runtime / accrued fault factor / accrued wait /
+    first-attempt start / first-power-blocked time), the next-arrival
+    cursor ``a``, the clock ``now``, and the power accumulators (running
+    peak, cap-attributed delay).  Each step performs at least one of:
+
+      push     admit the next arrival (``arrival[a] <= now`` and the
+               buffer has room; a full buffer stalls admission — arrivals
+               wait OUTSIDE the window, so no placement is ever forced
+               with a future start and the power cap stays enforceable);
+      place    at most one pending job whose start is feasible *now*:
+               resource-feasible (earliest start <= now), discipline-
+               eligible, and power-feasible (below).  Eligibility by
+               ``policy.queue``:
+                 fcfs          the head only — placements in strict
+                               arrival order (bit-identical to the
+                               arrival-indexed scan, asserted per
+                               registered policy);
+                 easy_backfill head, or any slot whose tentative
+                               allocation cannot delay the head's
+                               reservation (event-driven EASY: backfills
+                               start at the current event, never in the
+                               future);
+               (``conservative`` runs its own event-granular scan,
+               ``_scan_sim_cons`` — reservations chained through a
+               profile table instead of per-step re-evaluation);
+      advance  otherwise move ``now`` to the next event: the earliest of
+               the next arrival, the earliest node-free time > now (a
+               completion), or the next outage end.
+
+    Every job needs one push + one placement and every advance lands on a
+    distinct event time, so ``4J + |outage| + 4`` steps suffice (``7J``
+    with retries: a failure adds one push, one placement, one event).
+
+    Power-cap enforcement (``policy.power_cap``, a LEAF — cap grids batch
+    in one jit): the carry's node-power table gives the cluster draw
+    ``P(now) = sum(busy ? node_pow : idle_w)``; a placement converting
+    ``need`` idle nodes to a job drawing ``E/T`` Watts is deferred while
+    ``P(now) - need*idle_w + E/T > cap``.  Under a finite cap starts are
+    quantized to the current event (``start = now``), so the recorded
+    trace is exact and ``peak_power <= cap`` holds whenever the cap is
+    above the idle floor (a cap below the all-idle draw is unsatisfiable;
+    the head is force-placed rather than stalling forever, and the
+    recorded peak honestly exceeds the cap).  Uncapped runs keep the
+    resource-earliest start (possibly before ``now`` — nodes were idle
+    since then), which preserves FCFS bit-identity; ``peak_power`` is
+    then the draw sampled at placement instants.  ``capped_delay`` sums,
+    over placed jobs, the gap between the first time a job was the next
+    would-be placement but power-blocked and its actual start.
+
+    Mid-job failures (``retries=True``, chosen by the facade when a fault
+    grid carries ``failure_prob > 0``): instead of the arrival cores'
+    contiguous ``(1 + restart_overhead)`` inflation, the first attempt of
+    a failing job occupies its nodes for ``restart_overhead`` of its work
+    and then RE-QUEUES through the same pending buffer (effective arrival
+    = the failure time, a completion event like any other).  The retry
+    re-selects a system with current tables and never fails again.
+    Tables update once, at the final attempt, with the job's accumulated
+    fault factor — for a same-system retry exactly the contiguous
+    model's ``(1 + restart_overhead)`` totals.
+    """
+    T_true, C_true, E_true = arrs["T_true"], arrs["C_true"], arrs["E_true"]
+    T_pred, C_pred = arrs["T_pred"], arrs["C_pred"]
+    n_req, prog, arrival = arrs["n_req"], arrs["prog"], arrs["arrival"]
+    outage = arrs.get("outage")
+    w_pow, idle_w = arrs["w_pow"], arrs["idle_w"]
+    P, S = T_true.shape
+    J = prog.shape[0]
+    W = int(policy.window)
+    Wc = W + 1
+    queue = policy.queue
+    idx = jnp.arange(Wc)
+
+    exists = arrs["free0"] < BIG                                 # [S, maxN]
+    idle_mat = jnp.where(exists, idle_w[:, None], 0.0)           # [S, maxN]
+    idle_total = idle_mat.sum()
+    pc = jnp.asarray(policy.power_cap, jnp.float32)
+    capped = pc < UNCAPPED                                       # traced
+
+    out_ends = (None if outage is None
+                else outage[..., 1].reshape(-1))                 # [S*W0]
+    n_out = 0 if out_ends is None else out_ends.shape[0]
+    T_steps = (7 if retries else 4) * J + n_out + 4
+
+    def step(carry, _):
+        (node_free, node_pow, C_tab, T_tab, runs, acc, busy,
+         pend, t0s, rts, accTs, accFs, accWs, s0s, pblocks,
+         a, now, nbf, peak, cdel) = carry
+
+        # ---- push: admit the next arrival if due and there is room
+        size0 = jnp.sum(pend < J)
+        arr_a = arrival[jnp.minimum(a, J - 1)]
+        do_push = (a < J) & (size0 < Wc) & (arr_a <= now)
+        slot = jnp.minimum(size0, Wc - 1)
+
+        def pushed(arr, val):
+            return arr.at[slot].set(jnp.where(do_push, val, arr[slot]))
+        pend = pushed(pend, a.astype(jnp.int32))
+        t0s = pushed(t0s, arr_a)
+        rts = pushed(rts, False)
+        accTs = pushed(accTs, 0.0)
+        accFs = pushed(accFs, 0.0)
+        accWs = pushed(accWs, 0.0)
+        s0s = pushed(s0s, 0.0)
+        pblocks = pushed(pblocks, BIG)
+        a = a + do_push
+
+        # ---- next event (pre-placement state; used by advance + the
+        # stuck valve).  Completions are node-free times > now.
+        next_evt = jnp.min(jnp.where(node_free > now, node_free, BIG))
+        arr_next = arrival[jnp.minimum(a, J - 1)]
+        next_evt = jnp.minimum(
+            next_evt, jnp.where((a < J) & (arr_next > now), arr_next, BIG))
+        if out_ends is not None:
+            next_evt = jnp.minimum(
+                next_evt,
+                jnp.min(jnp.where(out_ends > now, out_ends, BIG)))
+
+        # ---- batched evaluation of every pending slot (sentinel slots
+        # evaluate job J-1 behind a BIG arrival floor; never eligible)
+        valid = pend < J
+        jjs = jnp.minimum(pend, J - 1)
+        ps = prog[jjs]
+        t0f = jnp.where(valid, t0s, BIG)
+        kths, avails = _earliest_shared(node_free, n_req[ps],
+                                        t0f[:, None], placer, outage)
+        keys = jax.vmap(lambda j: jax.random.fold_in(sel_key, j))(jjs)
+        sels = select_batched(
+            policy, c_rows=C_tab[ps], t_rows=T_tab[ps], runs_rows=runs[ps],
+            avail_rows=avails, k=kvec[jjs], c_pred_rows=C_pred[ps],
+            t_pred_rows=T_pred[ps], keys=keys)                   # [Wc]
+        starts_res = avails[idx, sels]                           # [Wc]
+
+        # fault draws (keyed by job id, as _fault_factor does)
+        u = jax.vmap(lambda j: jax.random.uniform(
+            jax.random.fold_in(fault_key, j), (2,)))(jjs)        # [Wc, 2]
+        slows = jnp.where(u[:, 0] < fvec[0], fvec[1], 1.0)
+        fails = u[:, 1] < fvec[2]
+        if retries:
+            first_fail = fails & ~rts        # retries never fail again
+            scale = jnp.where(first_fail, fvec[3], 1.0)
+        else:
+            first_fail = jnp.zeros(Wc, bool)
+            scale = jnp.where(fails, 1.0 + fvec[3], 1.0)
+        factors = slows * scale
+        T_acts = T_true[ps, sels] * factors
+        E_acts = E_true[ps, sels] * factors
+        needs = n_req[ps, sels]
+
+        # start rule: capped runs quantize to the current event (exact
+        # power trace); uncapped keep the resource-earliest start (FCFS
+        # bit-identity — the nodes were idle since then)
+        starts = jnp.where(capped, jnp.maximum(starts_res, now), starts_res)
+        finishes = starts + T_acts
+        trials = jax.vmap(_alloc, in_axes=(None, 0, 0, 0, 0))(
+            node_free, sels, kths[idx, sels], needs, finishes)
+
+        # ---- discipline eligibility (resource side)
+        res_ok = valid & (starts_res <= now)
+        if outage is not None:
+            # a cap-deferred start quantizes to ``now`` — which must
+            # itself respect the start gate: a slot whose system has an
+            # open maintenance window is not placeable until the window
+            # ends (an event the clock advances to).  Uncapped starts are
+            # already outage-pushed inside ``starts_res``.
+            gated = _push_out_of_outage(starts, outage[sels])
+            res_ok = res_ok & (~capped | (gated <= now))
+        if queue == "fcfs":
+            elig_res = res_ok & (idx == 0)
+        else:  # event-driven EASY: only the head's reservation is guarded
+            p_h, sel_h = ps[0], sels[0]
+            r_h = starts_res[0]
+            kth_h2 = kth_free_time(
+                trials[:, sel_h, :],
+                jnp.broadcast_to(n_req[p_h, sel_h], (Wc,)),
+                force=placer or "sort")
+            avail_h2 = jnp.maximum(t0f[0], kth_h2)               # [Wc]
+            if outage is not None:
+                avail_h2 = _push_out_of_outage(avail_h2,
+                                               outage[sel_h][None])
+            elig_res = res_ok & ((idx == 0) | (avail_h2 <= r_h))
+
+        # ---- power feasibility + the stuck valve
+        p_now = jnp.sum(jnp.where(node_free > now, node_pow, idle_mat))
+        w_jobs = w_pow[ps, sels]                                 # [Wc]
+        new_P = p_now - needs * idle_w[sels] + w_jobs            # [Wc]
+        power_ok = ~capped | (new_P <= pc)
+        elig0 = elig_res & power_ok
+        head_valid = valid[0]
+        # no event ahead + nothing placeable can only mean the cap is
+        # below the idle floor: force the head rather than stall forever
+        stuck = head_valid & ~do_push & ~jnp.any(elig0) & (next_evt >= BIG)
+        elig = jnp.where(idx == 0, elig0[0] | stuck, elig0)
+
+        chosen = jnp.min(jnp.where(elig, idx, Wc))
+        placed = chosen < Wc
+        ci = jnp.minimum(chosen, Wc - 1)
+
+        # cap-attributed delay: the next would-be placement, power-blocked
+        chosen_res = jnp.min(jnp.where(elig_res, idx, Wc))
+        cri = jnp.minimum(chosen_res, Wc - 1)
+        blocked = (chosen_res < Wc) & ~power_ok[cri]
+        pblocks = pblocks.at[cri].set(
+            jnp.where(blocked, jnp.minimum(pblocks[cri], now), pblocks[cri]))
+
+        # ---- place the chosen slot (its trial IS the allocation)
+        jj, p, sel = jjs[ci], ps[ci], sels[ci]
+        factor, T_act, E_act = factors[ci], T_acts[ci], E_acts[ci]
+        start, finish, need = starts[ci], finishes[ci], needs[ci]
+        failed_now = placed & first_fail[ci]
+        final = placed & ~first_fail[ci]
+        # per-slot accruals, captured before the pop shifts the buffer
+        accT_ci, accF_ci, accW_ci = accTs[ci], accFs[ci], accWs[ci]
+        s0_ci = jnp.where(rts[ci], s0s[ci], start)
+        wait_step = start - t0s[ci]
+        pb_ci = pblocks[ci]
+
+        take = _alloc_mask(node_free, sel, kths[ci, sel], need)
+        node_free = jnp.where(placed, trials[ci], node_free)
+        per_node = w_jobs[ci] / jnp.maximum(need, 1).astype(jnp.float32)
+        node_pow = jnp.where(
+            placed,
+            node_pow.at[sel].set(jnp.where(take, per_node, node_pow[sel])),
+            node_pow)
+
+        fac_tot = accF_ci + factor
+        C_upd = C_true[p, sel] * fac_tot
+        T_upd = T_true[p, sel] * fac_tot
+        n = runs[p, sel].astype(jnp.float32)
+        C_tab = C_tab.at[p, sel].set(jnp.where(
+            final, (C_tab[p, sel] * n + C_upd) / (n + 1), C_tab[p, sel]))
+        T_tab = T_tab.at[p, sel].set(jnp.where(
+            final, (T_tab[p, sel] * n + T_upd) / (n + 1), T_tab[p, sel]))
+        runs = runs.at[p, sel].add(jnp.where(final, 1, 0))
+
+        busy = busy.at[sel].add(jnp.where(placed, T_act * need, 0.0))
+        nbf = nbf + (final & (chosen > 0)).astype(jnp.int32)
+        peak = jnp.maximum(peak, jnp.where(placed, new_P[ci], 0.0))
+        cdel = cdel + jnp.where(placed & (pb_ci < BIG), now - pb_ci, 0.0)
+
+        # pop the chosen slot (shift left; chosen == Wc: no-op)
+        def pop(arr, fill):
+            shifted = jnp.concatenate(
+                [arr[1:], jnp.full((1,), fill, arr.dtype)])
+            return jnp.where(idx < chosen, arr, shifted)
+        pend = pop(pend, J)
+        t0s, rts = pop(t0s, 0.0), pop(rts, False)
+        accTs, accFs, accWs = pop(accTs, 0.0), pop(accFs, 0.0), \
+            pop(accWs, 0.0)
+        s0s, pblocks = pop(s0s, 0.0), pop(pblocks, BIG)
+
+        if retries:
+            # a failed first attempt re-queues at the tail: effective
+            # arrival = the failure time (a completion event)
+            size2 = jnp.sum(pend < J)
+            slot2 = jnp.minimum(size2, Wc - 1)
+
+            def requeue(arr, val):
+                return arr.at[slot2].set(
+                    jnp.where(failed_now, val, arr[slot2]))
+            pend = requeue(pend, jj.astype(jnp.int32))
+            t0s = requeue(t0s, finish)
+            rts = requeue(rts, True)
+            accTs = requeue(accTs, accT_ci + T_act)
+            accFs = requeue(accFs, fac_tot)
+            accWs = requeue(accWs, accW_ci + wait_step)
+            s0s = requeue(s0s, s0_ci)
+            pblocks = requeue(pblocks, BIG)
+
+        T_tot = accT_ci + T_act
+        wait_tot = accW_ci + wait_step
+        if totals_only:
+            sums, comps, fin_max, wait_max = acc
+            add = jnp.stack([
+                E_act,
+                jnp.where(final, wait_tot, 0.0),
+                jnp.where(final, (wait_tot + T_tot) / T_tot, 0.0)])
+            # Kahan update applied ONLY on placement steps, so the FCFS
+            # op sequence matches the arrival-indexed core bit for bit
+            y = add - comps
+            t = sums + y
+            acc = (jnp.where(placed, t, sums),
+                   jnp.where(placed, (t - sums) - y, comps),
+                   jnp.maximum(fin_max, jnp.where(placed, finish, 0.0)),
+                   jnp.maximum(wait_max, jnp.where(final, wait_tot, 0.0)))
+            out = None
+        else:
+            out = (jnp.where(placed, jj, J), E_act,
+                   jnp.where(final, jj, J), sel, s0_ci, finish,
+                   wait_tot, T_tot, final & (chosen > 0))
+
+        # ---- advance the clock only when nothing else happened
+        advance = ~do_push & ~placed & (next_evt < BIG)
+        now = jnp.where(advance, next_evt, now)
+
+        return (node_free, node_pow, C_tab, T_tab, runs, acc, busy,
+                pend, t0s, rts, accTs, accFs, accWs, s0s, pblocks,
+                a, now, nbf, peak, cdel), out
+
+    acc0 = ((jnp.zeros(3, jnp.float32), jnp.zeros(3, jnp.float32),
+             jnp.float32(0.0), jnp.float32(0.0))
+            if totals_only else ())
+    carry0 = (
+        arrs["free0"], jnp.zeros_like(arrs["free0"]), *tabs0, acc0,
+        jnp.zeros(S, jnp.float32),
+        jnp.full((Wc,), J, jnp.int32), jnp.zeros(Wc, jnp.float32),
+        jnp.zeros(Wc, bool), jnp.zeros(Wc, jnp.float32),
+        jnp.zeros(Wc, jnp.float32), jnp.zeros(Wc, jnp.float32),
+        jnp.zeros(Wc, jnp.float32), jnp.full((Wc,), BIG, jnp.float32),
+        jnp.int32(0), arrival[0], jnp.int32(0), idle_total,
+        jnp.float32(0.0))
+    carry_f, ys = jax.lax.scan(step, carry0, None, length=T_steps)
+    (node_free, node_pow, C_tab, T_tab, runs, acc, busy,
+     pend, t0s, rts, accTs, accFs, accWs, s0s, pblocks,
+     a, now, nbf, peak, cdel) = carry_f
+    return _event_results(arrs, totals_only, ys, acc, busy,
+                          (C_tab, T_tab, runs), nbf, peak, cdel)
+
+
+def _event_results(arrs, totals_only, ys, acc, busy, tables, nbf, peak,
+                   cdel):
+    """Shared result epilogue of the two event-granular scans: unpack the
+    totals accumulator, or scatter the per-step (attempt-energy,
+    final-attempt fields) outputs back to arrival order."""
+    n_req, prog = arrs["n_req"], arrs["prog"]
+    J = prog.shape[0]
+    C_tab, T_tab, runs = tables
+    tabs = {"C_tab": C_tab, "T_tab": T_tab, "runs": runs,
+            "n_backfilled": nbf}
+    if totals_only:
+        sums, _, fin_max, wait_max = acc
+        return {"total_energy": sums[0], "makespan": fin_max,
+                "total_wait": sums[1], "slowdown_sum": sums[2],
+                "max_wait": wait_max, "busy": busy,
+                **_power_totals(arrs, fin_max, busy, peak, cdel), **tabs}
+
+    j_add, E_s, j_fin, sel_s, s0_s, fin_s, wait_s, T_s, bf_s = ys
+    E = jnp.zeros(J, jnp.float32).at[j_add].add(E_s, mode="drop")
+    def scat(vals, dtype):
+        return jnp.zeros(J, dtype).at[j_fin].set(vals, mode="drop")
+    sel = scat(sel_s, sel_s.dtype)
+    start = scat(s0_s, jnp.float32)
+    finish = scat(fin_s, jnp.float32)
+    wait = scat(wait_s, jnp.float32)
+    T_act = scat(T_s, jnp.float32)
+    backfilled = scat(bf_s, bool)
+    nodes = n_req[prog, sel]                                     # [J]
+    makespan = finish.max()
+    return {
+        "system": sel, "start": start, "finish": finish, "wait": wait,
+        "energy": E, "runtime": T_act, "nodes": nodes,
+        "backfilled": backfilled,
+        "total_energy": E.sum(), "makespan": makespan,
+        "total_wait": wait.sum(), "max_wait": wait.max(),
+        "slowdown_sum": ((wait + T_act) / T_act).sum(), "busy": busy,
+        **_power_totals(arrs, makespan, busy, peak, cdel), **tabs,
+    }
+
+
+def _scan_sim_cons(arrs: dict, policy: Policy, placer: str | None,
+                   totals_only: bool, kvec, sel_key, fault_key, fvec,
+                   tabs0, retries: bool = False):
+    """Conservative backfilling: hole-aware chained reservations on the
+    event-granular clock.
+
+    Textbook conservative gives EVERY queued job a reservation the moment
+    it is admitted, computed around all earlier pending reservations — so
+    backfilling is hole-filling by construction and no reservation is
+    ever delayed.  Crucially, reservations are NOT committed into the
+    node-free table (a free-from time per node cannot represent "idle
+    until the reservation starts", which is exactly the hole backfilling
+    lives on — committing eagerly is why the arrival-indexed FCFS scan
+    wastes those gaps).  Instead the carry keeps:
+
+      node_free      reality — realized placements only;
+      the slot reservation table — per pending slot its (system, start,
+                     finish, nodes): explicit intervals.
+
+    Admission evaluates, per system, the earliest start where FREE
+    CAPACITY (count of really-free nodes minus reservation occupancy)
+    covers the job for its whole duration: candidate starts are the
+    arrival, node free times and reservation finishes (capacity rises),
+    each checked against every reservation start inside the candidate
+    window (the only capacity dips).  That [S, E] piecewise-capacity
+    evaluation is a handful of vectorized comparisons against the [W]
+    reservation table — the admission IS the reservation-table update.
+    The policy then selects over the per-system earliest starts and the
+    chosen (sel, start, finish, need) joins the table.  Selection thus
+    happens at ADMISSION time with the tables as of admission (learned
+    tables still update at placement).
+
+    A placement *realizes* a reservation once the clock reaches its
+    start: the per-slot realizability recheck (``kth_free_time_rows`` —
+    one shared sort of the real table serves every pending reservation)
+    confirms the promised nodes, and the job starts exactly at its
+    reserved time.  Uncapped, realized == reserved always (asserted by
+    the mirror's ``check_reservations``); under a binding power cap a
+    deferred start breaks promises downstream, and realized starts
+    degrade gracefully to ``max(reserved, realizable, power-feasible)``
+    in reservation order.  The ``window`` bounds the reservation horizon
+    (pending slots); admission stalls when it is full.
+
+    Compared to EASY this queue both *guards more* (every reservation,
+    not just the head's) and *backfills more*: EASY only exploits the
+    idle gap under the head's reservation (everything else is committed
+    eagerly), while the interval table exposes the holes under EVERY
+    pending job.  Faults ride the event stream as in
+    ``_scan_sim_events``: with ``retries`` a failing first attempt
+    occupies exactly its reserved span (the failure IS a completion
+    event) and re-queues for a fresh reservation at the failure time.
+    """
+    T_true, C_true, E_true = arrs["T_true"], arrs["C_true"], arrs["E_true"]
+    T_pred, C_pred = arrs["T_pred"], arrs["C_pred"]
+    n_req, prog, arrival = arrs["n_req"], arrs["prog"], arrs["arrival"]
+    outage = arrs.get("outage")
+    w_pow, idle_w = arrs["w_pow"], arrs["idle_w"]
+    P, S = T_true.shape
+    J = prog.shape[0]
+    Wc = int(policy.window) + 1
+    idx = jnp.arange(Wc)
+
+    exists = arrs["free0"] < BIG
+    idle_mat = jnp.where(exists, idle_w[:, None], 0.0)
+    idle_total = idle_mat.sum()
+    pc = jnp.asarray(policy.power_cap, jnp.float32)
+    capped = pc < UNCAPPED
+
+    out_ends = (None if outage is None
+                else outage[..., 1].reshape(-1))
+    n_out = 0 if out_ends is None else out_ends.shape[0]
+    # pushes + placements + distinct-event advances (arrivals,
+    # completions, reservation starts, outage ends), doubled-ish by
+    # retries: see _scan_sim_events for the counting argument
+    T_steps = (9 if retries else 5) * J + n_out + 4
+
+    #: per-slot pop fill values (sentinel slot state)
+    FILLS = dict(pend=J, t0=0.0, rt=False, accT=0.0, accF=0.0, accW=0.0,
+                 s0=0.0, pblock=BIG, sel=0, start=0.0, fin=0.0, T=1.0,
+                 E=0.0, need=0, wjob=0.0, fac=0.0, fail=False)
+    sys_col = jnp.arange(S)[:, None, None]                       # [S, 1, 1]
+
+    def earliest_fit(p, t0, Tdur, node_free, slots):
+        """Per-system earliest start where free capacity (really-free
+        node count minus reservation occupancy) covers ``n_req[p]``
+        nodes for the whole [t, t + Tdur) window.  Candidates: the
+        arrival floor, node free times, reservation finishes (the only
+        capacity rises); dips happen only at reservation starts, so each
+        candidate is checked against the [W] reservation table."""
+        need = n_req[p]                                          # [S]
+        r_valid = slots["pend"] < J                              # [Wc]
+        r_sel, r_sta = slots["sel"], slots["start"]
+        r_fin, r_need = slots["fin"], slots["need"]
+        cands = jnp.concatenate([
+            jnp.full((S, 1), t0, jnp.float32), node_free,
+            jnp.broadcast_to(r_fin[None], (S, Wc)),
+        ], axis=1)                                               # [S, E]
+        cands = jnp.maximum(cands, t0)
+        if outage is not None:
+            # start gating only (jobs ride through windows, as in the
+            # other cores); outage ends are free-time candidates via the
+            # floored duplicates below
+            for wi in range(outage.shape[1]):
+                o0 = outage[:, wi, 0][:, None]
+                o1 = outage[:, wi, 1][:, None]
+                cands = jnp.where((cands >= o0) & (cands < o1), o1, cands)
+        q = jnp.concatenate(
+            [cands, jnp.broadcast_to(r_sta[None], (S, Wc))], axis=1)
+        cnt = jnp.sum(node_free[:, None, :] <= q[:, :, None], axis=2)
+        on_sys = r_valid[None, None, :] & (r_sel[None, None, :] == sys_col)
+        occ = jnp.sum(jnp.where(
+            on_sys & (r_sta[None, None, :] <= q[:, :, None])
+            & (q[:, :, None] < r_fin[None, None, :]),
+            r_need[None, None, :], 0), axis=2)
+        availn = cnt - occ                                   # [S, E + Wc]
+        E_c = cands.shape[1]
+        cap_ok = availn[:, :E_c] >= need[:, None]                # [S, E]
+        avail_rs = availn[:, E_c:]                               # [S, Wc]
+        dips = (on_sys & (cands[:, :, None] < r_sta[None, None, :])
+                & (r_sta[None, None, :]
+                   < cands[:, :, None] + Tdur[:, None, None]))
+        dip_ok = jnp.all(
+            ~dips | (avail_rs[:, None, :] >= need[:, None, None]), axis=2)
+        return jnp.min(jnp.where(cap_ok & dip_ok, cands, BIG), axis=1)
+
+    def reserve(jp, t0, is_retry, node_free, slots, C_tab, T_tab, runs):
+        """Admission: fault draw + hole-aware earliest fit + selection —
+        the new reservation row for the slot table."""
+        p = prog[jp]
+        u = jax.random.uniform(jax.random.fold_in(fault_key, jp), (2,))
+        slow = jnp.where(u[0] < fvec[0], fvec[1], 1.0)
+        fail = u[1] < fvec[2]
+        if retries:
+            first_fail = fail & ~is_retry
+            scale = jnp.where(first_fail, fvec[3], 1.0)
+        else:
+            first_fail = jnp.zeros((), bool)
+            scale = jnp.where(fail, 1.0 + fvec[3], 1.0)
+        factor = slow * scale
+        Tdur = T_true[p] * factor                                # [S]
+        avail_p = earliest_fit(p, t0, Tdur, node_free, slots)
+        sel = select(
+            policy, c_row=C_tab[p], t_row=T_tab[p], runs_row=runs[p],
+            avail_row=avail_p, k=kvec[jp], c_pred_row=C_pred[p],
+            t_pred_row=T_pred[p], key=jax.random.fold_in(sel_key, jp))
+        start = avail_p[sel]
+        T_act = Tdur[sel]
+        return dict(sel=sel.astype(jnp.int32), start=start,
+                    fin=start + T_act, T=T_act,
+                    E=E_true[p, sel] * factor, need=n_req[p, sel],
+                    wjob=w_pow[p, sel], fac=factor, fail=first_fail)
+
+    def step(carry, _):
+        (node_free, node_pow, C_tab, T_tab, runs, acc, busy,
+         slots, a, now, nbf, peak, cdel) = carry
+
+        # ---- push: admit + reserve the next arrival if due and room
+        size0 = jnp.sum(slots["pend"] < J)
+        jp = jnp.minimum(a, J - 1)
+        arr_a = arrival[jp]
+        do_push = (a < J) & (size0 < Wc) & (arr_a <= now)
+        vals = reserve(jp, arr_a, jnp.zeros((), bool), node_free, slots,
+                       C_tab, T_tab, runs)
+        slot = jnp.minimum(size0, Wc - 1)
+        newv = dict(pend=jp.astype(jnp.int32), t0=arr_a, rt=False,
+                    accT=0.0, accF=0.0, accW=0.0, s0=0.0, pblock=BIG,
+                    **vals)
+        slots = {k: v.at[slot].set(jnp.where(do_push, newv[k], v[slot]))
+                 for k, v in slots.items()}
+        a = a + do_push
+
+        valid = slots["pend"] < J
+        r_start, r_sel, r_need = slots["start"], slots["sel"], slots["need"]
+
+        # ---- next event: arrivals, completions, reservation starts,
+        # outage ends (reserved starts need not coincide with node-free
+        # times once a cap defers placements)
+        next_evt = jnp.min(jnp.where(node_free > now, node_free, BIG))
+        arr_next = arrival[jnp.minimum(a, J - 1)]
+        next_evt = jnp.minimum(
+            next_evt, jnp.where((a < J) & (arr_next > now), arr_next, BIG))
+        next_evt = jnp.minimum(
+            next_evt,
+            jnp.min(jnp.where(valid & (r_start > now), r_start, BIG)))
+        if out_ends is not None:
+            next_evt = jnp.minimum(
+                next_evt,
+                jnp.min(jnp.where(out_ends > now, out_ends, BIG)))
+
+        # ---- realizability on the REAL table (one shared sort)
+        kth_rows = kth_free_time_rows(node_free, r_sel, r_need,
+                                      force=placer)              # [Wc]
+        avail_real = jnp.maximum(jnp.where(valid, slots["t0"], BIG),
+                                 kth_rows)
+        if outage is not None:
+            avail_real = _push_out_of_outage(avail_real, outage[r_sel])
+        elig_res = valid & (r_start <= now) & (avail_real <= now)
+        if outage is not None:
+            # cap-deferred starts quantize to ``now``: the start gate
+            # must hold there too (reserved starts are already pushed)
+            q = jnp.maximum(r_start, now)
+            gated = _push_out_of_outage(q, outage[r_sel])
+            elig_res = elig_res & (~capped | (gated <= now))
+
+        # ---- power feasibility + the stuck valve
+        p_now = jnp.sum(jnp.where(node_free > now, node_pow, idle_mat))
+        new_P = p_now - r_need * idle_w[r_sel] + slots["wjob"]
+        power_ok = ~capped | (new_P <= pc)
+        elig0 = elig_res & power_ok
+        stuck = (jnp.any(elig_res) & ~do_push & ~jnp.any(elig0)
+                 & (next_evt >= BIG))
+        elig = elig0 | (elig_res & stuck)
+
+        chosen = jnp.min(jnp.where(elig, idx, Wc))
+        placed = chosen < Wc
+        ci = jnp.minimum(chosen, Wc - 1)
+
+        chosen_res = jnp.min(jnp.where(elig_res, idx, Wc))
+        cri = jnp.minimum(chosen_res, Wc - 1)
+        blocked = (chosen_res < Wc) & ~power_ok[cri]
+        slots["pblock"] = slots["pblock"].at[cri].set(
+            jnp.where(blocked, jnp.minimum(slots["pblock"][cri], now),
+                      slots["pblock"][cri]))
+
+        # ---- realize the chosen reservation
+        jj = jnp.minimum(slots["pend"][ci], J - 1)
+        p = prog[jj]
+        sel, need = r_sel[ci], jnp.maximum(r_need[ci], 1)
+        T_act, E_act, fac = slots["T"][ci], slots["E"][ci], slots["fac"][ci]
+        start = jnp.where(capped, jnp.maximum(r_start[ci], now),
+                          r_start[ci])
+        finish = start + T_act
+        failed_now = placed & slots["fail"][ci]
+        final = placed & ~slots["fail"][ci]
+        accT_ci, accF_ci = slots["accT"][ci], slots["accF"][ci]
+        accW_ci = slots["accW"][ci]
+        s0_ci = jnp.where(slots["rt"][ci], slots["s0"][ci], start)
+        wait_step = start - slots["t0"][ci]
+        pb_ci = slots["pblock"][ci]
+
+        kth_ci = kth_rows[ci]
+        take = _alloc_mask(node_free, sel, kth_ci, need)
+        node_free = jnp.where(
+            placed, _alloc(node_free, sel, kth_ci, need, finish),
+            node_free)
+        per_node = slots["wjob"][ci] / need.astype(jnp.float32)
+        node_pow = jnp.where(
+            placed,
+            node_pow.at[sel].set(jnp.where(take, per_node, node_pow[sel])),
+            node_pow)
+
+        fac_tot = accF_ci + fac
+        C_upd = C_true[p, sel] * fac_tot
+        T_upd = T_true[p, sel] * fac_tot
+        n = runs[p, sel].astype(jnp.float32)
+        C_tab = C_tab.at[p, sel].set(jnp.where(
+            final, (C_tab[p, sel] * n + C_upd) / (n + 1), C_tab[p, sel]))
+        T_tab = T_tab.at[p, sel].set(jnp.where(
+            final, (T_tab[p, sel] * n + T_upd) / (n + 1), T_tab[p, sel]))
+        runs = runs.at[p, sel].add(jnp.where(final, 1, 0))
+
+        busy = busy.at[sel].add(jnp.where(placed, T_act * need, 0.0))
+        nbf = nbf + (final & (chosen > 0)).astype(jnp.int32)
+        peak = jnp.maximum(peak, jnp.where(placed, new_P[ci], 0.0))
+        cdel = cdel + jnp.where(placed & (pb_ci < BIG), now - pb_ci, 0.0)
+
+        def pop(arr, fill):
+            shifted = jnp.concatenate(
+                [arr[1:], jnp.full((1,), fill, arr.dtype)])
+            return jnp.where(idx < chosen, arr, shifted)
+        slots = {k: pop(v, FILLS[k]) for k, v in slots.items()}
+
+        if retries:
+            # failed first attempt: fresh reservation at the failure time
+            vals2 = reserve(jj, finish, jnp.ones((), bool), node_free,
+                            slots, C_tab, T_tab, runs)
+            size2 = jnp.sum(slots["pend"] < J)
+            slot2 = jnp.minimum(size2, Wc - 1)
+            newv2 = dict(pend=jj.astype(jnp.int32), t0=finish, rt=True,
+                         accT=accT_ci + T_act, accF=fac_tot,
+                         accW=accW_ci + wait_step, s0=s0_ci, pblock=BIG,
+                         **vals2)
+            slots = {k: v.at[slot2].set(
+                jnp.where(failed_now, newv2[k], v[slot2]))
+                for k, v in slots.items()}
+
+        T_tot = accT_ci + T_act
+        wait_tot = accW_ci + wait_step
+        if totals_only:
+            sums, comps, fin_max, wait_max = acc
+            add = jnp.stack([
+                E_act,
+                jnp.where(final, wait_tot, 0.0),
+                jnp.where(final, (wait_tot + T_tot) / T_tot, 0.0)])
+            y = add - comps
+            t = sums + y
+            acc = (jnp.where(placed, t, sums),
+                   jnp.where(placed, (t - sums) - y, comps),
+                   jnp.maximum(fin_max, jnp.where(placed, finish, 0.0)),
+                   jnp.maximum(wait_max, jnp.where(final, wait_tot, 0.0)))
+            out = None
+        else:
+            out = (jnp.where(placed, jj, J), E_act,
+                   jnp.where(final, jj, J), sel, s0_ci, finish,
+                   wait_tot, T_tot, final & (chosen > 0))
+
+        advance = ~do_push & ~placed & (next_evt < BIG)
+        now = jnp.where(advance, next_evt, now)
+
+        return (node_free, node_pow, C_tab, T_tab, runs, acc,
+                busy, slots, a, now, nbf, peak, cdel), out
+
+    acc0 = ((jnp.zeros(3, jnp.float32), jnp.zeros(3, jnp.float32),
+             jnp.float32(0.0), jnp.float32(0.0))
+            if totals_only else ())
+    slots0 = dict(
+        pend=jnp.full((Wc,), J, jnp.int32), t0=jnp.zeros(Wc, jnp.float32),
+        rt=jnp.zeros(Wc, bool), accT=jnp.zeros(Wc, jnp.float32),
+        accF=jnp.zeros(Wc, jnp.float32), accW=jnp.zeros(Wc, jnp.float32),
+        s0=jnp.zeros(Wc, jnp.float32),
+        pblock=jnp.full((Wc,), BIG, jnp.float32),
+        sel=jnp.zeros(Wc, jnp.int32), start=jnp.zeros(Wc, jnp.float32),
+        fin=jnp.zeros(Wc, jnp.float32),
+        T=jnp.ones(Wc, jnp.float32), E=jnp.zeros(Wc, jnp.float32),
+        need=jnp.zeros(Wc, jnp.int32), wjob=jnp.zeros(Wc, jnp.float32),
+        fac=jnp.zeros(Wc, jnp.float32), fail=jnp.zeros(Wc, bool))
+    carry0 = (arrs["free0"], jnp.zeros_like(arrs["free0"]),
+              *tabs0, acc0, jnp.zeros(S, jnp.float32), slots0,
+              jnp.int32(0), arrival[0], jnp.int32(0), idle_total,
+              jnp.float32(0.0))
+    carry_f, ys = jax.lax.scan(step, carry0, None, length=T_steps)
+    (node_free, node_pow, C_tab, T_tab, runs, acc, busy,
+     slots, a, now, nbf, peak, cdel) = carry_f
+    return _event_results(arrs, totals_only, ys, acc, busy,
+                          (C_tab, T_tab, runs), nbf, peak, cdel)
+
+
 @partial(jax.jit, static_argnames=("warm_start", "placer", "totals_only",
-                                   "easy_eval"))
+                                   "easy_eval", "core", "retries"))
 def _batched_run(arrs, policy, seeds, faults, *, warm_start, placer,
-                 totals_only, easy_eval="batched"):
+                 totals_only, easy_eval="batched", core="arrival",
+                 retries=False):
     """vmap the scan core over a flat batch axis: policy leaves [B], seeds
     [B], faults [B, 4].  One compile per (shapes, policy metadata,
-    warm_start, placer, totals_only, easy_eval)."""
+    warm_start, placer, totals_only, easy_eval, core, retries)."""
     return jax.vmap(
         lambda pol, sd, fv: _scan_sim(arrs, pol, warm_start, placer,
-                                      totals_only, sd, fv, easy_eval))(
+                                      totals_only, sd, fv, easy_eval,
+                                      core, retries))(
         policy, seeds, faults)
 
 
@@ -647,12 +1426,23 @@ class Scheduler:
     seeds:      one int (no axis) or an iterable (adds a ``seed`` axis)
     warm_start: profile tables pre-filled with ground truth
     queue:      queue-discipline spec overriding the policy's metadata:
-                "fcfs" | "easy_backfill" | "easy_backfill:window=W"
-                (None = keep the policy's own discipline)
+                "fcfs" | "easy_backfill[:window=W]" |
+                "conservative[:window=W]" (None = keep the policy's own)
     easy_eval:  EASY candidate-evaluation strategy (static): "batched"
                 (default — one [W, S] kth-free call per step) or
                 "unrolled" (the historical per-slot loop, kept as the
                 bit-identity reference; ~W x slower at large windows)
+    power_cap:  SCC power cap in Watts — a scalar, or a 1-D grid that
+                leaf-batches with k/ucb_scale (cap sweeps share one jit).
+                Overrides the policy's ``power_cap`` leaf; any finite cap
+                routes onto the event-granular core.  None = keep the
+                policy's leaf (default: uncapped).
+    core:       scan granularity: None (auto — "events" for conservative
+                queues or finite power caps, "arrival" otherwise),
+                "arrival" (the historical arrival-indexed scans), or
+                "events" (force the event-granular core; FCFS placements
+                are bit-identical to "arrival", asserted per registered
+                policy in tests/test_event_core.py)
 
     ``run(w)`` returns a ``SimResult`` when no axis is present, else a
     ``CampaignResult`` with ``axes`` ordered (fault, policy, seed) — the
@@ -664,13 +1454,28 @@ class Scheduler:
     def __init__(self, policy: str | Policy = "paper", *,
                  placer: str | None = None, faults=None, seeds=0,
                  warm_start: bool = False, queue: str | None = None,
-                 easy_eval: str = "batched"):
+                 easy_eval: str = "batched", power_cap=None,
+                 core: str | None = None):
         self.policy = make_policy(policy) if isinstance(policy, str) else policy
         if queue is not None:
             self.policy = apply_queue_spec(self.policy, queue)
+        if power_cap is not None:
+            self.policy = replace(self.policy,
+                                  power_cap=np.asarray(power_cap, np.float32))
         if easy_eval not in ("batched", "unrolled"):
             raise ValueError(f"easy_eval {easy_eval!r} not in "
                              "('batched', 'unrolled')")
+        if core not in (None, "arrival", "events"):
+            raise ValueError(f"core {core!r} not in (None, 'arrival', "
+                             "'events')")
+        if core == "arrival" and self.policy.queue == "conservative":
+            raise ValueError("queue='conservative' requires the event-"
+                             "granular core (core='events' or None)")
+        if core == "arrival" and self.policy.capped:
+            raise ValueError("a finite power_cap requires the event-"
+                             "granular core (core='events' or None): the "
+                             "arrival-indexed scan cannot defer placements")
+        self.core = core
         self.easy_eval = easy_eval
         self.placer = placer
         self.warm_start = bool(warm_start)
@@ -685,11 +1490,13 @@ class Scheduler:
         pol = self.policy
         k = jnp.asarray(pol.k, jnp.float32)
         u = jnp.asarray(pol.ucb_scale, jnp.float32)
-        if k.ndim > 1 or u.ndim > 1:
+        pc = jnp.asarray(pol.power_cap, jnp.float32)
+        if k.ndim > 1 or u.ndim > 1 or pc.ndim > 1:
             raise ValueError("policy leaves must be scalars or 1-D grids; "
                              "flatten K x ucb meshes with .ravel()")
-        has_policy_axis = k.ndim == 1 or u.ndim == 1
-        k, u = jnp.broadcast_arrays(jnp.atleast_1d(k), jnp.atleast_1d(u))
+        has_policy_axis = k.ndim == 1 or u.ndim == 1 or pc.ndim == 1
+        k, u, pc = jnp.broadcast_arrays(jnp.atleast_1d(k), jnp.atleast_1d(u),
+                                        jnp.atleast_1d(pc))
         G = k.shape[0]
 
         has_seed_axis = not isinstance(self.seeds, (int, np.integer))
@@ -705,17 +1512,30 @@ class Scheduler:
             fmat = _fault_vec(self.faults)[None]
         F = fmat.shape[0]
 
+        # core routing (static): conservative queues and finite caps need
+        # completion-event granularity; mid-job failure re-queue rides the
+        # event stream whenever the fault grid can fail jobs
+        core = self.core or ("events" if (pol.queue == "conservative"
+                                          or pol.capped) else "arrival")
+        fault_list = (() if self.faults is None else
+                      (self.faults,) if isinstance(self.faults, FaultConfig)
+                      else self.faults)
+        retries = core == "events" and any(
+            f.failure_prob > 0 for f in fault_list)
+
         B = F * G * R
         kb = jnp.broadcast_to(k[None, :, None], (F, G, R)).reshape(B)
         ub = jnp.broadcast_to(u[None, :, None], (F, G, R)).reshape(B)
+        pb = jnp.broadcast_to(pc[None, :, None], (F, G, R)).reshape(B)
         sb = jnp.broadcast_to(seeds[None, None, :], (F, G, R)).reshape(B)
         fb = jnp.broadcast_to(fmat[:, None, None, :], (F, G, R, 4))
 
         out = _batched_run(
-            _workload_arrays(w), replace(pol, k=kb, ucb_scale=ub),
+            _workload_arrays(w),
+            replace(pol, k=kb, ucb_scale=ub, power_cap=pb),
             sb, fb.reshape(B, 4), warm_start=self.warm_start,
             placer=self.placer, totals_only=totals_only,
-            easy_eval=self.easy_eval)
+            easy_eval=self.easy_eval, core=core, retries=retries)
 
         axes, lead = [], []
         for name, present, size in (("fault", has_fault_axis, F),
@@ -736,7 +1556,7 @@ class Scheduler:
         if has_fault_axis:
             coords["fault"] = self.faults
         if has_policy_axis:
-            coords["policy"] = replace(pol, k=k, ucb_scale=u)
+            coords["policy"] = replace(pol, k=k, ucb_scale=u, power_cap=pc)
         if has_seed_axis:
             coords["seed"] = self.seeds
         return CampaignResult(**out, **meta, coords=coords)

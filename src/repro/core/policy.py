@@ -83,7 +83,10 @@ BIG = 1e30
 EXPLORATIONS = ("first_released", "predictive_fill", "optimistic_bound")
 FEASIBILITIES = ("bare", "queue_aware", "none")
 OBJECTIVES = ("min_c", "min_t", "min_avail", "random", "oracle")
-QUEUES = ("fcfs", "easy_backfill")
+QUEUES = ("fcfs", "easy_backfill", "conservative")
+
+#: power_cap values at or above this are "uncapped" (routing + start rule).
+UNCAPPED = 1e29
 
 
 @dataclass(frozen=True)
@@ -102,7 +105,12 @@ class Policy:
     k: float | jax.Array = 0.0           # allowed runtime-increase fraction
     ucb_scale: float | jax.Array = 0.5   # optimism scale for unexplored C
     queue: str = "fcfs"                  # queue discipline (engine axis)
-    window: int = 8                      # EASY pending-window bound (static)
+    window: int = 8                      # pending-window bound (static)
+    # SCC power cap in Watts (a PyTree LEAF like k/ucb_scale, so cap grids
+    # batch in one jit); >= UNCAPPED (the default) disables enforcement.
+    # A finite cap routes the run onto the event-granular core, where a
+    # placement can actually be deferred until cluster power drops.
+    power_cap: float | jax.Array = float("inf")
 
     def __post_init__(self):
         if self.exploration not in EXPLORATIONS:
@@ -123,7 +131,8 @@ class Policy:
             raise ValueError(f"window must be >= 1, got {self.window}")
 
     def with_params(self, **params) -> "Policy":
-        """New Policy with replaced hyperparameter leaves (k, ucb_scale)."""
+        """New Policy with replaced hyperparameter leaves (k, ucb_scale,
+        power_cap)."""
         return dataclasses.replace(self, **params)
 
     @property
@@ -131,13 +140,20 @@ class Policy:
         """Number of grid points when leaf-batched, else None."""
         k = np.asarray(self.k)
         u = np.asarray(self.ucb_scale)
-        if k.ndim == 0 and u.ndim == 0:
+        p = np.asarray(self.power_cap)
+        if k.ndim == 0 and u.ndim == 0 and p.ndim == 0:
             return None
-        return int(np.broadcast_shapes(k.shape, u.shape)[0])
+        return int(np.broadcast_shapes(k.shape, u.shape, p.shape)[0])
+
+    @property
+    def capped(self) -> bool:
+        """True when any grid point carries a finite power cap (facade-time
+        python check on the concrete leaf — decides the core routing)."""
+        return bool((np.asarray(self.power_cap) < UNCAPPED).any())
 
 
 jax.tree_util.register_dataclass(
-    Policy, data_fields=("k", "ucb_scale"),
+    Policy, data_fields=("k", "ucb_scale", "power_cap"),
     meta_fields=("exploration", "feasibility", "objective", "name",
                  "queue", "window"))
 
@@ -271,6 +287,10 @@ _entry("predictive_queue_aware", exploration="predictive_fill",
 # composes naturally with reservation-based backfill).
 _entry("easy_backfill", queue="easy_backfill")
 _entry("easy_queue_aware", feasibility="queue_aware", queue="easy_backfill")
+# Conservative backfilling (ISSUE 5): every pending job holds a
+# reservation; a backfill may not delay ANY of them.  Always runs on the
+# event-granular core (reservations are rechecked whenever nodes free up).
+_entry("conservative", queue="conservative")
 
 
 # ------------------------------------------------------------ jnp selector

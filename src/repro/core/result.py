@@ -31,7 +31,8 @@ import jax.numpy as jnp
 
 #: Array fields carrying only the leading (grid) axes.
 _TOTAL_FIELDS = ("total_energy", "makespan", "total_wait", "slowdown_sum",
-                 "max_wait", "n_backfilled")
+                 "max_wait", "n_backfilled",
+                 "peak_power", "idle_energy", "capped_delay")
 #: Array fields with a trailing per-job axis [..., J]; None if totals_only.
 _PERJOB_FIELDS = ("system", "start", "finish", "wait", "energy", "runtime",
                   "nodes", "backfilled")
@@ -56,6 +57,13 @@ class SimResult:
     # queue-discipline totals [*axes]
     max_wait: jnp.ndarray | None = None
     n_backfilled: jnp.ndarray | None = None
+    # SCC power totals [*axes] (ISSUE 5): peak cluster draw (NaN on the
+    # arrival-indexed core, which tracks no power trace), idle energy of
+    # unallocated nodes over the makespan, and the total placement delay
+    # attributable to a binding power cap
+    peak_power: jnp.ndarray | None = None
+    idle_energy: jnp.ndarray | None = None
+    capped_delay: jnp.ndarray | None = None
     # per-job [*axes, J]; None when produced with totals_only=True
     system: jnp.ndarray | None = None
     start: jnp.ndarray | None = None

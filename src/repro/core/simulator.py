@@ -29,7 +29,7 @@ from repro.core.engine import (                     # noqa: F401 (re-exports)
     BIG, FaultConfig, Scheduler, SimConfig, Workload, make_npb_workload,
 )
 from repro.core.policy import (                     # noqa: F401 (re-exports)
-    make_policy, select_py, _paper_rule_py,
+    UNCAPPED, make_policy, select_py, _paper_rule_py,
 )
 
 
@@ -75,10 +75,14 @@ def run_campaign(w: Workload, scfg: SimConfig, ks=None, seeds=None,
 
 
 def _scheduler_for(scfg: SimConfig, policy=None, seeds=None, faults=None):
-    """SimConfig -> Scheduler, preserving the legacy axis conventions."""
+    """SimConfig -> Scheduler, preserving the legacy axis conventions.
+    The built policy carries scfg's queue/window/power_cap overrides (the
+    shims must not drop them — ISSUE 3 + ISSUE 5 regressions), and the
+    core override rides separately."""
     return Scheduler(
         scfg.policy() if policy is None else policy,
         placer=scfg.placer, warm_start=scfg.warm_start,
+        core=scfg.core or None,
         seeds=scfg.seed if seeds is None else seeds,
         faults=FaultConfig(
             straggler_prob=scfg.straggler_prob,
@@ -126,15 +130,19 @@ class _PySim:
                         avail[s] = o1
         return avail
 
-    def choose(self, j: int):
+    def choose(self, j: int, node_free=None, arr=None, avail=None):
         """Policy selection for job j under current state: returns
-        (p, arr, avail, sel)."""
+        (p, arr, avail, sel).  ``node_free`` selects an alternate table,
+        ``avail`` overrides the availability row entirely (the
+        conservative mirror's hole-aware earliest fit), ``arr`` overrides
+        the arrival floor."""
         w = self.w
         p = int(w.prog[j])
-        arr = float(w.arrival[j])
+        arr = float(w.arrival[j]) if arr is None else float(arr)
         kj = float(w.k_job[j])
         k = self.scfg.k if np.isnan(kj) else kj
-        avail = self.avail_for(p, arr)
+        if avail is None:
+            avail = self.avail_for(p, arr, node_free)
         rand_sel = None
         if self.pol.objective == "random":
             rand_sel = int(jax.random.randint(
@@ -205,37 +213,368 @@ def _easy_order_py(sim: _PySim, J: int, window: int):
             yield pend.pop(chosen), chosen > 0
 
 
-def simulate_py(w: Workload, scfg: SimConfig):
+def _events_py(sim: _PySim, pol):
+    """Float64 replay of the event-granular core (``_scan_sim_events``,
+    fcfs / easy_backfill): merged arrival/completion event clock, bounded
+    pending buffer with stalled admission, per-discipline eligibility,
+    and power-cap deferral with the same start rule (capped runs start at
+    the current event).  Returns the per-job records plus the power
+    accumulators."""
+    w, S = sim.w, sim.S
+    J = len(w.prog)
+    Wc = int(pol.window) + 1
+    queue = pol.queue
+    cap = float(np.asarray(pol.power_cap).reshape(-1)[0])
+    capped = cap < UNCAPPED
+    idle_w = (np.zeros(S) if w.idle_w is None
+              else np.asarray(w.idle_w, np.float64))
+    w_pow = np.asarray(w.E_true, np.float64) / np.maximum(
+        np.asarray(w.T_true, np.float64), 1e-30)
+    node_pow = [list(np.zeros(int(n))) for n in w.n_nodes]
+    out = [None] * J
+    backfilled = np.zeros(J, bool)
+    pend: list[int] = []
+    a, now = 0, float(w.arrival[0])
+    nbf = 0
+    peak = float(sum(idle_w[s] * int(w.n_nodes[s]) for s in range(S)))
+    cdel = 0.0
+    pblock: dict[int, float] = {}
+    placed_n = 0
+    max_iters = 16 * J + 64           # far above the engine's step bound
+
+    def p_at(t):
+        return sum(
+            node_pow[s][i] if sim.node_free[s][i] > t else idle_w[s]
+            for s in range(S) for i in range(len(sim.node_free[s])))
+
+    for _ in range(max_iters):
+        if placed_n == J:
+            break
+        pushed = False
+        if a < J and float(w.arrival[a]) <= now and len(pend) < Wc:
+            pend.append(a)
+            a += 1
+            pushed = True
+
+        chosen = None
+        evals = [sim.choose(j) for j in pend]       # (p, arr, avail, sel)
+        starts_res = [float(ev[2][ev[3]]) for ev in evals]
+        p_now = p_at(now)
+
+        def trial_of(ci):
+            p_b, _, avail_b, sel_b = evals[ci]
+            s_b = max(starts_res[ci], now) if capped else starts_res[ci]
+            trial = [list(fl) for fl in sim.node_free]
+            sim.alloc(trial, sel_b, int(w.n_req[p_b, sel_b]),
+                      s_b + float(w.T_true[p_b, sel_b]))
+            return trial
+
+        def guard_ok(ci):
+            if ci == 0:
+                return True
+            if queue == "fcfs":
+                return False
+            trial = trial_of(ci)        # EASY: only the head is guarded
+            p_h, arr_h, _, sel_h = evals[0]
+            return sim.avail_for(p_h, arr_h, trial)[sel_h] <= starts_res[0]
+
+        def outage_gated(sel_b, start_q):
+            """Capped starts quantize to ``now``: the start gate must
+            hold there (mirrors the engine's res_ok outage clause)."""
+            return capped and w.outage is not None and any(
+                o0 <= start_q < o1 for o0, o1 in w.outage[sel_b])
+
+        blocked_recorded = False
+        for ci in range(len(pend)):
+            if starts_res[ci] > now or not guard_ok(ci):
+                continue
+            p_b, _, _, sel_b = evals[ci]
+            if outage_gated(sel_b, max(starts_res[ci], now)):
+                continue
+            new_P = (p_now
+                     - int(w.n_req[p_b, sel_b]) * idle_w[sel_b]
+                     + w_pow[p_b, sel_b])
+            if capped and new_P > cap:
+                if not blocked_recorded:
+                    # the next would-be placement is power-blocked
+                    jb = pend[ci]
+                    pblock[jb] = min(pblock.get(jb, np.inf), now)
+                    blocked_recorded = True
+                continue
+            chosen = ci
+            break
+
+        if chosen is None and not pushed:
+            nxt = [t for fl in sim.node_free for t in fl if t > now]
+            if a < J and float(w.arrival[a]) > now:
+                nxt.append(float(w.arrival[a]))
+            if w.outage is not None:
+                nxt.extend(float(t1) for _, t1 in w.outage.reshape(-1, 2)
+                           if t1 > now)
+            if nxt:
+                now = min(nxt)
+                continue
+            if not pend:
+                break
+            chosen = 0                  # cap below the idle floor
+
+        if chosen is None:
+            continue
+
+        # ---- place pend[chosen] (float64 twin of the engine's step)
+        j = pend.pop(chosen)
+        p, arr, avail, sel = evals[chosen]
+        start = (max(starts_res[chosen], now) if capped
+                 else starts_res[chosen])
+        T_act = float(w.T_true[p, sel])
+        E_act = float(w.E_true[p, sel])
+        C_act = float(w.C_true[p, sel])
+        finish = start + T_act
+        need = int(w.n_req[p, sel])
+        idx = np.argsort(sim.node_free[sel])[:need]
+        for i in idx:
+            sim.node_free[sel][int(i)] = finish
+            node_pow[sel][int(i)] = w_pow[p, sel] / max(need, 1)
+        n = sim.runs[p, sel]
+        sim.C_tab[p, sel] = (sim.C_tab[p, sel] * n + C_act) / (n + 1)
+        sim.T_tab[p, sel] = (sim.T_tab[p, sel] * n + T_act) / (n + 1)
+        sim.runs[p, sel] += 1
+        new_P = p_now - need * idle_w[sel] + w_pow[p, sel]
+        peak = max(peak, new_P)
+        if j in pblock:
+            cdel += now - pblock.pop(j)
+        if chosen > 0:
+            backfilled[j] = True
+            nbf += 1
+        out[j] = (sel, start, finish, start - arr, E_act, T_act)
+        placed_n += 1
+    assert placed_n == J, f"event mirror stalled: {placed_n}/{J} placed"
+    return out, backfilled, nbf, peak, cdel, idle_w
+
+
+def _cons_py(sim: _PySim, pol, check_reservations: bool = False):
+    """Float64 replay of the conservative core (``_scan_sim_cons``):
+    hole-aware reservations assigned at admission (earliest capacity fit
+    around every pending reservation interval), placements realizing
+    reservations as their starts arrive, power-cap deferral in
+    reservation order.
+
+    ``check_reservations=True`` additionally asserts the conservative
+    invariant at every placement: the real table can honor the
+    reservation (earliest realizable start <= reserved start) — i.e. no
+    backfill ever delayed a pending reservation (uncapped runs only;
+    a binding cap legitimately breaks promises downstream)."""
+    w, S = sim.w, sim.S
+    J = len(w.prog)
+    Wc = int(pol.window) + 1
+    cap = float(np.asarray(pol.power_cap).reshape(-1)[0])
+    capped = cap < UNCAPPED
+    idle_w = (np.zeros(S) if w.idle_w is None
+              else np.asarray(w.idle_w, np.float64))
+    w_pow = np.asarray(w.E_true, np.float64) / np.maximum(
+        np.asarray(w.T_true, np.float64), 1e-30)
+    node_pow = [list(np.zeros(int(n))) for n in w.n_nodes]
+    out = [None] * J
+    backfilled = np.zeros(J, bool)
+    pend: list[dict] = []
+    a, now = 0, float(w.arrival[0])
+    nbf = 0
+    peak = float(sum(idle_w[s] * int(w.n_nodes[s]) for s in range(S)))
+    cdel = 0.0
+    pblock: dict[int, float] = {}
+    placed_n = 0
+    max_iters = 16 * J + 64
+
+    def p_at(t):
+        return sum(
+            node_pow[s][i] if sim.node_free[s][i] > t else idle_w[s]
+            for s in range(S) for i in range(len(sim.node_free[s])))
+
+    def earliest_fit(p, t0):
+        """Float64 twin of the engine's hole-aware earliest fit: per
+        system, the first candidate start whose capacity (free nodes
+        minus reservation occupancy) covers the job's whole window."""
+        out = np.full(S, BIG)
+        for s in range(S):
+            n = int(w.n_req[p, s])
+            Td = float(w.T_true[p, s])
+            res = [r for r in pend if r["sel"] == s]
+
+            def availn(t):
+                cnt = sum(1 for f in sim.node_free[s] if f <= t)
+                occ = sum(r["need"] for r in res
+                          if r["start"] <= t < r["fin"])
+                return cnt - occ
+
+            cands = ([t0] + [max(f, t0) for f in sim.node_free[s]]
+                     + [max(r["fin"], t0) for r in pend])
+            if w.outage is not None:
+                for wi in range(w.outage.shape[1]):
+                    o0, o1 = w.outage[s, wi]
+                    cands = [float(o1) if o0 <= c < o1 else c
+                             for c in cands]
+            for t in sorted(set(cands)):
+                if availn(t) < n:
+                    continue
+                if any(t < r["start"] < t + Td
+                       and availn(r["start"]) < n for r in res):
+                    continue
+                out[s] = t
+                break
+        return out
+
+    def reserve(j, t0):
+        """Admission: hole-aware earliest fit + selection — the new
+        reservation row (reservations are NOT committed to node_free)."""
+        avail = earliest_fit(int(w.prog[j]), t0)
+        p, _, _, sel = sim.choose(j, arr=t0, avail=avail)
+        start = float(avail[sel])
+        T_act = float(w.T_true[p, sel])
+        return dict(j=j, p=p, t0=t0, sel=sel, start=start, T=T_act,
+                    fin=start + T_act, E=float(w.E_true[p, sel]),
+                    need=int(w.n_req[p, sel]),
+                    wjob=float(w_pow[p, sel]))
+
+    for _ in range(max_iters):
+        if placed_n == J:
+            break
+        pushed = False
+        if a < J and float(w.arrival[a]) <= now and len(pend) < Wc:
+            pend.append(reserve(a, float(w.arrival[a])))
+            a += 1
+            pushed = True
+
+        # realizability + power, in slot (admission) order
+        p_now = p_at(now)
+        chosen = None
+        blocked_recorded = False
+        elig_res = []
+        for ci, rec in enumerate(pend):
+            avail_real = sim.avail_for(rec["p"], rec["t0"])[rec["sel"]]
+            ok = rec["start"] <= now and avail_real <= now
+            if ok and capped and w.outage is not None:
+                # the engine's cap-deferred start gate: now must not sit
+                # inside the reserved system's maintenance window
+                q = max(rec["start"], now)
+                ok = not any(o0 <= q < o1
+                             for o0, o1 in w.outage[rec["sel"]])
+            elig_res.append(ok)
+            if not ok:
+                continue
+            new_P = (p_now - rec["need"] * idle_w[rec["sel"]]
+                     + rec["wjob"])
+            if capped and new_P > cap:
+                if not blocked_recorded:
+                    pblock[rec["j"]] = min(
+                        pblock.get(rec["j"], np.inf), now)
+                    blocked_recorded = True
+                continue
+            chosen = ci
+            break
+
+        if chosen is None and not pushed:
+            nxt = [t for fl in sim.node_free for t in fl if t > now]
+            if a < J and float(w.arrival[a]) > now:
+                nxt.append(float(w.arrival[a]))
+            nxt.extend(r["start"] for r in pend if r["start"] > now)
+            if w.outage is not None:
+                nxt.extend(float(t1) for _, t1 in w.outage.reshape(-1, 2)
+                           if t1 > now)
+            if nxt:
+                now = min(nxt)
+                continue
+            if not any(elig_res):
+                break                      # drained
+            chosen = elig_res.index(True)   # cap below the idle floor
+
+        if chosen is None:
+            continue
+
+        rec = pend.pop(chosen)
+        j, p, sel, need = rec["j"], rec["p"], rec["sel"], rec["need"]
+        start = max(rec["start"], now) if capped else rec["start"]
+        if check_reservations and not capped:
+            avail_real = sim.avail_for(p, rec["t0"])[sel]
+            assert avail_real <= rec["start"] + 1e-6, (
+                f"reservation of job {j} not realizable: {avail_real} > "
+                f"{rec['start']} (a backfill delayed it)")
+        T_act = rec["T"]
+        finish = start + T_act
+        idx = np.argsort(sim.node_free[sel])[:need]
+        for i in idx:
+            sim.node_free[sel][int(i)] = finish
+            node_pow[sel][int(i)] = rec["wjob"] / max(need, 1)
+        n = sim.runs[p, sel]
+        C_act = float(w.C_true[p, sel])
+        sim.C_tab[p, sel] = (sim.C_tab[p, sel] * n + C_act) / (n + 1)
+        sim.T_tab[p, sel] = (sim.T_tab[p, sel] * n + T_act) / (n + 1)
+        sim.runs[p, sel] += 1
+        new_P = p_now - need * idle_w[sel] + rec["wjob"]
+        peak = max(peak, new_P)
+        if j in pblock:
+            cdel += now - pblock.pop(j)
+        if chosen > 0:
+            backfilled[j] = True
+            nbf += 1
+        out[j] = (sel, start, finish, start - float(w.arrival[j]),
+                  rec["E"], T_act)
+        placed_n += 1
+    assert placed_n == J, f"conservative mirror stalled: {placed_n}/{J}"
+    return out, backfilled, nbf, peak, cdel, idle_w
+
+
+def simulate_py(w: Workload, scfg: SimConfig, *,
+                check_reservations: bool = False):
     """Reference implementation for differential tests (no faults path).
 
     Dispatches through the policy registry (``scfg.mode`` may name ANY
-    registered policy) and mirrors both queue disciplines — FCFS arrival
-    order and EASY backfilling (reservation semantics replayed step for
-    step).  All arithmetic runs in float64 numpy — an independent-precision
-    check of the f32 jax engine — except the "random" draw, which replays
-    the jax PRNG stream so the two implementations place identically.
+    registered policy) and mirrors every queue discipline — FCFS arrival
+    order, EASY backfilling (arrival-indexed reservation semantics
+    replayed step for step), and the event-granular core (conservative
+    backfilling, power caps, or an explicit ``core="events"`` override),
+    replayed event for event.  All arithmetic runs in float64 numpy — an
+    independent-precision check of the f32 jax engine — except the
+    "random" draw, which replays the jax PRNG stream so the two
+    implementations place identically.
     """
     assert scfg.straggler_prob == 0 and scfg.failure_prob == 0, \
         "python mirror covers the deterministic path"
     pol = scfg.policy()
     sim = _PySim(w, scfg, pol)
     J = len(w.prog)
-    if pol.queue == "easy_backfill":
-        order = _easy_order_py(sim, J, int(pol.window))
+    use_events = scfg.core == "events" or pol.capped
+    if pol.queue == "conservative":
+        out, backfilled, nbf, peak, cdel, idle_w = _cons_py(
+            sim, pol, check_reservations=check_reservations)
+    elif use_events:
+        out, backfilled, nbf, peak, cdel, idle_w = _events_py(sim, pol)
     else:
-        order = ((j, False) for j in range(J))
-    out = [None] * J
-    backfilled = np.zeros(J, bool)
-    for j, bf in order:
-        out[j] = sim.place(j)
-        backfilled[j] = bf
+        if pol.queue == "easy_backfill":
+            order = _easy_order_py(sim, J, int(pol.window))
+        else:
+            order = ((j, False) for j in range(J))
+        out = [None] * J
+        backfilled = np.zeros(J, bool)
+        for j, bf in order:
+            out[j] = sim.place(j)
+            backfilled[j] = bf
+        nbf, peak, cdel = int(backfilled.sum()), np.nan, 0.0
+        idle_w = (np.zeros(sim.S) if w.idle_w is None
+                  else np.asarray(w.idle_w, np.float64))
     assert all(rec is not None for rec in out), "job left unplaced"
 
     sel, start, finish, wait, E, T_act = map(np.array, zip(*out))
+    makespan = finish.max()
+    busy = np.zeros(sim.S)
+    np.add.at(busy, sel, T_act * np.asarray(w.n_req)[np.asarray(w.prog), sel])
+    idle_energy = (float(np.sum(idle_w * np.asarray(w.n_nodes))) * makespan
+                   - float(np.sum(idle_w * busy)))
     return {
         "system": sel, "start": start, "finish": finish, "wait": wait,
         "energy": E, "runtime": T_act, "backfilled": backfilled,
-        "n_backfilled": int(backfilled.sum()),
-        "total_energy": E.sum(), "makespan": finish.max(),
+        "n_backfilled": int(nbf),
+        "total_energy": E.sum(), "makespan": makespan,
         "total_wait": wait.sum(), "max_wait": wait.max(),
+        "peak_power": peak, "capped_delay": cdel,
+        "idle_energy": idle_energy,
     }

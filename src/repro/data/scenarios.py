@@ -252,4 +252,5 @@ def workload_from_trace(jobs, systems, n_size_bins: int = 4,
         n_nodes=np.asarray([s.n_nodes for s in systems], np.int32),
         programs=tuple(f"class{int(u)}" for u in uniq),
         systems=tuple(s.name for s in systems),
+        idle_w=np.asarray([s.idle_w for s in systems], np.float32),
     )

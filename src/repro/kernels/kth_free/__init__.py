@@ -1,4 +1,5 @@
 from repro.kernels.kth_free.ops import (kth_free_time, kth_free_time_batched,
+                                        kth_free_time_rows,
                                         kth_free_time_shared)
 from repro.kernels.kth_free.kernel import (kth_free_pallas,
                                            kth_free_pallas_batched,

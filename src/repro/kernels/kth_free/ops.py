@@ -62,6 +62,34 @@ def kth_free_time_shared(node_free, n_req, *, force: str | None = None):
 
 
 @partial(jax.jit, static_argnames=("force",))
+def kth_free_time_rows(node_free, sels, n_req, *, force: str | None = None):
+    """Reservation-table recheck for conservative backfilling: every
+    pending reservation against ONE node-free table, in one call.
+
+    node_free: [S, maxN] f32; sels: [W] int — each pending slot's RESERVED
+    system; n_req: [W] int — nodes the slot needs there.  Returns [W] f32
+    where ``out[e]`` is the earliest time reservation e's
+    ``(sels[e], n_req[e])`` is satisfiable under the table — i.e. the
+    n_req[e]-th smallest entry of row ``sels[e]``.
+
+    The event core's conservative step compares ``out[e] <= r_e`` (the
+    start each reservation was promised at admission) to decide which
+    reservations are realizable at the current event.  Reserved systems
+    repeat across the window (W slots draw from S << W systems), so the
+    auto mode sorts the table ONCE and gathers every (slot, kth) pair
+    from it — the PR 4 shared-sort trick; ``force`` routes through the
+    per-row radix/Pallas twins on the gathered [W, maxN] row stack for
+    differential coverage.  Every mode returns input elements, so all
+    stay bit-exact."""
+    if (force or "sort") == "sort":
+        srt = jnp.sort(node_free, axis=-1)                       # [S, maxN]
+        idx = jnp.clip(n_req - 1, 0, node_free.shape[-1] - 1)    # [W]
+        return srt[sels, idx]
+    rows = node_free[sels]                                       # [W, maxN]
+    return kth_free_time(rows, n_req, force=force)
+
+
+@partial(jax.jit, static_argnames=("force",))
 def kth_free_time_batched(node_free, n_req, *, force: str | None = None):
     """Batched twin of ``kth_free_time`` over a leading candidate axis.
     node_free: [W, S, maxN] f32 (one node-free table per candidate —

@@ -11,11 +11,23 @@ as floats), e.g.:
 (the legacy ``--mode NAME --k F`` spelling still works).
 
 Queue discipline (``--queue``): placement order over the pending queue —
-``fcfs`` (strict arrival order, the paper) or EASY backfilling with a
-bounded pending window::
+``fcfs`` (strict arrival order, the paper), EASY backfilling with a
+bounded pending window, or conservative backfilling (every pending job's
+reservation guarded, on the event-granular core)::
 
     PYTHONPATH=src python -m repro.launch.schedule --jobs 200 \
         --scenario diurnal --queue easy_backfill:window=16
+    PYTHONPATH=src python -m repro.launch.schedule --jobs 200 \
+        --scenario diurnal --queue conservative:window=16
+
+SCC power cap (``--power-cap``, Watts): the paper's motivating grid
+limit.  Placements are deferred while the cluster's instantaneous draw
+(busy-job power + idle watts of unallocated nodes) would exceed the cap;
+runs on the event-granular core and reports peak_power / capped_delay /
+idle_energy::
+
+    PYTHONPATH=src python -m repro.launch.schedule --jobs 200 \
+        --scenario bursty --queue conservative --power-cap 60000
 
 Single run / K sweep (the paper's Figs 1-4 regime):
 
@@ -106,6 +118,9 @@ def build_policy(args):
         pol = make_policy(args.mode, k=args.k)
     if args.queue:
         pol = apply_queue_spec(pol, args.queue)
+    if args.power_cap:
+        from dataclasses import replace
+        pol = replace(pol, power_cap=float(args.power_cap))
     return pol
 
 
@@ -121,7 +136,15 @@ def main():
                     help="legacy spelling of --policy NAME:k=F")
     ap.add_argument("--queue", default="", metavar="DISC[:window=W]",
                     help="queue discipline overriding the policy's own: "
-                         f"{' | '.join(QUEUES)}; e.g. easy_backfill:window=16")
+                         f"{' | '.join(QUEUES)}; e.g. easy_backfill:window=16"
+                         " or conservative:window=16")
+    ap.add_argument("--power-cap", type=float, default=0.0, metavar="WATTS",
+                    help="SCC power cap (0 = uncapped): placements are "
+                         "deferred while cluster draw would exceed it "
+                         "(event-granular core)")
+    ap.add_argument("--core", default="", choices=("", "arrival", "events"),
+                    help="scan granularity (default: auto — events for "
+                         "conservative/power-capped runs)")
     ap.add_argument("--easy-eval", default="batched",
                     choices=("batched", "unrolled"),
                     help="EASY candidate evaluation: batched (one [W, S] "
@@ -167,7 +190,7 @@ def main():
                       np.float32)
         seeds = [args.seed + i for i in range(max(args.campaign_seeds, 1))]
         res = Scheduler(pol.with_params(k=ks), faults=faults, seeds=seeds,
-                        warm_start=not args.cold,
+                        warm_start=not args.cold, core=args.core or None,
                         easy_eval=args.easy_eval).run(
             w, totals_only=args.totals_only)
         E = np.asarray(res.total_energy)            # [K, R]
@@ -186,6 +209,7 @@ def main():
         ks = np.array([float(x) for x in args.sweep_k.split(",")], np.float32)
         res = Scheduler(pol.with_params(k=ks), faults=faults,
                         seeds=args.seed, warm_start=not args.cold,
+                        core=args.core or None,
                         easy_eval=args.easy_eval).run(w)
         E = np.asarray(res.total_energy)
         M = np.asarray(res.makespan)
@@ -196,7 +220,8 @@ def main():
         return
 
     r = Scheduler(pol, faults=faults, seeds=args.seed,
-                  warm_start=not args.cold, easy_eval=args.easy_eval).run(w)
+                  warm_start=not args.cold, core=args.core or None,
+                  easy_eval=args.easy_eval).run(w)
     sel = np.asarray(r.system)
     k_str = np.format_float_positional(float(np.asarray(pol.k)), trim="-")
     q_str = pol.queue if pol.queue == "fcfs" else \
@@ -208,6 +233,12 @@ def main():
           f"total_wait={float(r.total_wait):.1f} s  "
           f"mean_slowdown={float(r.mean_slowdown):.2f}  "
           f"backfill_rate={float(r.backfill_rate):.1%}")
+    peak = float(r.peak_power)
+    if not np.isnan(peak):                 # event-granular core: SCC power
+        cap_str = f"{args.power_cap:.0f} W" if args.power_cap else "none"
+        print(f"peak_power={peak/1e3:.1f} kW (cap {cap_str})  "
+              f"capped_delay={float(r.capped_delay):.1f} s  "
+              f"idle_energy={float(r.idle_energy)/1e3:.1f} kJ")
     counts = np.bincount(sel, minlength=len(w.systems))
     print("placements:", {w.systems[i]: int(c) for i, c in enumerate(counts)})
     util = np.asarray(r.utilization)

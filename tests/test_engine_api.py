@@ -204,6 +204,33 @@ def test_legacy_shims_honor_queue_override(stream):
                                       np.asarray(single.system))
 
 
+def test_legacy_shims_honor_power_cap_and_conservative(stream):
+    """sweep_k / run_campaign must pass the new power_cap and
+    queue="conservative" config keys through to the engine (ISSUE 5:
+    same class of bug as the PR 3 queue-override drop — the shims
+    rebuild the policy from scfg and silently dropped new knobs)."""
+    cap = 47_000.0
+    scfg = SimConfig(mode="paper", warm_start=True, queue="conservative",
+                     queue_window=6, power_cap=cap)
+    ks = [0.0, 0.1]
+    swept = sweep_k(stream, scfg, ks)
+    camp = run_campaign(stream, scfg, ks=ks, seeds=[0])
+    assert float(np.asarray(swept["peak_power"]).max()) <= cap * (1 + 1e-6)
+    for i, k in enumerate(ks):
+        single = Scheduler(make_policy("conservative", k=k, window=6),
+                           power_cap=cap, warm_start=True).run(stream)
+        np.testing.assert_array_equal(np.asarray(swept["system"])[i],
+                                      np.asarray(single.system))
+        np.testing.assert_array_equal(np.asarray(camp["system"])[i, 0],
+                                      np.asarray(single.system))
+        np.testing.assert_array_equal(
+            np.asarray(swept["peak_power"])[i],
+            np.asarray(single.peak_power))
+        np.testing.assert_array_equal(
+            np.asarray(swept["capped_delay"])[i],
+            np.asarray(single.capped_delay))
+
+
 def test_scheduler_queue_kwarg_overrides_policy():
     s = Scheduler("paper", queue="easy_backfill:window=4")
     assert s.policy.queue == "easy_backfill" and s.policy.window == 4

@@ -1,0 +1,372 @@
+"""Event-granular core (ISSUE 5): completion-event granularity,
+conservative backfilling, SCC power-cap enforcement, mid-job failure
+re-queue.
+
+Acceptance pins:
+- event-granular FCFS is BIT-IDENTICAL to the arrival-indexed scan for
+  every registered fcfs-queue policy (the event clock only changes WHEN
+  decisions are evaluated, never what they see);
+- conservative reservations are never delayed by a backfill (the float64
+  mirror asserts the invariant at every placement while the differential
+  suite pins jax == mirror);
+- cluster power never exceeds a binding cap — engine-reported
+  ``peak_power`` and an independent numpy reconstruction of the power
+  trace both stay under it, and cap grids leaf-batch in one compilation.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (JSCC_SYSTEMS, FaultConfig, Scheduler, SimConfig,
+                        make_npb_workload, make_policy, policy_names,
+                        simulate_jax, simulate_py)
+from repro.core.engine import _batched_run
+from repro.data.scenarios import make_stream_workload, maintenance_windows
+
+#: fields that must agree bit-exactly between the two FCFS cores
+#: (power fields excluded: the arrival core reports peak_power = NaN)
+FCFS_FIELDS = ("system", "start", "finish", "wait", "energy", "runtime",
+               "nodes", "total_energy", "makespan", "total_wait",
+               "max_wait", "slowdown_sum", "busy", "C_tab", "T_tab",
+               "runs", "idle_energy")
+
+FCFS_POLICIES = [n for n in policy_names() if make_policy(n).queue == "fcfs"]
+
+
+def _stream(n=30, rate=0.8, kind="poisson", seed=3, **kw):
+    return make_stream_workload(JSCC_SYSTEMS, n, arrival=kind, rate=rate,
+                                seed=seed, pred_noise=0.05, **kw)
+
+
+def assert_event_fcfs_bit_identical(w, name, *, warm=True, seeds=7,
+                                    faults=None):
+    kw = dict(warm_start=warm, seeds=seeds, faults=faults)
+    ra = Scheduler(make_policy(name, k=0.1), **kw).run(w)
+    re = Scheduler(make_policy(name, k=0.1), core="events", **kw).run(w)
+    for field in FCFS_FIELDS:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(ra, field)), np.asarray(getattr(re, field)),
+            err_msg=f"event-FCFS != arrival-FCFS on {field!r} ({name})")
+    assert int(re.n_backfilled) == 0
+
+
+# ----------------------------------------- event-FCFS bit-identity sweep
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", FCFS_POLICIES)
+@pytest.mark.parametrize("warm", [True, False], ids=["warm", "cold"])
+def test_event_fcfs_bit_identity_registry(name, warm):
+    """Acceptance: the event core under fcfs reproduces the historical
+    arrival-indexed scan bit for bit, for every registered policy."""
+    assert_event_fcfs_bit_identical(_stream(), name, warm=warm)
+
+
+@pytest.mark.parametrize("name", ["paper", "random", "queue_aware", "ucb"])
+def test_event_fcfs_bit_identity_quick(name):
+    assert_event_fcfs_bit_identical(_stream(), name)
+
+
+def test_event_fcfs_bit_identity_stragglers_and_outages():
+    """Straggler draws (keyed by job id) and outage pushes replay
+    identically on the event clock; totals_only aggregates too (the
+    event core applies the Kahan update only on placement steps, so the
+    op sequence matches)."""
+    outage = maintenance_windows(4, {1: [(0.0, 300.0)], 2: [(50.0, 200.0)]})
+    w = _stream(n=25, outage=outage)
+    faults = FaultConfig(straggler_prob=0.4, straggler_factor=2.5)
+    assert_event_fcfs_bit_identical(w, "paper", faults=faults)
+    kw = dict(warm_start=True, faults=faults)
+    ta = Scheduler("paper", **kw).run(w, totals_only=True)
+    te = Scheduler("paper", core="events", **kw).run(w, totals_only=True)
+    for field in ("total_energy", "total_wait", "slowdown_sum", "makespan",
+                  "max_wait", "busy"):
+        np.testing.assert_array_equal(np.asarray(getattr(ta, field)),
+                                      np.asarray(getattr(te, field)),
+                                      err_msg=field)
+
+
+# ----------------------------------------------- differential (jax == py)
+
+def assert_differential(w, cfg, check_reservations=False):
+    rj = simulate_jax(w, cfg)
+    rp = simulate_py(w, cfg, check_reservations=check_reservations)
+    np.testing.assert_array_equal(np.asarray(rj["system"]), rp["system"])
+    np.testing.assert_allclose(np.asarray(rj["start"]), rp["start"],
+                               rtol=1e-5, atol=1e-3)
+    np.testing.assert_array_equal(np.asarray(rj["backfilled"]),
+                                  rp["backfilled"])
+    np.testing.assert_allclose(float(rj["total_energy"]),
+                               rp["total_energy"], rtol=1e-5)
+    if not np.isnan(rp["peak_power"]):
+        np.testing.assert_allclose(float(rj["peak_power"]),
+                                   rp["peak_power"], rtol=1e-5)
+        np.testing.assert_allclose(float(rj["capped_delay"]),
+                                   rp["capped_delay"], rtol=1e-4, atol=1e-2)
+    np.testing.assert_allclose(float(rj["idle_energy"]), rp["idle_energy"],
+                               rtol=1e-4)
+    return rj, rp
+
+
+@pytest.mark.parametrize("warm", [True, False], ids=["warm", "cold"])
+@pytest.mark.parametrize("window", [2, 8])
+def test_differential_conservative(warm, window):
+    w = _stream(n=40, rate=1.0)
+    assert_differential(
+        w, SimConfig(mode="conservative", k=0.1, warm_start=warm,
+                     queue_window=window), check_reservations=True)
+
+
+@pytest.mark.parametrize("mode", ["queue_aware", "fastest", "predictive"])
+def test_differential_conservative_composes_with_selectors(mode):
+    w = _stream(n=30, kind="bursty", seed=5)
+    assert_differential(
+        w, SimConfig(mode=mode, k=0.1, warm_start=True,
+                     queue="conservative", queue_window=6),
+        check_reservations=True)
+
+
+def test_differential_conservative_with_outages():
+    outage = maintenance_windows(4, {1: [(0.0, 400.0)], 3: [(50.0, 250.0)]})
+    w = make_stream_workload(JSCC_SYSTEMS, 35, arrival="poisson", rate=0.8,
+                             seed=8, outage=outage)
+    assert_differential(w, SimConfig(mode="conservative", k=0.1,
+                                     warm_start=True),
+                        check_reservations=True)
+
+
+@pytest.mark.parametrize("queue", ["", "easy_backfill", "conservative"])
+def test_differential_power_capped(queue):
+    w = _stream(n=35, rate=1.0)
+    cfg = SimConfig(mode="paper", k=0.1, warm_start=True, queue=queue,
+                    power_cap=45_000.0)
+    rj, _ = assert_differential(w, cfg)
+    assert float(rj["peak_power"]) <= 45_000.0 * (1 + 1e-6)
+    assert float(rj["capped_delay"]) > 0.0          # the cap really bound
+
+
+def test_differential_event_easy_and_fcfs():
+    """core="events" differentials for the re-used disciplines: the
+    mirror replays the merged event stream step for step."""
+    w = _stream(n=35, rate=1.0)
+    assert_differential(w, SimConfig(mode="paper", k=0.1, warm_start=True,
+                                     core="events"))
+    assert_differential(w, SimConfig(mode="easy_backfill", k=0.1,
+                                     warm_start=True, core="events"))
+
+
+# -------------------------------------------------- conservative behavior
+
+def _blocking_workload(n_ep=4):
+    """Ten LUs saturate min-C KNL (9 run, the 10th reserves); EPs need
+    the 2 idle nodes for ~8s — the hole under the reservation."""
+    from dataclasses import replace
+    order = ("LU",) * 10 + ("EP",) * n_ep
+    w = make_npb_workload(JSCC_SYSTEMS, order=order,
+                          arrivals=np.zeros(len(order), np.float32))
+    return replace(w, k_job=np.full(len(order), 5.0, np.float32))
+
+
+def test_conservative_fills_holes_without_delaying_reservations():
+    w = _blocking_workload()
+    cfg = SimConfig(mode="paper", warm_start=True, queue="conservative",
+                    queue_window=16)
+    assert_differential(w, cfg, check_reservations=True)
+    fcfs = simulate_jax(w, SimConfig(mode="paper", warm_start=True))
+    cons = simulate_jax(w, cfg)
+    f_start = np.asarray(fcfs["start"])
+    c_start = np.asarray(cons["start"])
+    # the held 10th LU keeps exactly its FCFS start (reservation honored)
+    np.testing.assert_allclose(c_start[9], f_start[9], rtol=1e-6)
+    # nobody starts later than under FCFS; the EPs jumped into the hole
+    assert (c_start <= f_start * (1 + 1e-6) + 1e-3).all()
+    assert np.asarray(cons["backfilled"])[10:].all()
+    assert float(cons["total_wait"]) < float(fcfs["total_wait"])
+
+
+def test_conservative_beats_easy_on_contended_stream():
+    """The interval reservation table exposes holes under EVERY pending
+    job (EASY only sees the head's): on a contended stream conservative
+    strictly improves mean wait over both FCFS and EASY."""
+    w = _stream(n=60, rate=1.5, seed=11)
+    waits = {}
+    for queue in ("fcfs", "easy_backfill:window=16",
+                  "conservative:window=16"):
+        r = Scheduler("paper", warm_start=True, queue=queue).run(w)
+        waits[queue.split(":")[0]] = float(r.total_wait)
+    assert waits["conservative"] < waits["easy_backfill"]
+    assert waits["conservative"] < waits["fcfs"]
+
+
+def test_conservative_grid_single_compile():
+    """power_cap and k are leaves: a (K x cap) grid under conservative is
+    still ONE compilation."""
+    w = _stream(n=20)
+    kk = np.linspace(0.0, 0.3, 4).astype(np.float32)
+    caps = np.asarray([40_000.0, 50_000.0, 60_000.0, 1e30], np.float32)
+    pol = make_policy("conservative", k=kk, power_cap=caps)
+    cache0 = _batched_run._cache_size()
+    res = Scheduler(pol).run(w, totals_only=True)
+    assert _batched_run._cache_size() - cache0 <= 1
+    assert np.asarray(res.total_energy).shape == (4,)
+    assert np.asarray(res.peak_power).shape == (4,)
+
+
+# ------------------------------------------------------- power-cap rules
+
+def reconstruct_peak_power(w, res):
+    """Independent numpy reconstruction of the cluster power trace from
+    per-job arrays: P sampled at every job start (the only instants power
+    can rise)."""
+    start = np.asarray(res.start)
+    finish = np.asarray(res.finish)
+    sel = np.asarray(res.system)
+    pw = np.asarray(res.energy) / np.maximum(np.asarray(res.runtime), 1e-30)
+    nodes = np.asarray(res.nodes)
+    idle_w = np.asarray(w.idle_w)
+    n_nodes = np.asarray(w.n_nodes)
+    peak = float(np.sum(idle_w * n_nodes))
+    for t in start:
+        running = (start <= t) & (t < finish)
+        busy_nodes = np.zeros(len(n_nodes))
+        np.add.at(busy_nodes, sel[running], nodes[running])
+        p = pw[running].sum() + float(
+            np.sum(idle_w * (n_nodes - busy_nodes)))
+        peak = max(peak, p)
+    return peak
+
+
+@pytest.mark.parametrize("queue", ["", "conservative"])
+def test_peak_power_under_cap_and_reconstruction(queue):
+    w = _stream(n=40, rate=1.0, seed=6)
+    cap = 47_000.0
+    res = Scheduler("paper", warm_start=True, queue=queue or None,
+                    power_cap=cap).run(w)
+    peak = float(res.peak_power)
+    assert peak <= cap * (1 + 1e-6)
+    # engine peak == trace reconstruction (capped starts are quantized to
+    # events, so the sampled trace is exact)
+    np.testing.assert_allclose(peak, reconstruct_peak_power(w, res),
+                               rtol=1e-4)
+    # uncapped run on the same stream actually exceeds the cap (binding)
+    un = Scheduler("paper", warm_start=True, queue=queue or None,
+                   core="events").run(w)
+    assert float(un.peak_power) > cap
+    assert float(res.makespan) >= float(un.makespan) * (1 - 1e-6)
+    assert float(res.capped_delay) > 0
+
+
+@pytest.mark.parametrize("queue", ["", "conservative"])
+def test_capped_starts_respect_outage_windows(queue):
+    """Regression (review finding): a cap-deferred start quantizes to the
+    current event — which must still respect the maintenance-window start
+    gate.  Before the fix, power freeing up mid-window placed jobs with
+    starts inside the window."""
+    outage = maintenance_windows(4, {2: [(100.0, 700.0)],
+                                     3: [(100.0, 700.0)]})
+    w = _stream(n=40, rate=1.2, seed=1, outage=outage)
+    cfg = SimConfig(mode="paper", k=0.1, warm_start=True, queue=queue,
+                    power_cap=45_000.0)
+    rj, _ = assert_differential(w, cfg)
+    start = np.asarray(rj["start"])
+    sel = np.asarray(rj["system"])
+    for s, spans in ((2, [(100.0, 700.0)]), (3, [(100.0, 700.0)])):
+        for o0, o1 in spans:
+            inside = (sel == s) & (start >= o0) & (start < o1)
+            assert not inside.any(), \
+                f"jobs started inside outage window on system {s}: " \
+                f"{start[inside]}"
+    assert float(rj["peak_power"]) <= 45_000.0 * (1 + 1e-6)
+
+
+def test_cap_below_idle_floor_forces_progress():
+    """A cap under the all-idle draw is unsatisfiable: the stuck valve
+    force-places rather than stalling, and the recorded peak honestly
+    exceeds the cap."""
+    w = _stream(n=10)
+    idle_floor = float(np.sum(np.asarray(w.idle_w) * np.asarray(w.n_nodes)))
+    res = Scheduler("paper", warm_start=True,
+                    power_cap=idle_floor * 0.5).run(w)
+    assert (np.asarray(res.runtime) > 0).all()      # every job placed
+    assert float(res.peak_power) > idle_floor * 0.5
+
+
+def test_power_cap_requires_event_core():
+    with pytest.raises(ValueError, match="event-"):
+        Scheduler("paper", power_cap=50_000.0, core="arrival")
+    with pytest.raises(ValueError, match="event-"):
+        Scheduler("conservative", core="arrival")
+
+
+def test_trace_workloads_carry_idle_watts():
+    """Regression (review finding): workload_from_trace must fill
+    Workload.idle_w like the other builders — a power-capped SWF replay
+    would otherwise ignore the ~33 kW JSCC idle floor entirely."""
+    from repro.data.scenarios import load_swf, workload_from_trace
+    swf = [f"{i+1} {i*20} 0 {300 + 40 * i} {8 + i} 100.0 0 {8 + i} "
+           "0 0 1 1 1 1 1 1 -1 -1" for i in range(12)]
+    w = workload_from_trace(load_swf(swf), JSCC_SYSTEMS)
+    np.testing.assert_array_equal(
+        np.asarray(w.idle_w),
+        np.asarray([s.idle_w for s in JSCC_SYSTEMS], np.float32))
+    idle_floor = float(np.sum(np.asarray(w.idle_w) * np.asarray(w.n_nodes)))
+    res = Scheduler("paper", warm_start=True, core="events").run(w)
+    assert float(res.peak_power) >= idle_floor
+    assert float(res.idle_energy) > 0
+
+
+def test_arrival_core_reports_nan_peak_and_idle_energy():
+    w = _stream(n=15)
+    ra = Scheduler("paper", warm_start=True).run(w)
+    assert np.isnan(float(ra.peak_power))
+    assert float(ra.capped_delay) == 0.0
+    # idle_energy == idle_w . (n_nodes * makespan - busy)
+    idle = float(np.sum(np.asarray(w.idle_w)
+                        * (np.asarray(w.n_nodes) * float(ra.makespan)
+                           - np.asarray(ra.busy))))
+    np.testing.assert_allclose(float(ra.idle_energy), idle, rtol=1e-5)
+    d = ra.to_dict()
+    for key in ("peak_power", "idle_energy", "capped_delay"):
+        assert key in d
+
+
+# ------------------------------------------------- mid-job failure retry
+
+@pytest.mark.parametrize("queue", ["", "conservative"])
+def test_failure_requeue_semantics(queue):
+    """On the event core a failing job re-queues at its failure event:
+    every job still completes, the failed work costs energy, and the
+    per-job runtime carries both attempts (restart_overhead + full
+    rerun when both attempts land on one system)."""
+    w = _stream(n=20, rate=0.5, seed=9)
+    kw = dict(warm_start=True, core="events" if not queue else None,
+              queue=queue or None)
+    clean = Scheduler("paper", **kw).run(w)
+    faulty = Scheduler(
+        "paper", faults=FaultConfig(failure_prob=1.0, restart_overhead=0.5),
+        **kw).run(w)
+    assert (np.asarray(faulty.runtime) > 0).all()
+    assert float(faulty.total_energy) > float(clean.total_energy) * 1.3
+    # at least one job retried on its own system => runtime exactly
+    # (1 + restart_overhead) x T_true there
+    sel = np.asarray(faulty.system)
+    T_base = np.asarray(w.T_true)[np.asarray(w.prog), sel]
+    ratio = np.asarray(faulty.runtime) / T_base
+    assert np.isclose(ratio, 1.5, rtol=1e-4).any()
+    assert (ratio > 1.0 - 1e-5).all()       # failed work never free
+    # learned tables absorb the inflated totals exactly once per job
+    # (same update count as the clean run)
+    np.testing.assert_array_equal(np.asarray(faulty.runs).sum(),
+                                  np.asarray(clean.runs).sum())
+
+
+def test_failure_requeue_seed_axis_varies():
+    w = _stream(n=15, rate=0.5, seed=2)
+    res = Scheduler("conservative", warm_start=True, seeds=range(3),
+                    faults=FaultConfig(failure_prob=0.5,
+                                       restart_overhead=0.5)).run(w)
+    E = np.asarray(res.total_energy)
+    assert len(np.unique(E)) > 1
+
+
+# (hypothesis property sweeps over these invariants live in
+# tests/test_property_events.py — the dev extra is optional there)

@@ -211,6 +211,52 @@ def test_kth_free_shared_clips_out_of_range_requests():
     np.testing.assert_array_equal(out, [[0.0, 11.0], [0.0, 11.0]])
 
 
+from repro.kernels.kth_free import kth_free_time_rows  # noqa: E402
+
+
+def _rows_oracle(table, sels, nreq):
+    """Reservation recheck the slow way: per reservation, one scalar
+    sort-and-index of its reserved system's row."""
+    out = np.zeros(len(sels), np.float32)
+    for e in range(len(sels)):
+        row = np.sort(np.asarray(table[int(sels[e])]))
+        out[e] = row[int(np.clip(nreq[e] - 1, 0, row.size - 1))]
+    return out
+
+
+@pytest.mark.parametrize("wn,s,n,seed", [
+    (2, 4, 136, 0),       # W=1 conservative window (head + 1 slot)
+    (9, 4, 136, 1),       # the JSCC node matrix, default window
+    (17, 3, 129, 2),      # W=16, non-multiple-of-lane width
+])
+@pytest.mark.parametrize("force", [None, "sort", "jnp", "pallas_interpret"])
+def test_kth_free_rows_bit_exact(wn, s, n, seed, force):
+    """The [W] reservation recheck (ISSUE 5: one shared sort serves every
+    pending reservation) vs the scalar sort-per-slot oracle, every
+    dispatch mode, bit for bit — including repeated reserved systems,
+    BIG sentinels and idle ties."""
+    rng = np.random.default_rng(seed)
+    free = rng.uniform(0, 1e6, (s, n)).astype(np.float32)
+    free[rng.random((s, n)) < 0.3] = 1e30
+    free[rng.random((s, n)) < 0.3] = 0.0
+    free[0, :] = 1e30                      # an all-sentinel system row
+    sels = rng.integers(0, s, wn).astype(np.int32)
+    nreq = rng.integers(1, n + 1, wn).astype(np.int32)
+    ref = _rows_oracle(free, sels, nreq)
+    out = np.asarray(kth_free_time_rows(
+        jnp.asarray(free), jnp.asarray(sels), jnp.asarray(nreq),
+        force=force))
+    np.testing.assert_array_equal(ref, out)
+
+
+def test_kth_free_rows_clips_out_of_range_requests():
+    table = jnp.asarray(np.arange(12, dtype=np.float32).reshape(2, 6))
+    sels = jnp.asarray(np.array([0, 1, 0], np.int32))
+    nreq = jnp.asarray(np.array([0, 99, 3], np.int32))
+    out = np.asarray(kth_free_time_rows(table, sels, nreq))
+    np.testing.assert_array_equal(out, [0.0, 11.0, 2.0])
+
+
 # ---------------------------------------------------------------- SSD scan
 
 from repro.kernels.ssd_scan import ssd_scan_pallas, ssd_scan_ref  # noqa: E402

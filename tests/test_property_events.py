@@ -1,0 +1,51 @@
+"""Hypothesis property sweeps for the event-granular core (ISSUE 5) —
+the three acceptance invariants on arbitrary generated streams:
+event-FCFS bit-identity, conservative reservations never delayed by a
+backfill, and cluster power never exceeding a binding cap.  Hypothesis
+is a dev extra: the suite skips cleanly where it isn't installed (see
+requirements-dev.txt); tests/test_event_core.py carries the
+non-hypothesis coverage of the same invariants."""
+
+import pytest
+
+pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import Scheduler, SimConfig  # noqa: E402
+from test_event_core import (  # noqa: E402
+    _stream, assert_differential, assert_event_fcfs_bit_identical,
+    reconstruct_peak_power)
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([0.3, 0.8, 1.5]))
+def test_property_event_fcfs_bit_identical(seed, rate):
+    """Event-granular FCFS == arrival-indexed FCFS on arbitrary streams
+    (shapes fixed so every example shares one compilation)."""
+    w = _stream(n=16, rate=rate, seed=seed)
+    assert_event_fcfs_bit_identical(w, "paper")
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([2, 8]))
+def test_property_conservative_never_delays_reservations(seed, window):
+    """The conservative invariant on arbitrary streams: every placement
+    realizes its admission-time reservation (the mirror asserts
+    realizable <= reserved at every placement, and the differential
+    equality transfers the guarantee to the jax engine)."""
+    w = _stream(n=16, rate=1.2, seed=seed)
+    assert_differential(
+        w, SimConfig(mode="conservative", k=0.1, warm_start=True,
+                     queue_window=window), check_reservations=True)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([40_000.0, 50_000.0]))
+def test_property_power_never_exceeds_cap(seed, cap):
+    """Cluster power stays under any binding cap on arbitrary streams,
+    by the engine's own accounting AND the independent reconstruction."""
+    w = _stream(n=16, rate=1.2, seed=seed)
+    res = Scheduler("paper", warm_start=True, power_cap=cap).run(w)
+    assert float(res.peak_power) <= cap * (1 + 1e-6)
+    assert reconstruct_peak_power(w, res) <= cap * (1 + 1e-4)
