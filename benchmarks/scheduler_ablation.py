@@ -310,6 +310,39 @@ def run_fault_tolerance():
     return rows
 
 
+def run_service():
+    """Online service decision latency (ISSUE 7): a live ``Dispatcher``
+    replays the contended SWF stream event-by-event — each job submitted
+    before the clock is driven past its arrival — through the SAME jitted
+    step the batch scan folds.  Bit-identity of the realized totals
+    against the batch ``Scheduler.run`` is asserted (the service
+    acceptance criterion); the row records the warm per-decision latency
+    (the one compile-paying step is excluded as the latency maximum)."""
+    from repro.service import Dispatcher
+
+    w = queue_streams()["swf"]
+    pol = make_policy("paper", k=0.10)
+    qs = "easy_backfill:window=16"
+    batch = Scheduler(pol, warm_start=True, queue=qs, engine="events").run(w)
+    disp = Dispatcher(w, pol, warm_start=True, queue=qs)
+    for j in range(len(w.prog)):
+        disp.drive(until=float(w.arrival[j]))
+        disp.submit(int(w.prog[j]), float(w.arrival[j]))
+    disp.drain()
+    res = disp.result()
+    for f in ("total_energy", "makespan", "total_wait", "max_wait",
+              "peak_power", "idle_energy", "n_backfilled"):
+        a, b = np.asarray(getattr(batch, f)), np.asarray(getattr(res, f))
+        assert a.tobytes() == b.tobytes(), \
+            f"live session diverged from batch on {f}: {b} != {a}"
+    m = disp.metrics
+    warm_us = (m.latency_us_total - m.latency_us_max) / max(m.n_steps - 1, 1)
+    return [("service_decision_latency", warm_us,
+             f"steps={m.n_steps};jobs={m.n_finished}"
+             f";compile_us={m.latency_us_max:.0f}"
+             f";peak={m.peak_power / 1e3:.1f}kW;bit_identical=True")]
+
+
 #: The module's suite registry — the single source for both harnesses
 #: (benchmarks/run.py spreads it into its suite list; main() below writes
 #: the same rows to BENCH_scheduler.json).
@@ -318,7 +351,8 @@ SUITES = (("ablation", run),
           ("fault_tolerance", run_fault_tolerance),
           ("queue_disciplines", run_queue_disciplines),
           ("window_scaling", run_window_scaling),
-          ("power_caps", run_power_caps))
+          ("power_caps", run_power_caps),
+          ("service", run_service))
 
 
 def main(argv=None):

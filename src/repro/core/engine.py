@@ -53,6 +53,7 @@ from __future__ import annotations
 
 from dataclasses import dataclass, replace
 from functools import partial
+from typing import NamedTuple
 
 import numpy as np
 import jax
@@ -687,10 +688,76 @@ def _scan_sim_easy(arrs: dict, policy: Policy, placer: str | None,
     }
 
 
-def _scan_sim_events(arrs: dict, policy: Policy, placer: str | None,
-                     totals_only: bool, kvec, sel_key, fault_key, fvec,
-                     tabs0, retries: bool = False):
-    """Event-granular scan: the clock advances through the merged stream
+class EventCarry(NamedTuple):
+    """Live state of the event-granular core between two ``make_event_step``
+    calls.  A NamedTuple (still an ordinary pytree to scan/jit) so the
+    service dispatcher and the checkpoint manifest address fields by name.
+    """
+    node_free: jnp.ndarray   # [S, maxN] node free-from times
+    node_pow: jnp.ndarray    # [S, maxN] per-node allocated draw (Watts)
+    C_tab: jnp.ndarray       # [P, S] learned energy coefficients
+    T_tab: jnp.ndarray       # [P, S] learned runtimes
+    runs: jnp.ndarray        # [P, S] observation counts
+    acc: tuple               # Kahan totals accumulator (empty if full path)
+    busy: jnp.ndarray        # [S] busy node-seconds
+    pend: jnp.ndarray        # [Wc] pending job ids (J = sentinel)
+    t0s: jnp.ndarray         # [Wc] effective arrivals
+    rts: jnp.ndarray         # [Wc] retry flags
+    accTs: jnp.ndarray       # [Wc] accrued runtime of failed attempts
+    accFs: jnp.ndarray       # [Wc] accrued fault factor
+    accWs: jnp.ndarray       # [Wc] accrued wait
+    s0s: jnp.ndarray         # [Wc] first-attempt starts
+    pblocks: jnp.ndarray     # [Wc] first power-blocked times (BIG = never)
+    a: jnp.ndarray           # next-arrival cursor
+    now: jnp.ndarray         # event clock
+    nbf: jnp.ndarray         # backfill count
+    peak: jnp.ndarray        # running peak cluster draw
+    cdel: jnp.ndarray        # cap-attributed placement delay
+
+
+def event_context(arrs: dict, policy: Policy, seed, fvec) -> dict:
+    """The traced per-run inputs of the factored event steps (everything a
+    step reads besides its carry): workload arrays, per-job effective K,
+    and the selection / fault PRNG keys — derived exactly as ``_scan_sim``
+    derives them, so a service session shares the batch scan's streams."""
+    kvec = jnp.where(jnp.isnan(arrs["k_job"]),
+                     jnp.asarray(policy.k, jnp.float32), arrs["k_job"])
+    sel_key, fault_key = jax.random.split(jax.random.key(seed))
+    return {"arrs": arrs, "kvec": kvec, "sel_key": sel_key,
+            "fault_key": fault_key, "fvec": fvec}
+
+
+def event_carry0(arrs: dict, policy: Policy, tabs0, totals_only: bool,
+                 now0=None) -> EventCarry:
+    """The event core's initial carry.  ``now0`` overrides the starting
+    clock (the batch scan opens at the first arrival; a live dispatcher
+    opens at 0 and advances to the first submission)."""
+    S = arrs["T_true"].shape[1]
+    J = arrs["prog"].shape[0]
+    Wc = int(policy.window) + 1
+    idle_total = jnp.where(arrs["free0"] < BIG,
+                           arrs["idle_w"][:, None], 0.0).sum()
+    acc0 = ((jnp.zeros(3, jnp.float32), jnp.zeros(3, jnp.float32),
+             jnp.float32(0.0), jnp.float32(0.0))
+            if totals_only else ())
+    if now0 is None:
+        now0 = arrs["arrival"][0]
+    return EventCarry(
+        node_free=arrs["free0"], node_pow=jnp.zeros_like(arrs["free0"]),
+        C_tab=tabs0[0], T_tab=tabs0[1], runs=tabs0[2], acc=acc0,
+        busy=jnp.zeros(S, jnp.float32),
+        pend=jnp.full((Wc,), J, jnp.int32), t0s=jnp.zeros(Wc, jnp.float32),
+        rts=jnp.zeros(Wc, bool), accTs=jnp.zeros(Wc, jnp.float32),
+        accFs=jnp.zeros(Wc, jnp.float32), accWs=jnp.zeros(Wc, jnp.float32),
+        s0s=jnp.zeros(Wc, jnp.float32),
+        pblocks=jnp.full((Wc,), BIG, jnp.float32),
+        a=jnp.int32(0), now=jnp.asarray(now0, jnp.float32),
+        nbf=jnp.int32(0), peak=idle_total, cdel=jnp.float32(0.0))
+
+
+def make_event_step(policy: Policy, placer: str | None = None,
+                    totals_only: bool = False, retries: bool = False):
+    """Event-granular step: the clock advances through the merged stream
     of arrival AND completion events, so the pending buffer is
     re-evaluated whenever nodes free up.
 
@@ -755,31 +822,45 @@ def _scan_sim_events(arrs: dict, policy: Policy, placer: str | None,
     Tables update once, at the final attempt, with the job's accumulated
     fault factor — for a same-system retry exactly the contiguous
     model's ``(1 + restart_overhead)`` totals.
+
+    Factored form (the online-service refactor): this builder returns the
+    bare ``step(ctx, carry, horizon) -> (carry, out)`` callable — ``ctx``
+    from ``event_context``, ``carry`` from ``event_carry0``.  The batch
+    scan (``_scan_sim_events``) folds it through ``lax.scan`` with
+    ``horizon = BIG`` (bit-identical to the pre-refactor closure, asserted
+    across tests/test_event_core.py); the service dispatcher jits it once
+    and calls it per event with a finite horizon, which only gates the
+    clock: ``advance`` never moves ``now`` past ``horizon`` (so a live
+    session cannot run ahead of arrivals it has not been told about) and
+    the stuck valve stays closed under a finite horizon (waiting for the
+    operator to drive further is always legal).  With ``horizon = BIG``
+    both gates are no-ops, so the batch op sequence is unchanged.  The
+    full-path ``out`` is a dict: the batch-result channels consumed by
+    ``_event_results`` plus live-decision extras (pushed/placed/advanced
+    flags, realized start, post-step clock, queue depth, cluster draw).
     """
-    T_true, C_true, E_true = arrs["T_true"], arrs["C_true"], arrs["E_true"]
-    T_pred, C_pred = arrs["T_pred"], arrs["C_pred"]
-    n_req, prog, arrival = arrs["n_req"], arrs["prog"], arrs["arrival"]
-    outage = arrs.get("outage")
-    w_pow, idle_w = arrs["w_pow"], arrs["idle_w"]
-    P, S = T_true.shape
-    J = prog.shape[0]
     W = int(policy.window)
     Wc = W + 1
     queue = policy.queue
     idx = jnp.arange(Wc)
 
-    exists = arrs["free0"] < BIG                                 # [S, maxN]
-    idle_mat = jnp.where(exists, idle_w[:, None], 0.0)           # [S, maxN]
-    idle_total = idle_mat.sum()
-    pc = jnp.asarray(policy.power_cap, jnp.float32)
-    capped = pc < UNCAPPED                                       # traced
+    def step(ctx, carry, horizon):
+        arrs, kvec, fvec = ctx["arrs"], ctx["kvec"], ctx["fvec"]
+        sel_key, fault_key = ctx["sel_key"], ctx["fault_key"]
+        T_true, C_true, E_true = (arrs["T_true"], arrs["C_true"],
+                                  arrs["E_true"])
+        T_pred, C_pred = arrs["T_pred"], arrs["C_pred"]
+        n_req, prog, arrival = arrs["n_req"], arrs["prog"], arrs["arrival"]
+        outage = arrs.get("outage")
+        w_pow, idle_w = arrs["w_pow"], arrs["idle_w"]
+        J = prog.shape[0]
+        exists = arrs["free0"] < BIG                             # [S, maxN]
+        idle_mat = jnp.where(exists, idle_w[:, None], 0.0)       # [S, maxN]
+        pc = jnp.asarray(policy.power_cap, jnp.float32)
+        capped = pc < UNCAPPED                                   # traced
+        out_ends = (None if outage is None
+                    else outage[..., 1].reshape(-1))             # [S*W0]
 
-    out_ends = (None if outage is None
-                else outage[..., 1].reshape(-1))                 # [S*W0]
-    n_out = 0 if out_ends is None else out_ends.shape[0]
-    T_steps = (7 if retries else 4) * J + n_out + 4
-
-    def step(carry, _):
         (node_free, node_pow, C_tab, T_tab, runs, acc, busy,
          pend, t0s, rts, accTs, accFs, accWs, s0s, pblocks,
          a, now, nbf, peak, cdel) = carry
@@ -886,7 +967,10 @@ def _scan_sim_events(arrs: dict, policy: Policy, placer: str | None,
         head_valid = valid[0]
         # no event ahead + nothing placeable can only mean the cap is
         # below the idle floor: force the head rather than stall forever
-        stuck = head_valid & ~do_push & ~jnp.any(elig0) & (next_evt >= BIG)
+        # (only with an open horizon — under a finite one the session is
+        # simply waiting to be driven further, never stuck)
+        stuck = (head_valid & ~do_push & ~jnp.any(elig0)
+                 & (next_evt >= BIG) & (horizon >= BIG))
         elig = jnp.where(idx == 0, elig0[0] | stuck, elig0)
 
         chosen = jnp.min(jnp.where(elig, idx, Wc))
@@ -966,6 +1050,13 @@ def _scan_sim_events(arrs: dict, policy: Policy, placer: str | None,
 
         T_tot = accT_ci + T_act
         wait_tot = accW_ci + wait_step
+
+        # ---- advance the clock only when nothing else happened (and
+        # never past the horizon)
+        advance = (~do_push & ~placed & (next_evt < BIG)
+                   & (next_evt <= horizon))
+        now = jnp.where(advance, next_evt, now)
+
         if totals_only:
             sums, comps, fin_max, wait_max = acc
             add = jnp.stack([
@@ -982,56 +1073,70 @@ def _scan_sim_events(arrs: dict, policy: Policy, placer: str | None,
                    jnp.maximum(wait_max, jnp.where(final, wait_tot, 0.0)))
             out = None
         else:
-            out = (jnp.where(placed, jj, J), E_act,
-                   jnp.where(final, jj, J), sel, s0_ci, finish,
-                   wait_tot, T_tot, final & (chosen > 0))
+            out = {
+                # batch-result channels (_event_results scatters these)
+                "j_add": jnp.where(placed, jj, J), "E": E_act,
+                "j_fin": jnp.where(final, jj, J), "sys": sel,
+                "s0": s0_ci, "finish": finish, "wait": wait_tot,
+                "T": T_tot, "bf": final & (chosen > 0),
+                # live-decision channels (the service dispatcher reads
+                # these; pure additions, the batch channels are untouched)
+                "pushed": do_push, "j_push": jnp.where(do_push, a - 1, J),
+                "placed": placed, "final": final, "advanced": advance,
+                "start": start, "now": now, "qlen": jnp.sum(pend < J),
+                "power": jnp.where(placed, new_P[ci], p_now),
+            }
 
-        # ---- advance the clock only when nothing else happened
-        advance = ~do_push & ~placed & (next_evt < BIG)
-        now = jnp.where(advance, next_evt, now)
+        return EventCarry(
+            node_free, node_pow, C_tab, T_tab, runs, acc, busy,
+            pend, t0s, rts, accTs, accFs, accWs, s0s, pblocks,
+            a, now, nbf, peak, cdel), out
 
-        return (node_free, node_pow, C_tab, T_tab, runs, acc, busy,
-                pend, t0s, rts, accTs, accFs, accWs, s0s, pblocks,
-                a, now, nbf, peak, cdel), out
-
-    acc0 = ((jnp.zeros(3, jnp.float32), jnp.zeros(3, jnp.float32),
-             jnp.float32(0.0), jnp.float32(0.0))
-            if totals_only else ())
-    carry0 = (
-        arrs["free0"], jnp.zeros_like(arrs["free0"]), *tabs0, acc0,
-        jnp.zeros(S, jnp.float32),
-        jnp.full((Wc,), J, jnp.int32), jnp.zeros(Wc, jnp.float32),
-        jnp.zeros(Wc, bool), jnp.zeros(Wc, jnp.float32),
-        jnp.zeros(Wc, jnp.float32), jnp.zeros(Wc, jnp.float32),
-        jnp.zeros(Wc, jnp.float32), jnp.full((Wc,), BIG, jnp.float32),
-        jnp.int32(0), arrival[0], jnp.int32(0), idle_total,
-        jnp.float32(0.0))
-    carry_f, ys = jax.lax.scan(step, carry0, None, length=T_steps)
-    (node_free, node_pow, C_tab, T_tab, runs, acc, busy,
-     pend, t0s, rts, accTs, accFs, accWs, s0s, pblocks,
-     a, now, nbf, peak, cdel) = carry_f
-    return _event_results(arrs, totals_only, ys, acc, busy,
-                          (C_tab, T_tab, runs), nbf, peak, cdel)
+    return step
 
 
-def _event_results(arrs, totals_only, ys, acc, busy, tables, nbf, peak,
-                   cdel):
+def _scan_sim_events(arrs: dict, policy: Policy, placer: str | None,
+                     totals_only: bool, kvec, sel_key, fault_key, fvec,
+                     tabs0, retries: bool = False):
+    """The event core's batch form: fold the factored step (see
+    ``make_event_step``) through ``lax.scan`` with an open horizon.
+    Every job needs one push + one placement and every advance lands on
+    a distinct event time, so ``4J + |outage| + 4`` steps suffice
+    (``7J`` with retries: a failure adds one push, one placement, one
+    event)."""
+    J = arrs["prog"].shape[0]
+    n_out = arrs["outage"][..., 1].size if "outage" in arrs else 0
+    T_steps = (7 if retries else 4) * J + n_out + 4
+    step = make_event_step(policy, placer, totals_only, retries)
+    ctx = {"arrs": arrs, "kvec": kvec, "sel_key": sel_key,
+           "fault_key": fault_key, "fvec": fvec}
+    carry0 = event_carry0(arrs, policy, tabs0, totals_only)
+    hor = jnp.float32(BIG)
+    carry_f, ys = jax.lax.scan(lambda c, _: step(ctx, c, hor), carry0,
+                               None, length=T_steps)
+    return _event_results(arrs, totals_only, ys, carry_f)
+
+
+def _event_results(arrs, totals_only, ys, carry):
     """Shared result epilogue of the two event-granular scans: unpack the
     totals accumulator, or scatter the per-step (attempt-energy,
-    final-attempt fields) outputs back to arrival order."""
+    final-attempt fields) output channels back to arrival order.  Takes
+    the final carry (EventCarry or ConsCarry — same field names)."""
     n_req, prog = arrs["n_req"], arrs["prog"]
     J = prog.shape[0]
-    C_tab, T_tab, runs = tables
-    tabs = {"C_tab": C_tab, "T_tab": T_tab, "runs": runs,
-            "n_backfilled": nbf}
+    busy, peak, cdel = carry.busy, carry.peak, carry.cdel
+    tabs = {"C_tab": carry.C_tab, "T_tab": carry.T_tab, "runs": carry.runs,
+            "n_backfilled": carry.nbf}
     if totals_only:
-        sums, _, fin_max, wait_max = acc
+        sums, _, fin_max, wait_max = carry.acc
         return {"total_energy": sums[0], "makespan": fin_max,
                 "total_wait": sums[1], "slowdown_sum": sums[2],
                 "max_wait": wait_max, "busy": busy,
                 **_power_totals(arrs, fin_max, busy, peak, cdel), **tabs}
 
-    j_add, E_s, j_fin, sel_s, s0_s, fin_s, wait_s, T_s, bf_s = ys
+    j_add, E_s, j_fin = ys["j_add"], ys["E"], ys["j_fin"]
+    sel_s, s0_s, fin_s = ys["sys"], ys["s0"], ys["finish"]
+    wait_s, T_s, bf_s = ys["wait"], ys["T"], ys["bf"]
     E = jnp.zeros(J, jnp.float32).at[j_add].add(E_s, mode="drop")
     def scat(vals, dtype):
         return jnp.zeros(J, dtype).at[j_fin].set(vals, mode="drop")
@@ -1054,9 +1159,60 @@ def _event_results(arrs, totals_only, ys, acc, busy, tables, nbf, peak,
     }
 
 
-def _scan_sim_cons(arrs: dict, policy: Policy, placer: str | None,
-                   totals_only: bool, kvec, sel_key, fault_key, fvec,
-                   tabs0, retries: bool = False):
+class ConsCarry(NamedTuple):
+    """Live state of the conservative event core (``make_cons_step``).
+    Field names shared with ``EventCarry`` where semantics coincide; the
+    per-slot pending columns live in the ``slots`` dict (job id, timing
+    accruals, and the reservation row: system/start/finish/need/...)."""
+    node_free: jnp.ndarray   # [S, maxN] node free-from times
+    node_pow: jnp.ndarray    # [S, maxN] per-node allocated draw (Watts)
+    C_tab: jnp.ndarray       # [P, S] learned energy coefficients
+    T_tab: jnp.ndarray       # [P, S] learned runtimes
+    runs: jnp.ndarray        # [P, S] observation counts
+    acc: tuple               # Kahan totals accumulator (empty if full path)
+    busy: jnp.ndarray        # [S] busy node-seconds
+    slots: dict              # [Wc]-leading per-slot reservation table
+    a: jnp.ndarray           # next-arrival cursor
+    now: jnp.ndarray         # event clock
+    nbf: jnp.ndarray         # backfill count
+    peak: jnp.ndarray        # running peak cluster draw
+    cdel: jnp.ndarray        # cap-attributed placement delay
+
+
+def cons_carry0(arrs: dict, policy: Policy, tabs0, totals_only: bool,
+                now0=None) -> ConsCarry:
+    """The conservative core's initial carry (see ``event_carry0``)."""
+    S = arrs["T_true"].shape[1]
+    J = arrs["prog"].shape[0]
+    Wc = int(policy.window) + 1
+    idle_total = jnp.where(arrs["free0"] < BIG,
+                           arrs["idle_w"][:, None], 0.0).sum()
+    acc0 = ((jnp.zeros(3, jnp.float32), jnp.zeros(3, jnp.float32),
+             jnp.float32(0.0), jnp.float32(0.0))
+            if totals_only else ())
+    if now0 is None:
+        now0 = arrs["arrival"][0]
+    slots0 = dict(
+        pend=jnp.full((Wc,), J, jnp.int32), t0=jnp.zeros(Wc, jnp.float32),
+        rt=jnp.zeros(Wc, bool), accT=jnp.zeros(Wc, jnp.float32),
+        accF=jnp.zeros(Wc, jnp.float32), accW=jnp.zeros(Wc, jnp.float32),
+        s0=jnp.zeros(Wc, jnp.float32),
+        pblock=jnp.full((Wc,), BIG, jnp.float32),
+        sel=jnp.zeros(Wc, jnp.int32), start=jnp.zeros(Wc, jnp.float32),
+        fin=jnp.zeros(Wc, jnp.float32),
+        T=jnp.ones(Wc, jnp.float32), E=jnp.zeros(Wc, jnp.float32),
+        need=jnp.zeros(Wc, jnp.int32), wjob=jnp.zeros(Wc, jnp.float32),
+        fac=jnp.zeros(Wc, jnp.float32), fail=jnp.zeros(Wc, bool))
+    return ConsCarry(
+        node_free=arrs["free0"], node_pow=jnp.zeros_like(arrs["free0"]),
+        C_tab=tabs0[0], T_tab=tabs0[1], runs=tabs0[2], acc=acc0,
+        busy=jnp.zeros(S, jnp.float32), slots=slots0,
+        a=jnp.int32(0), now=jnp.asarray(now0, jnp.float32),
+        nbf=jnp.int32(0), peak=idle_total, cdel=jnp.float32(0.0))
+
+
+def make_cons_step(policy: Policy, placer: str | None = None,
+                   totals_only: bool = False, retries: bool = False):
     """Conservative backfilling: hole-aware chained reservations on the
     event-granular clock.
 
@@ -1105,108 +1261,109 @@ def _scan_sim_cons(arrs: dict, policy: Policy, placer: str | None,
     ``_scan_sim_events``: with ``retries`` a failing first attempt
     occupies exactly its reserved span (the failure IS a completion
     event) and re-queues for a fresh reservation at the failure time.
+
+    Factored form: as ``make_event_step`` — returns the bare
+    ``step(ctx, carry, horizon)`` shared verbatim by the batch scan
+    (``_scan_sim_cons``, open horizon) and the service dispatcher
+    (finite horizon gates the clock and the stuck valve).
     """
-    T_true, C_true, E_true = arrs["T_true"], arrs["C_true"], arrs["E_true"]
-    T_pred, C_pred = arrs["T_pred"], arrs["C_pred"]
-    n_req, prog, arrival = arrs["n_req"], arrs["prog"], arrs["arrival"]
-    outage = arrs.get("outage")
-    w_pow, idle_w = arrs["w_pow"], arrs["idle_w"]
-    P, S = T_true.shape
-    J = prog.shape[0]
     Wc = int(policy.window) + 1
     idx = jnp.arange(Wc)
 
-    exists = arrs["free0"] < BIG
-    idle_mat = jnp.where(exists, idle_w[:, None], 0.0)
-    idle_total = idle_mat.sum()
-    pc = jnp.asarray(policy.power_cap, jnp.float32)
-    capped = pc < UNCAPPED
+    def step(ctx, carry, horizon):
+        arrs, kvec, fvec = ctx["arrs"], ctx["kvec"], ctx["fvec"]
+        sel_key, fault_key = ctx["sel_key"], ctx["fault_key"]
+        T_true, C_true, E_true = (arrs["T_true"], arrs["C_true"],
+                                  arrs["E_true"])
+        T_pred, C_pred = arrs["T_pred"], arrs["C_pred"]
+        n_req, prog, arrival = arrs["n_req"], arrs["prog"], arrs["arrival"]
+        outage = arrs.get("outage")
+        w_pow, idle_w = arrs["w_pow"], arrs["idle_w"]
+        S = T_true.shape[1]
+        J = prog.shape[0]
+        exists = arrs["free0"] < BIG
+        idle_mat = jnp.where(exists, idle_w[:, None], 0.0)
+        pc = jnp.asarray(policy.power_cap, jnp.float32)
+        capped = pc < UNCAPPED
+        out_ends = (None if outage is None
+                    else outage[..., 1].reshape(-1))
+        #: per-slot pop fill values (sentinel slot state)
+        FILLS = dict(pend=J, t0=0.0, rt=False, accT=0.0, accF=0.0,
+                     accW=0.0, s0=0.0, pblock=BIG, sel=0, start=0.0,
+                     fin=0.0, T=1.0, E=0.0, need=0, wjob=0.0, fac=0.0,
+                     fail=False)
+        sys_col = jnp.arange(S)[:, None, None]                   # [S, 1, 1]
 
-    out_ends = (None if outage is None
-                else outage[..., 1].reshape(-1))
-    n_out = 0 if out_ends is None else out_ends.shape[0]
-    # pushes + placements + distinct-event advances (arrivals,
-    # completions, reservation starts, outage ends), doubled-ish by
-    # retries: see _scan_sim_events for the counting argument
-    T_steps = (9 if retries else 5) * J + n_out + 4
+        def earliest_fit(p, t0, Tdur, node_free, slots):
+            """Per-system earliest start where free capacity (really-free
+            node count minus reservation occupancy) covers ``n_req[p]``
+            nodes for the whole [t, t + Tdur) window.  Candidates: the
+            arrival floor, node free times, reservation finishes (the only
+            capacity rises); dips happen only at reservation starts, so each
+            candidate is checked against the [W] reservation table."""
+            need = n_req[p]                                          # [S]
+            r_valid = slots["pend"] < J                              # [Wc]
+            r_sel, r_sta = slots["sel"], slots["start"]
+            r_fin, r_need = slots["fin"], slots["need"]
+            cands = jnp.concatenate([
+                jnp.full((S, 1), t0, jnp.float32), node_free,
+                jnp.broadcast_to(r_fin[None], (S, Wc)),
+            ], axis=1)                                               # [S, E]
+            cands = jnp.maximum(cands, t0)
+            if outage is not None:
+                # start gating only (jobs ride through windows, as in the
+                # other cores); outage ends are free-time candidates via the
+                # floored duplicates below
+                for wi in range(outage.shape[1]):
+                    o0 = outage[:, wi, 0][:, None]
+                    o1 = outage[:, wi, 1][:, None]
+                    cands = jnp.where((cands >= o0) & (cands < o1), o1, cands)
+            q = jnp.concatenate(
+                [cands, jnp.broadcast_to(r_sta[None], (S, Wc))], axis=1)
+            cnt = jnp.sum(node_free[:, None, :] <= q[:, :, None], axis=2)
+            on_sys = r_valid[None, None, :] & (r_sel[None, None, :] == sys_col)
+            occ = jnp.sum(jnp.where(
+                on_sys & (r_sta[None, None, :] <= q[:, :, None])
+                & (q[:, :, None] < r_fin[None, None, :]),
+                r_need[None, None, :], 0), axis=2)
+            availn = cnt - occ                                   # [S, E + Wc]
+            E_c = cands.shape[1]
+            cap_ok = availn[:, :E_c] >= need[:, None]                # [S, E]
+            avail_rs = availn[:, E_c:]                               # [S, Wc]
+            dips = (on_sys & (cands[:, :, None] < r_sta[None, None, :])
+                    & (r_sta[None, None, :]
+                       < cands[:, :, None] + Tdur[:, None, None]))
+            dip_ok = jnp.all(
+                ~dips | (avail_rs[:, None, :] >= need[:, None, None]), axis=2)
+            return jnp.min(jnp.where(cap_ok & dip_ok, cands, BIG), axis=1)
 
-    #: per-slot pop fill values (sentinel slot state)
-    FILLS = dict(pend=J, t0=0.0, rt=False, accT=0.0, accF=0.0, accW=0.0,
-                 s0=0.0, pblock=BIG, sel=0, start=0.0, fin=0.0, T=1.0,
-                 E=0.0, need=0, wjob=0.0, fac=0.0, fail=False)
-    sys_col = jnp.arange(S)[:, None, None]                       # [S, 1, 1]
+        def reserve(jp, t0, is_retry, node_free, slots, C_tab, T_tab, runs):
+            """Admission: fault draw + hole-aware earliest fit + selection —
+            the new reservation row for the slot table."""
+            p = prog[jp]
+            u = jax.random.uniform(jax.random.fold_in(fault_key, jp), (2,))
+            slow = jnp.where(u[0] < fvec[0], fvec[1], 1.0)
+            fail = u[1] < fvec[2]
+            if retries:
+                first_fail = fail & ~is_retry
+                scale = jnp.where(first_fail, fvec[3], 1.0)
+            else:
+                first_fail = jnp.zeros((), bool)
+                scale = jnp.where(fail, 1.0 + fvec[3], 1.0)
+            factor = slow * scale
+            Tdur = T_true[p] * factor                                # [S]
+            avail_p = earliest_fit(p, t0, Tdur, node_free, slots)
+            sel = select(
+                policy, c_row=C_tab[p], t_row=T_tab[p], runs_row=runs[p],
+                avail_row=avail_p, k=kvec[jp], c_pred_row=C_pred[p],
+                t_pred_row=T_pred[p], key=jax.random.fold_in(sel_key, jp))
+            start = avail_p[sel]
+            T_act = Tdur[sel]
+            return dict(sel=sel.astype(jnp.int32), start=start,
+                        fin=start + T_act, T=T_act,
+                        E=E_true[p, sel] * factor, need=n_req[p, sel],
+                        wjob=w_pow[p, sel], fac=factor, fail=first_fail)
 
-    def earliest_fit(p, t0, Tdur, node_free, slots):
-        """Per-system earliest start where free capacity (really-free
-        node count minus reservation occupancy) covers ``n_req[p]``
-        nodes for the whole [t, t + Tdur) window.  Candidates: the
-        arrival floor, node free times, reservation finishes (the only
-        capacity rises); dips happen only at reservation starts, so each
-        candidate is checked against the [W] reservation table."""
-        need = n_req[p]                                          # [S]
-        r_valid = slots["pend"] < J                              # [Wc]
-        r_sel, r_sta = slots["sel"], slots["start"]
-        r_fin, r_need = slots["fin"], slots["need"]
-        cands = jnp.concatenate([
-            jnp.full((S, 1), t0, jnp.float32), node_free,
-            jnp.broadcast_to(r_fin[None], (S, Wc)),
-        ], axis=1)                                               # [S, E]
-        cands = jnp.maximum(cands, t0)
-        if outage is not None:
-            # start gating only (jobs ride through windows, as in the
-            # other cores); outage ends are free-time candidates via the
-            # floored duplicates below
-            for wi in range(outage.shape[1]):
-                o0 = outage[:, wi, 0][:, None]
-                o1 = outage[:, wi, 1][:, None]
-                cands = jnp.where((cands >= o0) & (cands < o1), o1, cands)
-        q = jnp.concatenate(
-            [cands, jnp.broadcast_to(r_sta[None], (S, Wc))], axis=1)
-        cnt = jnp.sum(node_free[:, None, :] <= q[:, :, None], axis=2)
-        on_sys = r_valid[None, None, :] & (r_sel[None, None, :] == sys_col)
-        occ = jnp.sum(jnp.where(
-            on_sys & (r_sta[None, None, :] <= q[:, :, None])
-            & (q[:, :, None] < r_fin[None, None, :]),
-            r_need[None, None, :], 0), axis=2)
-        availn = cnt - occ                                   # [S, E + Wc]
-        E_c = cands.shape[1]
-        cap_ok = availn[:, :E_c] >= need[:, None]                # [S, E]
-        avail_rs = availn[:, E_c:]                               # [S, Wc]
-        dips = (on_sys & (cands[:, :, None] < r_sta[None, None, :])
-                & (r_sta[None, None, :]
-                   < cands[:, :, None] + Tdur[:, None, None]))
-        dip_ok = jnp.all(
-            ~dips | (avail_rs[:, None, :] >= need[:, None, None]), axis=2)
-        return jnp.min(jnp.where(cap_ok & dip_ok, cands, BIG), axis=1)
-
-    def reserve(jp, t0, is_retry, node_free, slots, C_tab, T_tab, runs):
-        """Admission: fault draw + hole-aware earliest fit + selection —
-        the new reservation row for the slot table."""
-        p = prog[jp]
-        u = jax.random.uniform(jax.random.fold_in(fault_key, jp), (2,))
-        slow = jnp.where(u[0] < fvec[0], fvec[1], 1.0)
-        fail = u[1] < fvec[2]
-        if retries:
-            first_fail = fail & ~is_retry
-            scale = jnp.where(first_fail, fvec[3], 1.0)
-        else:
-            first_fail = jnp.zeros((), bool)
-            scale = jnp.where(fail, 1.0 + fvec[3], 1.0)
-        factor = slow * scale
-        Tdur = T_true[p] * factor                                # [S]
-        avail_p = earliest_fit(p, t0, Tdur, node_free, slots)
-        sel = select(
-            policy, c_row=C_tab[p], t_row=T_tab[p], runs_row=runs[p],
-            avail_row=avail_p, k=kvec[jp], c_pred_row=C_pred[p],
-            t_pred_row=T_pred[p], key=jax.random.fold_in(sel_key, jp))
-        start = avail_p[sel]
-        T_act = Tdur[sel]
-        return dict(sel=sel.astype(jnp.int32), start=start,
-                    fin=start + T_act, T=T_act,
-                    E=E_true[p, sel] * factor, need=n_req[p, sel],
-                    wjob=w_pow[p, sel], fac=factor, fail=first_fail)
-
-    def step(carry, _):
         (node_free, node_pow, C_tab, T_tab, runs, acc, busy,
          slots, a, now, nbf, peak, cdel) = carry
 
@@ -1264,7 +1421,7 @@ def _scan_sim_cons(arrs: dict, policy: Policy, placer: str | None,
         power_ok = ~capped | (new_P <= pc)
         elig0 = elig_res & power_ok
         stuck = (jnp.any(elig_res) & ~do_push & ~jnp.any(elig0)
-                 & (next_evt >= BIG))
+                 & (next_evt >= BIG) & (horizon >= BIG))
         elig = elig0 | (elig_res & stuck)
 
         chosen = jnp.min(jnp.where(elig, idx, Wc))
@@ -1342,6 +1499,13 @@ def _scan_sim_cons(arrs: dict, policy: Policy, placer: str | None,
 
         T_tot = accT_ci + T_act
         wait_tot = accW_ci + wait_step
+
+        # ---- advance the clock only when nothing else happened (and
+        # never past the horizon)
+        advance = (~do_push & ~placed & (next_evt < BIG)
+                   & (next_evt <= horizon))
+        now = jnp.where(advance, next_evt, now)
+
         if totals_only:
             sums, comps, fin_max, wait_max = acc
             add = jnp.stack([
@@ -1356,39 +1520,46 @@ def _scan_sim_cons(arrs: dict, policy: Policy, placer: str | None,
                    jnp.maximum(wait_max, jnp.where(final, wait_tot, 0.0)))
             out = None
         else:
-            out = (jnp.where(placed, jj, J), E_act,
-                   jnp.where(final, jj, J), sel, s0_ci, finish,
-                   wait_tot, T_tot, final & (chosen > 0))
+            out = {
+                # batch-result channels (_event_results scatters these)
+                "j_add": jnp.where(placed, jj, J), "E": E_act,
+                "j_fin": jnp.where(final, jj, J), "sys": sel,
+                "s0": s0_ci, "finish": finish, "wait": wait_tot,
+                "T": T_tot, "bf": final & (chosen > 0),
+                # live-decision channels (the service dispatcher reads
+                # these; pure additions, the batch channels are untouched)
+                "pushed": do_push, "j_push": jnp.where(do_push, a - 1, J),
+                "placed": placed, "final": final, "advanced": advance,
+                "start": start, "now": now,
+                "qlen": jnp.sum(slots["pend"] < J),
+                "power": jnp.where(placed, new_P[ci], p_now),
+            }
 
-        advance = ~do_push & ~placed & (next_evt < BIG)
-        now = jnp.where(advance, next_evt, now)
+        return ConsCarry(node_free, node_pow, C_tab, T_tab, runs, acc,
+                         busy, slots, a, now, nbf, peak, cdel), out
 
-        return (node_free, node_pow, C_tab, T_tab, runs, acc,
-                busy, slots, a, now, nbf, peak, cdel), out
+    return step
 
-    acc0 = ((jnp.zeros(3, jnp.float32), jnp.zeros(3, jnp.float32),
-             jnp.float32(0.0), jnp.float32(0.0))
-            if totals_only else ())
-    slots0 = dict(
-        pend=jnp.full((Wc,), J, jnp.int32), t0=jnp.zeros(Wc, jnp.float32),
-        rt=jnp.zeros(Wc, bool), accT=jnp.zeros(Wc, jnp.float32),
-        accF=jnp.zeros(Wc, jnp.float32), accW=jnp.zeros(Wc, jnp.float32),
-        s0=jnp.zeros(Wc, jnp.float32),
-        pblock=jnp.full((Wc,), BIG, jnp.float32),
-        sel=jnp.zeros(Wc, jnp.int32), start=jnp.zeros(Wc, jnp.float32),
-        fin=jnp.zeros(Wc, jnp.float32),
-        T=jnp.ones(Wc, jnp.float32), E=jnp.zeros(Wc, jnp.float32),
-        need=jnp.zeros(Wc, jnp.int32), wjob=jnp.zeros(Wc, jnp.float32),
-        fac=jnp.zeros(Wc, jnp.float32), fail=jnp.zeros(Wc, bool))
-    carry0 = (arrs["free0"], jnp.zeros_like(arrs["free0"]),
-              *tabs0, acc0, jnp.zeros(S, jnp.float32), slots0,
-              jnp.int32(0), arrival[0], jnp.int32(0), idle_total,
-              jnp.float32(0.0))
-    carry_f, ys = jax.lax.scan(step, carry0, None, length=T_steps)
-    (node_free, node_pow, C_tab, T_tab, runs, acc, busy,
-     slots, a, now, nbf, peak, cdel) = carry_f
-    return _event_results(arrs, totals_only, ys, acc, busy,
-                          (C_tab, T_tab, runs), nbf, peak, cdel)
+
+def _scan_sim_cons(arrs: dict, policy: Policy, placer: str | None,
+                   totals_only: bool, kvec, sel_key, fault_key, fvec,
+                   tabs0, retries: bool = False):
+    """The conservative core's batch form: fold the factored step (see
+    ``make_cons_step``) through ``lax.scan`` with an open horizon.  Each
+    job needs one push + one placement; reservation starts add at most
+    one advance each on top of the event times, so ``5J`` steps suffice
+    (``9J`` with retries)."""
+    J = arrs["prog"].shape[0]
+    n_out = arrs["outage"][..., 1].size if "outage" in arrs else 0
+    T_steps = (9 if retries else 5) * J + n_out + 4
+    step = make_cons_step(policy, placer, totals_only, retries)
+    ctx = {"arrs": arrs, "kvec": kvec, "sel_key": sel_key,
+           "fault_key": fault_key, "fvec": fvec}
+    carry0 = cons_carry0(arrs, policy, tabs0, totals_only)
+    hor = jnp.float32(BIG)
+    carry_f, ys = jax.lax.scan(lambda c, _: step(ctx, c, hor), carry0,
+                               None, length=T_steps)
+    return _event_results(arrs, totals_only, ys, carry_f)
 
 
 @partial(jax.jit, static_argnames=("warm_start", "placer", "totals_only",
@@ -1443,6 +1614,12 @@ class Scheduler:
                 "events" (force the event-granular core; FCFS placements
                 are bit-identical to "arrival", asserted per registered
                 policy in tests/test_event_core.py)
+    engine:     alias for ``core`` (the service-facing spelling:
+                ``engine="events"`` routes the default EASY path onto
+                the event core the online dispatcher runs — see
+                docs/SERVICE.md; EASY divergence vs the arrival-indexed
+                scan is documented in tests/test_service.py).  Passing
+                both with different values is an error.
 
     ``run(w)`` returns a ``SimResult`` when no axis is present, else a
     ``CampaignResult`` with ``axes`` ordered (fault, policy, seed) — the
@@ -1455,7 +1632,12 @@ class Scheduler:
                  placer: str | None = None, faults=None, seeds=0,
                  warm_start: bool = False, queue: str | None = None,
                  easy_eval: str = "batched", power_cap=None,
-                 core: str | None = None):
+                 core: str | None = None, engine: str | None = None):
+        if engine is not None:
+            if core is not None and core != engine:
+                raise ValueError(f"core={core!r} conflicts with its alias "
+                                 f"engine={engine!r}")
+            core = engine
         self.policy = make_policy(policy) if isinstance(policy, str) else policy
         if queue is not None:
             self.policy = apply_queue_spec(self.policy, queue)

@@ -179,6 +179,103 @@ class _PySim:
         self.runs[p, sel] += 1
         return (sel, start, finish, start - arr, E_act, T_act)
 
+    # ------------------------------------------- event-replay helpers
+    # The power / event / placement bookkeeping shared verbatim by the
+    # two event-granular mirrors (``_events_py`` / ``_cons_py``).  Both
+    # replays mutate this state through the same methods, so the
+    # float64 op order is identical on the shared path by construction
+    # (the differential suite pins both sides against the engine).
+
+    def init_event_state(self, pol):
+        """Power model + event-clock accumulators of an event replay."""
+        w, S = self.w, self.S
+        J = len(w.prog)
+        self.ev_cap = float(np.asarray(pol.power_cap).reshape(-1)[0])
+        self.ev_capped = self.ev_cap < UNCAPPED
+        self.idle_pw = (np.zeros(S) if w.idle_w is None
+                        else np.asarray(w.idle_w, np.float64))
+        self.w_pow = np.asarray(w.E_true, np.float64) / np.maximum(
+            np.asarray(w.T_true, np.float64), 1e-30)
+        self.node_pow = [list(np.zeros(int(n))) for n in w.n_nodes]
+        self.ev_out = [None] * J
+        self.backfilled = np.zeros(J, bool)
+        self.a, self.now = 0, float(w.arrival[0])
+        self.nbf = 0
+        self.peak = float(sum(self.idle_pw[s] * int(w.n_nodes[s])
+                              for s in range(S)))
+        self.cdel = 0.0
+        self.pblock: dict[int, float] = {}
+        self.placed_n = 0
+
+    def power_at(self, t: float) -> float:
+        """Cluster draw at ``t``: per-node allocated watts while busy,
+        idle watts otherwise."""
+        return sum(
+            self.node_pow[s][i] if self.node_free[s][i] > t
+            else self.idle_pw[s]
+            for s in range(self.S) for i in range(len(self.node_free[s])))
+
+    def next_event(self, extra=()) -> bool:
+        """Advance ``now`` to the next event: the earliest node-free
+        time, the next arrival, any ``extra`` times (the conservative
+        replay's reservation starts), or an outage end.  Returns whether
+        the clock moved."""
+        w = self.w
+        nxt = [t for fl in self.node_free for t in fl if t > self.now]
+        if self.a < len(w.prog) and float(w.arrival[self.a]) > self.now:
+            nxt.append(float(w.arrival[self.a]))
+        nxt.extend(t for t in extra if t > self.now)
+        if w.outage is not None:
+            nxt.extend(float(t1) for _, t1 in w.outage.reshape(-1, 2)
+                       if t1 > self.now)
+        if nxt:
+            self.now = min(nxt)
+            return True
+        return False
+
+    def record_block(self, j: int):
+        """First time job j is the next would-be placement but
+        power-blocked (feeds ``capped_delay``)."""
+        self.pblock[j] = min(self.pblock.get(j, np.inf), self.now)
+
+    def outage_gated(self, sel: int, start_q: float) -> bool:
+        """Capped starts quantize to ``now``: the start gate must hold
+        there (mirrors the engine's res_ok outage clause)."""
+        return self.ev_capped and self.w.outage is not None and any(
+            o0 <= start_q < o1 for o0, o1 in self.w.outage[sel])
+
+    def realize(self, j: int, chosen: int, p: int, sel: int, start: float,
+                T_act: float, E_act: float, wjob: float, arr: float,
+                p_now: float):
+        """Realize a placement: allocate + per-node power, update the
+        learned tables, and record the power / backfill / per-job
+        outputs — the float64 twin of the engine's placement tail."""
+        w = self.w
+        finish = start + T_act
+        need = int(w.n_req[p, sel])
+        idx = np.argsort(self.node_free[sel])[:need]
+        for i in idx:
+            self.node_free[sel][int(i)] = finish
+            self.node_pow[sel][int(i)] = wjob / max(need, 1)
+        n = self.runs[p, sel]
+        C_act = float(w.C_true[p, sel])
+        self.C_tab[p, sel] = (self.C_tab[p, sel] * n + C_act) / (n + 1)
+        self.T_tab[p, sel] = (self.T_tab[p, sel] * n + T_act) / (n + 1)
+        self.runs[p, sel] += 1
+        new_P = p_now - need * self.idle_pw[sel] + wjob
+        self.peak = max(self.peak, new_P)
+        if j in self.pblock:
+            self.cdel += self.now - self.pblock.pop(j)
+        if chosen > 0:
+            self.backfilled[j] = True
+            self.nbf += 1
+        self.ev_out[j] = (sel, start, finish, start - arr, E_act, T_act)
+        self.placed_n += 1
+
+    def event_results(self):
+        return (self.ev_out, self.backfilled, self.nbf, self.peak,
+                self.cdel, self.idle_pw)
+
 
 def _easy_order_py(sim: _PySim, J: int, window: int):
     """Replay the engine's EASY-backfill step decisions (one placement per
@@ -220,46 +317,29 @@ def _events_py(sim: _PySim, pol):
     and power-cap deferral with the same start rule (capped runs start at
     the current event).  Returns the per-job records plus the power
     accumulators."""
-    w, S = sim.w, sim.S
+    w = sim.w
     J = len(w.prog)
     Wc = int(pol.window) + 1
     queue = pol.queue
-    cap = float(np.asarray(pol.power_cap).reshape(-1)[0])
-    capped = cap < UNCAPPED
-    idle_w = (np.zeros(S) if w.idle_w is None
-              else np.asarray(w.idle_w, np.float64))
-    w_pow = np.asarray(w.E_true, np.float64) / np.maximum(
-        np.asarray(w.T_true, np.float64), 1e-30)
-    node_pow = [list(np.zeros(int(n))) for n in w.n_nodes]
-    out = [None] * J
-    backfilled = np.zeros(J, bool)
+    sim.init_event_state(pol)
+    capped = sim.ev_capped
     pend: list[int] = []
-    a, now = 0, float(w.arrival[0])
-    nbf = 0
-    peak = float(sum(idle_w[s] * int(w.n_nodes[s]) for s in range(S)))
-    cdel = 0.0
-    pblock: dict[int, float] = {}
-    placed_n = 0
     max_iters = 16 * J + 64           # far above the engine's step bound
 
-    def p_at(t):
-        return sum(
-            node_pow[s][i] if sim.node_free[s][i] > t else idle_w[s]
-            for s in range(S) for i in range(len(sim.node_free[s])))
-
     for _ in range(max_iters):
-        if placed_n == J:
+        if sim.placed_n == J:
             break
+        now = sim.now
         pushed = False
-        if a < J and float(w.arrival[a]) <= now and len(pend) < Wc:
-            pend.append(a)
-            a += 1
+        if sim.a < J and float(w.arrival[sim.a]) <= now and len(pend) < Wc:
+            pend.append(sim.a)
+            sim.a += 1
             pushed = True
 
         chosen = None
         evals = [sim.choose(j) for j in pend]       # (p, arr, avail, sel)
         starts_res = [float(ev[2][ev[3]]) for ev in evals]
-        p_now = p_at(now)
+        p_now = sim.power_at(now)
 
         def trial_of(ci):
             p_b, _, avail_b, sel_b = evals[ci]
@@ -278,41 +358,27 @@ def _events_py(sim: _PySim, pol):
             p_h, arr_h, _, sel_h = evals[0]
             return sim.avail_for(p_h, arr_h, trial)[sel_h] <= starts_res[0]
 
-        def outage_gated(sel_b, start_q):
-            """Capped starts quantize to ``now``: the start gate must
-            hold there (mirrors the engine's res_ok outage clause)."""
-            return capped and w.outage is not None and any(
-                o0 <= start_q < o1 for o0, o1 in w.outage[sel_b])
-
         blocked_recorded = False
         for ci in range(len(pend)):
             if starts_res[ci] > now or not guard_ok(ci):
                 continue
             p_b, _, _, sel_b = evals[ci]
-            if outage_gated(sel_b, max(starts_res[ci], now)):
+            if sim.outage_gated(sel_b, max(starts_res[ci], now)):
                 continue
             new_P = (p_now
-                     - int(w.n_req[p_b, sel_b]) * idle_w[sel_b]
-                     + w_pow[p_b, sel_b])
-            if capped and new_P > cap:
+                     - int(w.n_req[p_b, sel_b]) * sim.idle_pw[sel_b]
+                     + sim.w_pow[p_b, sel_b])
+            if capped and new_P > sim.ev_cap:
                 if not blocked_recorded:
                     # the next would-be placement is power-blocked
-                    jb = pend[ci]
-                    pblock[jb] = min(pblock.get(jb, np.inf), now)
+                    sim.record_block(pend[ci])
                     blocked_recorded = True
                 continue
             chosen = ci
             break
 
         if chosen is None and not pushed:
-            nxt = [t for fl in sim.node_free for t in fl if t > now]
-            if a < J and float(w.arrival[a]) > now:
-                nxt.append(float(w.arrival[a]))
-            if w.outage is not None:
-                nxt.extend(float(t1) for _, t1 in w.outage.reshape(-1, 2)
-                           if t1 > now)
-            if nxt:
-                now = min(nxt)
+            if sim.next_event():
                 continue
             if not pend:
                 break
@@ -326,30 +392,12 @@ def _events_py(sim: _PySim, pol):
         p, arr, avail, sel = evals[chosen]
         start = (max(starts_res[chosen], now) if capped
                  else starts_res[chosen])
-        T_act = float(w.T_true[p, sel])
-        E_act = float(w.E_true[p, sel])
-        C_act = float(w.C_true[p, sel])
-        finish = start + T_act
-        need = int(w.n_req[p, sel])
-        idx = np.argsort(sim.node_free[sel])[:need]
-        for i in idx:
-            sim.node_free[sel][int(i)] = finish
-            node_pow[sel][int(i)] = w_pow[p, sel] / max(need, 1)
-        n = sim.runs[p, sel]
-        sim.C_tab[p, sel] = (sim.C_tab[p, sel] * n + C_act) / (n + 1)
-        sim.T_tab[p, sel] = (sim.T_tab[p, sel] * n + T_act) / (n + 1)
-        sim.runs[p, sel] += 1
-        new_P = p_now - need * idle_w[sel] + w_pow[p, sel]
-        peak = max(peak, new_P)
-        if j in pblock:
-            cdel += now - pblock.pop(j)
-        if chosen > 0:
-            backfilled[j] = True
-            nbf += 1
-        out[j] = (sel, start, finish, start - arr, E_act, T_act)
-        placed_n += 1
-    assert placed_n == J, f"event mirror stalled: {placed_n}/{J} placed"
-    return out, backfilled, nbf, peak, cdel, idle_w
+        sim.realize(j, chosen, p, sel, start, float(w.T_true[p, sel]),
+                    float(w.E_true[p, sel]), sim.w_pow[p, sel], arr,
+                    p_now)
+    assert sim.placed_n == J, \
+        f"event mirror stalled: {sim.placed_n}/{J} placed"
+    return sim.event_results()
 
 
 def _cons_py(sim: _PySim, pol, check_reservations: bool = False):
@@ -367,28 +415,10 @@ def _cons_py(sim: _PySim, pol, check_reservations: bool = False):
     w, S = sim.w, sim.S
     J = len(w.prog)
     Wc = int(pol.window) + 1
-    cap = float(np.asarray(pol.power_cap).reshape(-1)[0])
-    capped = cap < UNCAPPED
-    idle_w = (np.zeros(S) if w.idle_w is None
-              else np.asarray(w.idle_w, np.float64))
-    w_pow = np.asarray(w.E_true, np.float64) / np.maximum(
-        np.asarray(w.T_true, np.float64), 1e-30)
-    node_pow = [list(np.zeros(int(n))) for n in w.n_nodes]
-    out = [None] * J
-    backfilled = np.zeros(J, bool)
+    sim.init_event_state(pol)
+    capped = sim.ev_capped
     pend: list[dict] = []
-    a, now = 0, float(w.arrival[0])
-    nbf = 0
-    peak = float(sum(idle_w[s] * int(w.n_nodes[s]) for s in range(S)))
-    cdel = 0.0
-    pblock: dict[int, float] = {}
-    placed_n = 0
     max_iters = 16 * J + 64
-
-    def p_at(t):
-        return sum(
-            node_pow[s][i] if sim.node_free[s][i] > t else idle_w[s]
-            for s in range(S) for i in range(len(sim.node_free[s])))
 
     def earliest_fit(p, t0):
         """Float64 twin of the engine's hole-aware earliest fit: per
@@ -433,55 +463,46 @@ def _cons_py(sim: _PySim, pol, check_reservations: bool = False):
         return dict(j=j, p=p, t0=t0, sel=sel, start=start, T=T_act,
                     fin=start + T_act, E=float(w.E_true[p, sel]),
                     need=int(w.n_req[p, sel]),
-                    wjob=float(w_pow[p, sel]))
+                    wjob=float(sim.w_pow[p, sel]))
 
     for _ in range(max_iters):
-        if placed_n == J:
+        if sim.placed_n == J:
             break
+        now = sim.now
         pushed = False
-        if a < J and float(w.arrival[a]) <= now and len(pend) < Wc:
-            pend.append(reserve(a, float(w.arrival[a])))
-            a += 1
+        if sim.a < J and float(w.arrival[sim.a]) <= now and len(pend) < Wc:
+            pend.append(reserve(sim.a, float(w.arrival[sim.a])))
+            sim.a += 1
             pushed = True
 
         # realizability + power, in slot (admission) order
-        p_now = p_at(now)
+        p_now = sim.power_at(now)
         chosen = None
         blocked_recorded = False
         elig_res = []
         for ci, rec in enumerate(pend):
             avail_real = sim.avail_for(rec["p"], rec["t0"])[rec["sel"]]
             ok = rec["start"] <= now and avail_real <= now
-            if ok and capped and w.outage is not None:
+            if ok:
                 # the engine's cap-deferred start gate: now must not sit
                 # inside the reserved system's maintenance window
-                q = max(rec["start"], now)
-                ok = not any(o0 <= q < o1
-                             for o0, o1 in w.outage[rec["sel"]])
+                ok = not sim.outage_gated(rec["sel"],
+                                          max(rec["start"], now))
             elig_res.append(ok)
             if not ok:
                 continue
-            new_P = (p_now - rec["need"] * idle_w[rec["sel"]]
+            new_P = (p_now - rec["need"] * sim.idle_pw[rec["sel"]]
                      + rec["wjob"])
-            if capped and new_P > cap:
+            if capped and new_P > sim.ev_cap:
                 if not blocked_recorded:
-                    pblock[rec["j"]] = min(
-                        pblock.get(rec["j"], np.inf), now)
+                    sim.record_block(rec["j"])
                     blocked_recorded = True
                 continue
             chosen = ci
             break
 
         if chosen is None and not pushed:
-            nxt = [t for fl in sim.node_free for t in fl if t > now]
-            if a < J and float(w.arrival[a]) > now:
-                nxt.append(float(w.arrival[a]))
-            nxt.extend(r["start"] for r in pend if r["start"] > now)
-            if w.outage is not None:
-                nxt.extend(float(t1) for _, t1 in w.outage.reshape(-1, 2)
-                           if t1 > now)
-            if nxt:
-                now = min(nxt)
+            if sim.next_event(extra=(r["start"] for r in pend)):
                 continue
             if not any(elig_res):
                 break                      # drained
@@ -491,36 +512,18 @@ def _cons_py(sim: _PySim, pol, check_reservations: bool = False):
             continue
 
         rec = pend.pop(chosen)
-        j, p, sel, need = rec["j"], rec["p"], rec["sel"], rec["need"]
+        j, p, sel = rec["j"], rec["p"], rec["sel"]
         start = max(rec["start"], now) if capped else rec["start"]
         if check_reservations and not capped:
             avail_real = sim.avail_for(p, rec["t0"])[sel]
             assert avail_real <= rec["start"] + 1e-6, (
                 f"reservation of job {j} not realizable: {avail_real} > "
                 f"{rec['start']} (a backfill delayed it)")
-        T_act = rec["T"]
-        finish = start + T_act
-        idx = np.argsort(sim.node_free[sel])[:need]
-        for i in idx:
-            sim.node_free[sel][int(i)] = finish
-            node_pow[sel][int(i)] = rec["wjob"] / max(need, 1)
-        n = sim.runs[p, sel]
-        C_act = float(w.C_true[p, sel])
-        sim.C_tab[p, sel] = (sim.C_tab[p, sel] * n + C_act) / (n + 1)
-        sim.T_tab[p, sel] = (sim.T_tab[p, sel] * n + T_act) / (n + 1)
-        sim.runs[p, sel] += 1
-        new_P = p_now - need * idle_w[sel] + rec["wjob"]
-        peak = max(peak, new_P)
-        if j in pblock:
-            cdel += now - pblock.pop(j)
-        if chosen > 0:
-            backfilled[j] = True
-            nbf += 1
-        out[j] = (sel, start, finish, start - float(w.arrival[j]),
-                  rec["E"], T_act)
-        placed_n += 1
-    assert placed_n == J, f"conservative mirror stalled: {placed_n}/{J}"
-    return out, backfilled, nbf, peak, cdel, idle_w
+        sim.realize(j, chosen, p, sel, start, rec["T"], rec["E"],
+                    rec["wjob"], float(w.arrival[j]), p_now)
+    assert sim.placed_n == J, \
+        f"conservative mirror stalled: {sim.placed_n}/{J}"
+    return sim.event_results()
 
 
 def simulate_py(w: Workload, scfg: SimConfig, *,

@@ -1,0 +1,157 @@
+"""Online scheduler service CLI: a JSONL decision loop on stdin/stdout.
+
+Each input line is one JSON request; each response is one JSON line —
+the shape a facility's submission portal (or the CI smoke) scripts
+against.  Example session::
+
+    PYTHONPATH=src python -m repro.launch.scheduler_service \
+        --queue easy_backfill:window=8 --power-cap 60000 \
+        --checkpoint-dir /tmp/sched_ck <<'EOS'
+    {"op": "submit", "prog": "BT", "arrival": 0.0}
+    {"op": "submit", "prog": "LU", "arrival": 5.0}
+    {"op": "drive", "until": 100.0}
+    {"op": "whatif", "prog": "SP"}
+    {"op": "checkpoint"}
+    {"op": "drain"}
+    {"op": "metrics"}
+    {"op": "result"}
+    EOS
+
+Operations (all responses carry ``"ok"``; errors report ``"error"`` and
+leave the session state untouched):
+
+    submit   {"prog": name|index, "arrival"?: t, "k"?: f} -> {"job": id}
+    drive    {"until": t} -> {"decisions": [...], "now": t'}
+    drain    {} -> {"decisions": [...], "now": t'}   (open horizon)
+    whatif   {"prog": ..., "arrival"?: t} -> projection (no state change)
+    metrics  {} -> the streaming counters (docs/SERVICE.md schema)
+    checkpoint {} -> {"step": n}          (needs --checkpoint-dir)
+    result   {} -> realized totals so far
+
+``--restore`` resumes the latest checkpoint under ``--checkpoint-dir``
+before reading any input — kill the process mid-stream, restart with
+``--restore``, replay the remaining lines, and the decisions match the
+uninterrupted session bit for bit (the CI ``service-smoke`` step does
+exactly that).
+"""
+
+import argparse
+import json
+import sys
+
+from repro.core import (JSCC_SYSTEMS, FaultConfig, make_npb_workload,
+                        make_policy, parse_policy_spec)
+from repro.core.policy import apply_queue_spec
+from repro.service import Dispatcher, whatif
+
+
+def build_policy(args):
+    if args.policy:
+        pol = parse_policy_spec(args.policy, k=args.k)
+    else:
+        pol = make_policy(args.mode, k=args.k)
+    if args.queue:
+        pol = apply_queue_spec(pol, args.queue)
+    return pol
+
+
+def _prog_index(w, prog):
+    if isinstance(prog, str):
+        if prog not in w.programs:
+            raise ValueError(f"unknown program {prog!r}; "
+                             f"catalog: {list(w.programs)}")
+        return w.programs.index(prog)
+    return int(prog)
+
+
+def _scalar(v):
+    """float(v) when v is scalar-like and finite, else None (strict-JSON
+    safe: no Infinity/NaN literals on the wire)."""
+    import math
+    import numpy as np
+    if np.ndim(v) != 0:
+        return None
+    f = float(v)
+    return f if math.isfinite(f) else None
+
+
+def handle(disp, req: dict) -> dict:
+    op = req.get("op")
+    if op == "submit":
+        j = disp.submit(_prog_index(disp.w, req["prog"]),
+                        req.get("arrival"), req.get("k"))
+        return {"ok": True, "job": j, "now": disp.now}
+    if op in ("drive", "drain"):
+        dec = (disp.drain() if op == "drain"
+               else disp.drive(float(req["until"])))
+        return {"ok": True, "decisions": dec, "now": disp.now}
+    if op == "whatif":
+        proj = whatif(disp, _prog_index(disp.w, req["prog"]),
+                      req.get("arrival"), req.get("k"))
+        proj["cap_headroom"] = _scalar(proj["cap_headroom"])
+        return {"ok": True, **proj}
+    if op == "metrics":
+        return {"ok": True, "metrics": disp.metrics.snapshot()}
+    if op == "checkpoint":
+        return {"ok": True, "step": disp.save(blocking=True)}
+    if op == "result":
+        r = disp.result()
+        totals = {k: _scalar(v) for k, v in
+                  r.to_dict(arrays=False).items()}
+        return {"ok": True,
+                "totals": {k: v for k, v in totals.items()
+                           if v is not None},
+                "n_jobs": r.n_jobs}
+    return {"ok": False, "error": f"unknown op {op!r}"}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="online scheduler service (JSONL loop)")
+    ap.add_argument("--policy", default="", metavar="NAME[:k=v,...]")
+    ap.add_argument("--mode", default="paper")
+    ap.add_argument("--k", type=float, default=0.1)
+    ap.add_argument("--queue", default="", metavar="DISC[:window=W]")
+    ap.add_argument("--power-cap", type=float, default=0.0, metavar="WATTS")
+    ap.add_argument("--capacity", type=int, default=256,
+                    help="max jobs per session (fixed shapes, one jit)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--warm-start", action="store_true",
+                    help="profile tables pre-filled with ground truth")
+    ap.add_argument("--failures", type=float, default=0.0,
+                    help="per-job failure probability (enables retries)")
+    ap.add_argument("--stragglers", type=float, default=0.0)
+    ap.add_argument("--checkpoint-dir", default="",
+                    help="arm checkpoint/restore under this directory")
+    ap.add_argument("--restore", action="store_true",
+                    help="resume the latest checkpoint before reading input")
+    args = ap.parse_args(argv)
+
+    w = make_npb_workload(JSCC_SYSTEMS)
+    fault = (FaultConfig(straggler_prob=args.stragglers,
+                         failure_prob=args.failures)
+             if (args.failures or args.stragglers) else None)
+    disp = Dispatcher(
+        w, build_policy(args), capacity=args.capacity, seed=args.seed,
+        fault=fault, warm_start=args.warm_start,
+        power_cap=args.power_cap or None,
+        checkpoint_dir=args.checkpoint_dir or None)
+    if args.restore:
+        resumed = disp.restore()
+        print(json.dumps({"ok": True, "resumed": bool(resumed),
+                          "n_submitted": disp.n_submitted,
+                          "now": disp.now}), flush=True)
+
+    for line in sys.stdin:
+        line = line.strip()
+        if not line:
+            continue
+        try:
+            resp = handle(disp, json.loads(line))
+        except Exception as e:                      # state stays intact
+            resp = {"ok": False, "error": str(e)}
+        print(json.dumps(resp), flush=True)
+
+
+if __name__ == "__main__":
+    main()

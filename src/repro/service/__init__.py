@@ -1,0 +1,17 @@
+"""Online scheduler service: the event core as a live decision engine.
+
+``Dispatcher`` holds the event-granular scan's carry (node-free / power
+tables, pending buffer, reservations) as long-lived state: jobs are
+submitted one at a time, the clock is driven through bounded horizons,
+and every step emits the placement decision the batch scan would have
+made — bit-identically (tests/test_service.py).  ``whatif`` forks the
+live carry into a jitted rollout for operator queries; ``ServiceMetrics``
+streams queue / power / latency counters; ``repro.launch
+.scheduler_service`` is the JSONL CLI loop.  See docs/SERVICE.md.
+"""
+
+from repro.service.dispatcher import Dispatcher
+from repro.service.metrics import ServiceMetrics
+from repro.service.whatif import whatif
+
+__all__ = ["Dispatcher", "ServiceMetrics", "whatif"]

@@ -1,0 +1,320 @@
+"""Long-lived dispatcher: the event core's carry as live service state.
+
+The batch engine folds ``step(ctx, carry, horizon)`` through
+``lax.scan``; the dispatcher jits the SAME step once and calls it per
+event, holding the carry between calls.  Three operations drive a
+session:
+
+  submit(prog, arrival)   register a job (fills the next slot of the
+                          capacity-padded job arrays; fixed shapes, so
+                          the jitted step never retraces);
+  drive(until)            advance the clock through pushes / placements
+                          / event hops, never past ``until`` (the step's
+                          horizon gate) — returns the decisions emitted;
+  drain()                 drive with an open horizon until quiescent.
+
+Fed a workload's stream submit-before-drive-past (each job submitted
+before the clock is driven past its arrival), the decision sequence and
+final totals are bit-identical to the batch ``Scheduler.run`` — the
+extra quiescent steps a live session sees are no-ops on the carry
+(asserted in tests/test_service.py).  ``save``/``restore`` persist the
+carry + job arrays + realized decisions through ``CheckpointManager``
+(atomic npz + msgpack), so a killed session resumes mid-stream with
+identical remaining decisions.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import replace
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.engine import (
+    BIG, FaultConfig, Workload, _fault_vec, _power_totals,
+    _workload_arrays, cons_carry0, event_carry0, event_context,
+    make_cons_step, make_event_step,
+)
+from repro.core.policy import Policy, apply_queue_spec, make_policy
+from repro.core.result import SimResult
+from repro.checkpoint.manager import CheckpointManager
+from repro.service.metrics import ServiceMetrics
+
+
+class Dispatcher:
+    """A stateful scheduling session over one facility description.
+
+    ``w`` supplies the program x system tables (runtimes, energies, node
+    counts, idle watts, outages); its job stream is only a catalog — the
+    session's jobs are whatever ``submit`` registers, up to ``capacity``
+    (default: the catalog's length).  ``policy`` / ``queue`` /
+    ``power_cap`` / ``fault`` / ``seed`` / ``warm_start`` mirror the
+    batch ``Scheduler`` arguments; policy leaves must be scalars (a grid
+    has no live interpretation).  ``checkpoint_dir`` arms save/restore.
+    """
+
+    def __init__(self, w: Workload, policy: str | Policy = "paper", *,
+                 capacity: int | None = None, seed: int = 0,
+                 fault: FaultConfig | None = None, placer: str | None = None,
+                 warm_start: bool = False, queue: str | None = None,
+                 power_cap=None, checkpoint_dir: str | None = None,
+                 keep_n: int = 3):
+        pol = make_policy(policy) if isinstance(policy, str) else policy
+        if queue is not None:
+            pol = apply_queue_spec(pol, queue)
+        if power_cap is not None:
+            pol = replace(pol, power_cap=np.asarray(power_cap, np.float32))
+        for leaf in ("k", "ucb_scale", "power_cap"):
+            if np.asarray(getattr(pol, leaf)).ndim:
+                raise ValueError(f"live policy leaf {leaf!r} must be a "
+                                 "scalar, got a grid")
+        self.policy = pol
+        self.seed = int(seed)
+        self.fault = fault
+        self.capacity = int(capacity) if capacity else max(len(w.prog), 1)
+        self.w = w
+
+        self._fvec = _fault_vec(fault or FaultConfig())
+        self._retries = bool(fault and fault.failure_prob > 0)
+        arrs = _workload_arrays(w)
+        C = self.capacity
+        arrs["prog"] = jnp.zeros(C, jnp.int32)
+        arrs["arrival"] = jnp.full(C, BIG, jnp.float32)
+        arrs["k_job"] = jnp.full(C, jnp.nan, jnp.float32)
+        self._arrs = arrs
+        self._n_out = (arrs["outage"][..., 1].size
+                       if "outage" in arrs else 0)
+
+        P, S = w.T_true.shape
+        if warm_start:
+            tabs0 = (jnp.asarray(w.C_true), jnp.asarray(w.T_true),
+                     jnp.ones((P, S), jnp.int32))
+        else:
+            tabs0 = (jnp.zeros((P, S)), jnp.zeros((P, S)),
+                     jnp.zeros((P, S), jnp.int32))
+        self.warm_start = bool(warm_start)
+
+        if pol.queue == "conservative":
+            build, carry0 = make_cons_step, cons_carry0
+        else:
+            build, carry0 = make_event_step, event_carry0
+        step = build(pol, placer, totals_only=False, retries=self._retries)
+        self._step_fn = step
+        self._step = jax.jit(step)
+        # live sessions open at t=0 (the batch scan opens at the first
+        # arrival; the extra advances to reach it are carry no-ops)
+        self._carry = carry0(self._arrs, pol, tabs0, totals_only=False,
+                             now0=0.0)
+        self._ctx = event_context(self._arrs, pol, self.seed, self._fvec)
+
+        self.n_submitted = 0
+        self.metrics = ServiceMetrics()
+        self.decisions: list[dict] = []
+        # realized per-job channels, accumulated exactly as
+        # ``_event_results`` scatters the scan's ys (f32 adds in step
+        # order), so ``result()`` totals match the batch run bitwise
+        self._E = np.zeros(C, np.float32)
+        self._sys = np.zeros(C, np.int32)
+        self._s0 = np.zeros(C, np.float32)
+        self._fin = np.zeros(C, np.float32)
+        self._wait = np.zeros(C, np.float32)
+        self._T = np.ones(C, np.float32)
+        self._bf = np.zeros(C, bool)
+
+        self._mgr = (CheckpointManager(checkpoint_dir, keep_n=keep_n)
+                     if checkpoint_dir else None)
+        self._save_step = 0
+
+    # ------------------------------------------------------------ intake
+    def submit(self, prog: int, arrival: float | None = None,
+               k: float | None = None) -> int:
+        """Register a job: program index, submit time (default: the
+        current clock), optional per-job K override.  Returns the job id.
+        Submitting an arrival earlier than the clock is an error — the
+        past is already decided."""
+        if self.n_submitted >= self.capacity:
+            raise RuntimeError(f"session full: capacity {self.capacity}")
+        if not 0 <= int(prog) < self.w.T_true.shape[0]:
+            raise ValueError(f"prog {prog} not in the facility catalog "
+                             f"(P={self.w.T_true.shape[0]})")
+        t = float(self.now if arrival is None else arrival)
+        if t < self.now:
+            raise ValueError(f"arrival {t} is in the past (now={self.now})")
+        if self.n_submitted and t < float(
+                self._arrs["arrival"][self.n_submitted - 1]):
+            raise ValueError("submissions must be arrival-ordered")
+        j = self.n_submitted
+        a = self._arrs
+        a["prog"] = a["prog"].at[j].set(int(prog))
+        a["arrival"] = a["arrival"].at[j].set(t)
+        a["k_job"] = a["k_job"].at[j].set(
+            np.nan if k is None else float(k))
+        self._ctx = event_context(a, self.policy, self.seed, self._fvec)
+        self.n_submitted += 1
+        self.metrics.observe_submit()
+        return j
+
+    # ------------------------------------------------------------- clock
+    @property
+    def now(self) -> float:
+        return float(self._carry.now)
+
+    def step_once(self, horizon: float = BIG) -> dict:
+        """One event step under ``horizon``; returns the decision record
+        (numpy scalars) and folds it into the metrics stream."""
+        t0 = time.perf_counter()
+        carry, out = self._step(self._ctx, self._carry,
+                                jnp.float32(horizon))
+        out = jax.device_get(out)
+        dt_us = (time.perf_counter() - t0) * 1e6
+        self._carry = carry
+        self._record(out)
+        self.metrics.observe_step(out, dt_us)
+        return out
+
+    def _record(self, out: dict):
+        """Fold one step's decision channels into the realized per-job
+        arrays — the live twin of the ``_event_results`` scatter."""
+        C = self.capacity
+        if bool(out["placed"]):
+            ja = int(out["j_add"])
+            if ja < C:
+                self._E[ja] += np.float32(out["E"])
+        if bool(out["final"]):
+            jf = int(out["j_fin"])
+            if jf < C:
+                self._sys[jf] = out["sys"]
+                self._s0[jf] = out["s0"]
+                self._fin[jf] = out["finish"]
+                self._wait[jf] = out["wait"]
+                self._T[jf] = out["T"]
+                self._bf[jf] = out["bf"]
+                self.decisions.append({
+                    "job": jf, "system": int(out["sys"]),
+                    "start": float(out["s0"]), "finish": float(out["finish"]),
+                    "wait": float(out["wait"]),
+                    "backfilled": bool(out["bf"]),
+                    "power": float(out["power"]), "now": float(out["now"]),
+                })
+
+    def drive(self, until: float = BIG) -> list[dict]:
+        """Step until quiescent under ``until``: no push, no placement,
+        no clock advance.  Returns the placement decisions emitted."""
+        n0 = len(self.decisions)
+        limit = 16 * self.capacity + self._n_out + 64
+        for _ in range(limit):
+            out = self.step_once(until)
+            if not (bool(out["pushed"]) or bool(out["placed"])
+                    or bool(out["advanced"])):
+                break
+        else:
+            raise RuntimeError("drive() exceeded its step budget — the "
+                               "carry is diverging (engine bug)")
+        return self.decisions[n0:]
+
+    def drain(self) -> list[dict]:
+        """Run the session to completion (open horizon)."""
+        return self.drive(BIG)
+
+    # ------------------------------------------------------------ result
+    def result(self) -> SimResult:
+        """The realized session as a ``SimResult`` over the submitted
+        jobs — totals computed with the batch epilogue's jnp expressions
+        over the accumulated per-job channels, under one jit (the power
+        totals' multiply-subtract must fuse exactly as it does inside
+        the batch scan's graph), so a full session matches
+        ``Scheduler.run`` bitwise (tests/test_service.py)."""
+        n = self.n_submitted
+        arrs, carry = self._arrs, self._carry
+
+        @partial(jax.jit, static_argnames=("n",))
+        def totals(E, wait, T_act, finish, busy, peak, cdel, n):
+            makespan = finish.max() if n else jnp.float32(0.0)
+            return dict(
+                total_energy=E.sum(), makespan=makespan,
+                total_wait=wait.sum(),
+                slowdown_sum=((wait + T_act) / T_act).sum(),
+                max_wait=wait.max() if n else jnp.float32(0.0),
+                **_power_totals(arrs, makespan, busy, peak, cdel))
+
+        E = jnp.asarray(self._E[:n])
+        wait = jnp.asarray(self._wait[:n])
+        T_act = jnp.asarray(self._T[:n])
+        finish = jnp.asarray(self._fin[:n])
+        sel = jnp.asarray(self._sys[:n])
+        prog = arrs["prog"][:n]
+        tot = totals(E, wait, T_act, finish, carry.busy, carry.peak,
+                     carry.cdel, n)
+        return SimResult(
+            **tot,
+            busy=carry.busy, C_tab=carry.C_tab, T_tab=carry.T_tab,
+            runs=carry.runs,
+            n_backfilled=carry.nbf,
+            system=sel, start=jnp.asarray(self._s0[:n]), finish=finish,
+            wait=wait, energy=E, runtime=T_act,
+            nodes=arrs["n_req"][prog, sel],
+            backfilled=jnp.asarray(self._bf[:n]),
+            axes=(), n_jobs=n, n_nodes=np.asarray(self.w.n_nodes),
+            programs=self.w.programs, systems=self.w.systems)
+
+    def carry_snapshot(self):
+        """Host copy of the live carry (tests pin what-if purity on it)."""
+        return jax.device_get(self._carry)
+
+    # -------------------------------------------------------- checkpoint
+    def _tree(self):
+        return {
+            "carry": self._carry,
+            "jobs": {k: self._arrs[k]
+                     for k in ("prog", "arrival", "k_job")},
+            "perjob": {"E": self._E, "sys": self._sys, "s0": self._s0,
+                       "fin": self._fin, "wait": self._wait, "T": self._T,
+                       "bf": self._bf},
+        }
+
+    def save(self, blocking: bool = True) -> int:
+        """Checkpoint the session (atomic; see checkpoint/manager.py).
+        Returns the checkpoint step id."""
+        if self._mgr is None:
+            raise RuntimeError("no checkpoint_dir configured")
+        step = self._save_step
+        self._mgr.save(step, self._tree(), metadata={
+            "n_submitted": self.n_submitted,
+            "decisions": self.decisions,
+            "metrics": self.metrics.snapshot(),
+        }, blocking=blocking)
+        self._save_step = step + 1
+        return step
+
+    def restore(self, step: int | None = None) -> bool:
+        """Restore the latest (or a specific) checkpoint into this
+        session; returns False when the directory holds none.  The
+        resumed session's remaining decisions are bit-identical to an
+        uninterrupted run (tests/test_service.py)."""
+        if self._mgr is None:
+            raise RuntimeError("no checkpoint_dir configured")
+        tree, step, meta = self._mgr.restore(self._tree(), step)
+        if tree is None:
+            return False
+        self._carry = jax.tree.map(jnp.asarray, tree["carry"])
+        for k in ("prog", "arrival", "k_job"):
+            self._arrs[k] = jnp.asarray(tree["jobs"][k])
+        self._ctx = event_context(self._arrs, self.policy, self.seed,
+                                  self._fvec)
+        pj = tree["perjob"]
+        self._E, self._sys, self._s0 = pj["E"], pj["sys"], pj["s0"]
+        self._fin, self._wait, self._T = pj["fin"], pj["wait"], pj["T"]
+        self._bf = pj["bf"]
+        self.n_submitted = int(meta["n_submitted"])
+        self.decisions = list(meta["decisions"])
+        self.metrics = ServiceMetrics.from_snapshot(meta["metrics"])
+        self._save_step = step + 1
+        return True
+
+    def __repr__(self):
+        return (f"Dispatcher(queue={self.policy.queue or 'fcfs'!r}, "
+                f"jobs={self.n_submitted}/{self.capacity}, "
+                f"now={self.now:.1f}, placed={len(self.decisions)})")

@@ -68,6 +68,7 @@ def test_committed_rows_carry_timed_flag():
     assert rows["queue_swf_easy_backfill"]["timed"]
     assert rows["queue_swf_conservative"]["timed"]
     assert rows["queue_swf_fcfs"]["timed"]
+    assert rows["service_decision_latency"]["timed"]
 
 
 def test_power_cap_rows_committed():
@@ -117,3 +118,30 @@ def test_backfill_warm_wallclock_gate(row, queue):
         f"{committed_fcfs:.0f}us) — if the regression is intentional, "
         f"regenerate BENCH_scheduler.json via "
         f"`python benchmarks/scheduler_ablation.py` and commit it")
+
+
+def test_service_decision_latency_gate():
+    """ISSUE 7: warm per-decision latency of the live dispatcher on the
+    SWF stream (same jitted step as the batch scan, called per event)
+    must stay within GATE x of the committed ``service_decision_latency``
+    row, machine-normalized through the same FCFS anchor.  The suite
+    itself also re-asserts live-vs-batch bit-identity, so this one test
+    is the whole service acceptance smoke on CI."""
+    from scheduler_ablation import (machine_speed_factor, queue_streams,
+                                    run_service)
+
+    rows = _committed_rows()
+    committed = rows["service_decision_latency"]["us_per_call"]
+    committed_fcfs = rows["queue_swf_fcfs"]["us_per_call"]
+
+    fresh_fcfs = _median_fcfs_us(queue_streams()["swf"])
+    (_, fresh, derived), = run_service()
+    assert "bit_identical=True" in derived
+
+    speed = machine_speed_factor(fresh_fcfs, committed_fcfs)
+    bound = GATE * committed * speed
+    assert fresh <= bound, (
+        f"service decision latency regressed: fresh {fresh:.0f}us/step > "
+        f"{GATE}x committed {committed:.0f}us (speed factor {speed:.2f}) "
+        f"— if intentional, regenerate BENCH_scheduler.json via "
+        f"`python benchmarks/scheduler_ablation.py --suites service`")

@@ -1,0 +1,295 @@
+"""Online scheduler service (ISSUE 7): the event core as live state.
+
+The acceptance criteria pinned here:
+
+  - a live ``Dispatcher`` session fed a stream event-by-event (submit
+    each job before driving past its arrival) reproduces the batch
+    ``Scheduler.run`` placements AND totals bit-identically — including
+    the swf ablation stream across all three queue disciplines;
+  - a session killed mid-stream and restored from its checkpoint
+    finishes with decisions/totals bit-identical to uninterrupted;
+  - a what-if query answers from a forked rollout without mutating the
+    live carry (carry snapshot equality);
+  - ``engine="events"`` (the service-facing alias of ``core=``) routes
+    the default EASY path onto the event core; its divergence from the
+    arrival-indexed EASY scan is real and documented below.
+"""
+
+import pathlib
+import sys
+
+import numpy as np
+import pytest
+import jax
+
+from repro.core import (JSCC_SYSTEMS, Scheduler, make_npb_workload,
+                        make_policy)
+from repro.service import Dispatcher, ServiceMetrics, whatif
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "benchmarks"))
+
+#: every total/per-job/table field a SimResult carries (bit-compared)
+FIELDS = ("system", "start", "finish", "wait", "energy", "runtime",
+          "backfilled", "total_energy", "makespan", "total_wait",
+          "slowdown_sum", "max_wait", "n_backfilled", "peak_power",
+          "idle_energy", "capped_delay", "busy", "C_tab", "T_tab", "runs")
+
+
+def small_stream():
+    return make_npb_workload(
+        JSCC_SYSTEMS, order=("BT", "EP", "IS", "LU", "SP"), repeats=2,
+        arrivals=np.arange(10, dtype=np.float32) * 30.0)
+
+
+def replay(w, disp):
+    """The live protocol: submit each job before driving past its
+    arrival, then drain."""
+    for j in range(len(w.prog)):
+        disp.drive(until=float(w.arrival[j]))
+        disp.submit(int(w.prog[j]), float(w.arrival[j]))
+    disp.drain()
+    return disp
+
+
+def assert_bit_identical(batch, live):
+    for f in FIELDS:
+        a = np.asarray(getattr(batch, f))
+        b = np.asarray(getattr(live, f))
+        assert a.tobytes() == b.tobytes(), \
+            f"{f}: batch {a} != live {b}"
+
+
+# ------------------------------------------------------ live bit-identity
+
+@pytest.mark.parametrize("queue", ["fcfs", "easy_backfill:window=4"])
+def test_live_replay_matches_batch(queue):
+    """Event-by-event dispatch reproduces the batch scan bitwise (the
+    extra quiescent steps a live session sees are carry no-ops)."""
+    w = small_stream()
+    pol = make_policy("paper", k=0.1)
+    batch = Scheduler(pol, warm_start=True, queue=queue,
+                      engine="events").run(w)
+    live = replay(w, Dispatcher(w, pol, warm_start=True, queue=queue))
+    assert_bit_identical(batch, live.result())
+    assert len(live.decisions) == len(w.prog)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("queue", ["fcfs", "easy_backfill:window=16",
+                                   "conservative:window=16"])
+def test_live_replay_swf_stream(queue):
+    """The acceptance stream: the swf ablation workload, all three
+    disciplines, placements and totals bit-identical to batch."""
+    from scheduler_ablation import queue_streams
+    w = queue_streams()["swf"]
+    pol = make_policy("paper", k=0.10)
+    batch = Scheduler(pol, warm_start=True, queue=queue,
+                      engine="events").run(w)
+    live = replay(w, Dispatcher(w, pol, warm_start=True, queue=queue))
+    assert_bit_identical(batch, live.result())
+
+
+def test_live_power_cap_session():
+    """A capped live session enforces the cap exactly as the batch scan
+    (deferral decisions ride the same step)."""
+    w = small_stream()
+    pol = make_policy("paper", k=0.1)
+    kw = dict(warm_start=True, queue="easy_backfill:window=4",
+              power_cap=45e3)
+    batch = Scheduler(pol, engine="events", **kw).run(w)
+    live = replay(w, Dispatcher(w, pol, **kw)).result()
+    assert_bit_identical(batch, live)
+    assert float(live.peak_power) <= 45e3 * (1 + 1e-6)
+
+
+# ------------------------------------------------------------ checkpoint
+
+def test_checkpoint_roundtrip_bit_identical(tmp_path):
+    """Save mid-stream, restore into a FRESH dispatcher, finish the
+    stream: decisions and totals match the uninterrupted session."""
+    w = small_stream()
+    pol = make_policy("paper", k=0.1)
+
+    def mk():
+        return Dispatcher(w, pol, warm_start=True,
+                          queue="easy_backfill:window=4",
+                          checkpoint_dir=str(tmp_path))
+
+    def feed(d, jobs):
+        for j in jobs:
+            d.drive(until=float(w.arrival[j]))
+            d.submit(int(w.prog[j]), float(w.arrival[j]))
+
+    d1 = mk()
+    feed(d1, range(6))
+    d1.save()
+    feed(d1, range(6, 10))
+    d1.drain()
+
+    d2 = mk()                      # fresh process-style restore path
+    assert d2.restore()
+    assert d2.n_submitted == 6
+    feed(d2, range(6, 10))
+    d2.drain()
+
+    assert d1.decisions == d2.decisions
+    assert_bit_identical(d1.result(), d2.result())
+
+
+def test_restore_empty_dir_is_noop(tmp_path):
+    d = Dispatcher(small_stream(), make_policy("paper", k=0.1),
+                   checkpoint_dir=str(tmp_path))
+    assert not d.restore()
+    assert d.n_submitted == 0
+
+
+# --------------------------------------------------------------- what-if
+
+def test_whatif_does_not_mutate_live_carry():
+    """The rollout is a pure fork: the live carry, job arrays, and
+    counters are bitwise unchanged by a query."""
+    w = small_stream()
+    d = Dispatcher(w, make_policy("paper", k=0.1), warm_start=True,
+                   queue="easy_backfill:window=4", capacity=12)
+    for j in range(6):
+        d.drive(until=float(w.arrival[j]))
+        d.submit(int(w.prog[j]), float(w.arrival[j]))
+    before = d.carry_snapshot()
+    jobs_before = jax.device_get(
+        {k: d._arrs[k] for k in ("prog", "arrival", "k_job")})
+    n_before = d.n_submitted
+
+    proj = whatif(d, prog=2)
+
+    after = d.carry_snapshot()
+    for a, b in zip(jax.tree.leaves(before), jax.tree.leaves(after)):
+        assert np.array_equal(a, b, equal_nan=True)
+    jobs_after = jax.device_get(
+        {k: d._arrs[k] for k in ("prog", "arrival", "k_job")})
+    for k in jobs_before:
+        assert np.array_equal(jobs_before[k], jobs_after[k],
+                              equal_nan=True)
+    assert d.n_submitted == n_before
+    assert proj["job"]["wait"] >= 0 and proj["makespan"] > 0
+
+
+def test_whatif_projects_the_actual_submission():
+    """Submitting the queried job realizes exactly the projection (no
+    later arrivals intervene in this stream, so the rollout is exact)."""
+    w = small_stream()
+    d = Dispatcher(w, make_policy("paper", k=0.1), warm_start=True,
+                   capacity=12)
+    for j in range(10):
+        d.drive(until=float(w.arrival[j]))
+        d.submit(int(w.prog[j]), float(w.arrival[j]))
+    d.drain()
+    proj = whatif(d, prog=3)
+    j = d.submit(3)
+    d.drain()
+    dec = [x for x in d.decisions if x["job"] == j]
+    assert len(dec) == 1
+    assert dec[0]["system"] == proj["job"]["system"]
+    assert dec[0]["start"] == pytest.approx(proj["job"]["start"])
+    assert dec[0]["finish"] == pytest.approx(proj["job"]["finish"])
+
+
+def test_whatif_reports_cap_headroom():
+    w = small_stream()
+    d = Dispatcher(w, make_policy("paper", k=0.1), warm_start=True,
+                   power_cap=60e3, capacity=12)
+    proj = whatif(d, prog=0, arrival=0.0)
+    assert np.isfinite(proj["cap_headroom"])
+    assert proj["peak_power"] + proj["cap_headroom"] == pytest.approx(60e3)
+
+
+# ------------------------------------------------- engine= alias / EASY
+
+def test_engine_alias_matches_core():
+    w = small_stream()
+    pol = make_policy("paper", k=0.1)
+    ra = Scheduler(pol, warm_start=True, core="events").run(w)
+    rb = Scheduler(pol, warm_start=True, engine="events").run(w)
+    assert_bit_identical(ra, rb)
+
+
+def test_engine_alias_conflict_raises():
+    with pytest.raises(ValueError, match="conflicts"):
+        Scheduler("paper", core="arrival", engine="events")
+
+
+@pytest.mark.slow
+def test_easy_events_vs_arrival_divergence_documented():
+    """DOCUMENTED DIVERGENCE: the arrival-indexed EASY scan evaluates
+    backfills once per arrival step and may grant a backfill a FUTURE
+    start; the event core re-evaluates at every completion event and
+    only starts backfills at the current event.  On a contended stream
+    the event core therefore finds strictly more backfill opportunities
+    (it looks again whenever nodes free up) — placements are NOT
+    bit-identical, while the FCFS path (no backfill axis) is (asserted
+    per policy in tests/test_event_core.py)."""
+    from scheduler_ablation import queue_streams
+    w = queue_streams()["swf"]
+    pol = make_policy("paper", k=0.10)
+    qs = "easy_backfill:window=16"
+    ra = Scheduler(pol, warm_start=True, queue=qs).run(w)
+    re = Scheduler(pol, warm_start=True, queue=qs, engine="events").run(w)
+    # the divergence is real...
+    assert int(re.n_backfilled) != int(ra.n_backfilled)
+    # ...directional (the event core backfills at least as much, and no
+    # later than arrival-indexed EASY on total wait)...
+    assert int(re.n_backfilled) >= int(ra.n_backfilled)
+    assert float(re.total_wait) <= float(ra.total_wait) * 1.05
+    # ...and bounded: same jobs, same systems universe, close makespans
+    assert float(re.makespan) == pytest.approx(float(ra.makespan),
+                                               rel=0.10)
+
+
+# ------------------------------------------------------- intake / clock
+
+def test_submit_validation():
+    w = small_stream()
+    d = Dispatcher(w, make_policy("paper", k=0.1), capacity=2)
+    d.submit(0, 0.0)
+    with pytest.raises(ValueError, match="catalog"):
+        d.submit(99, 1.0)
+    d.submit(1, 1.0)
+    with pytest.raises(RuntimeError, match="full"):
+        d.submit(0, 2.0)
+
+
+def test_submit_in_the_past_rejected():
+    w = small_stream()
+    d = Dispatcher(w, make_policy("paper", k=0.1), warm_start=True)
+    d.submit(0, 50.0)
+    d.drive(until=60.0)
+    assert d.now >= 50.0
+    with pytest.raises(ValueError, match="past"):
+        d.submit(1, 10.0)
+
+
+def test_drive_horizon_gates_clock():
+    """The clock never runs past the horizon — a live session cannot
+    decide ahead of arrivals it has not been told about."""
+    w = small_stream()
+    d = Dispatcher(w, make_policy("paper", k=0.1), warm_start=True)
+    d.submit(0, 0.0)
+    d.drive(until=10.0)
+    assert d.now <= 10.0
+    d.drive(until=1e4)
+    assert d.now <= 1e4
+
+
+def test_metrics_stream():
+    w = small_stream()
+    d = Dispatcher(w, make_policy("paper", k=0.1), warm_start=True)
+    replay(w, d)
+    m = d.metrics
+    assert m.n_submitted == 10 and m.n_placed == 10 and m.n_finished == 10
+    assert m.queue_depth == 0
+    assert m.peak_power > 0 and m.latency_us_total > 0
+    snap = m.snapshot()
+    assert snap["mean_latency_us"] == pytest.approx(
+        m.latency_us_total / m.n_steps)
+    m2 = ServiceMetrics.from_snapshot(snap)
+    assert m2 == m

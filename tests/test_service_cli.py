@@ -1,0 +1,82 @@
+"""Service CLI (launch/scheduler_service.py): the JSONL loop end to end.
+
+Subprocess tests (slow tier): a real scheduling session scripted over
+stdin/stdout, then the kill/restore round-trip the CI ``service-smoke``
+step exercises — first process checkpoints mid-stream and dies, second
+process ``--restore``s and finishes; the union of decisions must equal an
+uninterrupted session's.
+"""
+
+import json
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+pytestmark = pytest.mark.slow
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+BASE = [sys.executable, "-m", "repro.launch.scheduler_service",
+        "--queue", "easy_backfill:window=4", "--warm-start",
+        "--capacity", "16"]
+
+
+def run_cli(lines, *extra):
+    env = {"PYTHONPATH": str(ROOT / "src"), "PATH": "/usr/bin:/bin",
+           "JAX_PLATFORMS": "cpu", "HOME": "/tmp"}
+    proc = subprocess.run(
+        BASE + list(extra), input="\n".join(json.dumps(x) for x in lines),
+        capture_output=True, text=True, timeout=600, env=env, cwd=ROOT)
+    assert proc.returncode == 0, proc.stderr
+    return [json.loads(line) for line in proc.stdout.splitlines() if line]
+
+
+STREAM = [{"op": "submit", "prog": "BT", "arrival": 0.0},
+          {"op": "submit", "prog": "LU", "arrival": 30.0},
+          {"op": "submit", "prog": "SP", "arrival": 60.0},
+          {"op": "submit", "prog": "EP", "arrival": 90.0}]
+
+
+def test_session_loop():
+    """One full session: submits, a what-if, a drain, metrics, totals —
+    every response ok, errors surfaced without killing the loop."""
+    out = run_cli(STREAM + [
+        {"op": "whatif", "prog": "IS"},
+        {"op": "submit", "prog": "nope"},           # error: loop survives
+        {"op": "drain"},
+        {"op": "metrics"},
+        {"op": "result"},
+    ])
+    assert [r["ok"] for r in out] == [True] * 5 + [False] + [True] * 3
+    assert "unknown program" in out[5]["error"]
+    proj = out[4]
+    assert proj["job"]["wait"] >= 0 and proj["peak_power"] > 0
+    m = out[-2]["metrics"]
+    assert m["n_submitted"] == 4 and m["n_finished"] == 4
+    assert m["queue_depth"] == 0 and m["mean_latency_us"] > 0
+    t = out[-1]["totals"]
+    assert t["total_energy"] > 0 and t["makespan"] > 0
+    assert out[-1]["n_jobs"] == 4
+
+
+def test_kill_and_restore_matches_uninterrupted(tmp_path):
+    """Checkpoint mid-stream, die, ``--restore`` in a new process, finish:
+    decisions and totals match one uninterrupted session."""
+    ck = ["--checkpoint-dir", str(tmp_path)]
+    head, tail = STREAM[:2], STREAM[2:]
+    finish = [{"op": "drain"}, {"op": "result"}]
+
+    first = run_cli(head + [{"op": "drive", "until": 60.0},
+                            {"op": "checkpoint"}], *ck)
+    assert all(r["ok"] for r in first)
+    assert first[-1]["step"] == 0
+
+    second = run_cli(tail + finish, *ck, "--restore")
+    assert all(r["ok"] for r in second)
+    banner = second[0]
+    assert banner["resumed"] and banner["n_submitted"] == 2
+
+    solo = run_cli(STREAM + finish)
+    assert solo[-1]["totals"] == second[-1]["totals"]
+    assert solo[-1]["n_jobs"] == second[-1]["n_jobs"] == 4
