@@ -343,6 +343,15 @@ def run_service():
              f";peak={m.peak_power / 1e3:.1f}kW;bit_identical=True")]
 
 
+def run_dvfs_pareto():
+    """DVFS x selection Pareto lattice (ISSUE 8): one leaf-batched
+    ``Scheduler.run`` over a (power_cap x freq_weight x K) grid of the
+    ``dvfs_paper`` policy; frontier extraction, single-compilation and
+    baseline-domination assertions live in benchmarks/dvfs_pareto.py."""
+    import dvfs_pareto
+    return dvfs_pareto.run()
+
+
 #: The module's suite registry — the single source for both harnesses
 #: (benchmarks/run.py spreads it into its suite list; main() below writes
 #: the same rows to BENCH_scheduler.json).
@@ -352,7 +361,8 @@ SUITES = (("ablation", run),
           ("queue_disciplines", run_queue_disciplines),
           ("window_scaling", run_window_scaling),
           ("power_caps", run_power_caps),
-          ("service", run_service))
+          ("service", run_service),
+          ("dvfs_pareto", run_dvfs_pareto))
 
 
 def main(argv=None):

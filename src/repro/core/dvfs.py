@@ -1,12 +1,29 @@
-"""DVFS power-capping as an extra scheduling dimension (DESIGN.md §9.4).
+"""DVFS frequency scaling as a scheduling dimension.
 
 The paper cites frequency/voltage scaling ([7], [8]) as the second classic
 energy lever.  We model a frequency multiplier phi on the compute phases:
 runtime of compute phases scales 1/phi, dynamic compute power scales ~phi^3
-(voltage tracks frequency), idle/net/disk unchanged.  Each (system, phi)
-pair becomes a VIRTUAL system — the paper's algorithm then chooses over
-systems AND frequency levels with the same (C, T, K) machinery, unifying
-both energy levers under one decision rule (beyond-paper contribution).
+(voltage tracks frequency), idle/net/disk unchanged.
+
+Two integrations live here (docs/API.md "Frequency axis"):
+
+- **first-class tier axis** (the engine path): ``Policy.freq_tiers``
+  expands every placement candidate to a (system x tier) pair, scored by
+  the per-tier tables built below — ``tier_tables`` (jnp, the scan cores)
+  and ``tier_tables_py`` (float64, the differential mirror).  Per tier phi
+  and the seed phase model (``workload_model.predict_energy``):
+
+      T(phi) = T + T_comp * (1/phi - 1)
+      E(phi) = E + E_comp * (phi^2 - 1)
+                 + n_req * idle_w * T_comp * (1/phi - 1)
+
+  (dynamic compute energy cpu_w * t_comp picks up phi^3 power over 1/phi
+  time = phi^2; the stretched tail still draws idle watts).  The unit
+  tier's entries are the base tables bit for bit.
+- **virtual systems** (the legacy seed path): ``dvfs_variant`` /
+  ``expand_with_dvfs`` bake each (system, phi) pair into a separate
+  ``ComputeSystem``.  Kept for A/B comparisons; new code should sweep
+  ``freq_tiers`` instead (migration notes in docs/API.md).
 """
 
 from __future__ import annotations
@@ -14,10 +31,13 @@ from __future__ import annotations
 import dataclasses
 
 import numpy as np
+import jax.numpy as jnp
 
 from repro.core.systems import ComputeSystem
 from repro.core.workload_model import (NPB_PROFILES, NPB_NODES,
                                        predict_phases)
+
+_TINY = 1e-30
 
 
 def dvfs_variant(sys: ComputeSystem, phi: float) -> ComputeSystem:
@@ -46,3 +66,104 @@ def dvfs_npb_workload(systems, phis=(1.0, 0.8, 0.6), **kw):
         for prog in NPB_NODES:
             NPB_NODES[prog].setdefault(s.name, NPB_NODES[prog][host])
     return make_npb_workload(expanded, **kw)
+
+
+# ------------------------------------------------- first-class tier axis
+
+def phase_split(w) -> tuple:
+    """``(T_comp, E_comp)`` float64 [P, S] for a ``Workload``.
+
+    Uses the workload's explicit phase split when present (NPB workloads
+    carry the exact ``predict_phases`` decomposition); otherwise the
+    engine default for trace/stream workloads without one: the whole
+    runtime is compute-phase and every non-idle joule is dynamic
+    (``E_comp = max(E - n_req * idle_w * T, 0)``) — the most DVFS-sensitive
+    reading consistent with the first-order trace energy model.
+    """
+    T = np.asarray(w.T_true, np.float64)
+    E = np.asarray(w.E_true, np.float64)
+    Tc = T if w.T_comp is None else np.asarray(w.T_comp, np.float64)
+    if w.E_comp is not None:
+        Ec = np.asarray(w.E_comp, np.float64)
+    else:
+        idle = (np.zeros(len(w.n_nodes)) if w.idle_w is None
+                else np.asarray(w.idle_w, np.float64))
+        Ec = np.maximum(E - np.asarray(w.n_req, np.float64) * idle[None, :]
+                        * T, 0.0)
+    return Tc, Ec
+
+
+def _tier_model(T, E, C, w_pow, Tc, Ec, n_idle, phi, xp):
+    """Shared per-tier table math (``xp`` = jnp or np).  All inputs are
+    [P, 1, S] except ``phi`` [1, F, 1]; unit tiers short-circuit to the
+    base values bit for bit (``where`` on phi == 1.0, so the no-op axis is
+    exactly free even under f32 rounding)."""
+    unit = phi == 1.0
+    stretch = Tc * (1.0 / phi - 1.0)
+    T_f = xp.where(unit, T, T + stretch)
+    E_f = xp.where(unit, E, E + Ec * (phi ** 2 - 1.0) + n_idle * stretch)
+    r_t = xp.where(unit, 1.0, T_f / xp.maximum(T, _TINY))
+    r_c = xp.where(unit, 1.0, E_f / xp.maximum(E, _TINY))
+    C_f = xp.where(unit, C, C * r_c)
+    w_f = xp.where(unit, w_pow, E_f / xp.maximum(T_f, _TINY))
+    return {"T": T_f, "E": E_f, "C": C_f, "rt": r_t, "rc": r_c, "w": w_f}
+
+
+def tier_tables(arrs: dict, tiers: tuple) -> dict:
+    """Per-tier ground-truth tables for the jitted scan cores.
+
+    ``arrs`` is the ``_workload_arrays`` dict; returns [P, F, S] f32
+    tables: absolute ``T``/``E``/``C``/``w`` (runtime, joules, J/Mop,
+    average watts) plus the ratios ``rt``/``rc`` that scale *learned*
+    table rows and predictions at selection time (learned tables stay
+    [P, S] — they are always updated with base, tier-0 observations).
+    """
+    phi = jnp.asarray(tiers, jnp.float32)[None, :, None]
+    one = lambda x: x[:, None, :]
+    n_idle = one(arrs["n_req"] * arrs["idle_w"][None, :])
+    return _tier_model(one(arrs["T_true"]), one(arrs["E_true"]),
+                       one(arrs["C_true"]), one(arrs["w_pow"]),
+                       one(arrs["T_comp"]), one(arrs["E_comp"]),
+                       n_idle, phi, jnp)
+
+
+def tier_tables_py(w, tiers: tuple) -> dict:
+    """float64 twin of ``tier_tables`` for the differential mirror."""
+    phi = np.asarray(tiers, np.float64)[None, :, None]
+    Tc, Ec = phase_split(w)
+    idle = (np.zeros(len(w.n_nodes)) if w.idle_w is None
+            else np.asarray(w.idle_w, np.float64))
+    T = np.asarray(w.T_true, np.float64)
+    E = np.asarray(w.E_true, np.float64)
+    one = lambda x: np.asarray(x, np.float64)[:, None, :]
+    n_idle = one(np.asarray(w.n_req, np.float64) * idle[None, :])
+    w_pow = E / np.maximum(T, _TINY)
+    return _tier_model(one(T), one(E), one(np.asarray(w.C_true)),
+                       one(w_pow), one(Tc), one(Ec), n_idle, phi, np)
+
+
+def npb_phase_split(systems, programs, N) -> tuple:
+    """Exact ``(T_comp, E_comp)`` [P, S] for an NPB workload: compute-phase
+    seconds from ``predict_phases`` at the Table 6 node counts, dynamic
+    compute joules ``n * cpu_w * t_comp``."""
+    P, S = len(programs), len(systems)
+    Tc = np.zeros((P, S))
+    Ec = np.zeros((P, S))
+    for pi, prog in enumerate(programs):
+        for si, sys in enumerate(systems):
+            n = int(N[pi, si])
+            t_comp, _, _ = predict_phases(NPB_PROFILES[prog], sys, n)
+            Tc[pi, si] = t_comp
+            Ec[pi, si] = n * sys.cpu_w * t_comp
+    return Tc, Ec
+
+
+def pareto_mask(energy, makespan) -> np.ndarray:
+    """Boolean mask of the non-dominated (energy, makespan) points
+    (minimizing both).  A point is dominated when another is <= on both
+    objectives and strictly < on at least one; ties survive together."""
+    e = np.asarray(energy, np.float64).ravel()
+    m = np.asarray(makespan, np.float64).ravel()
+    dom = ((e[None, :] <= e[:, None]) & (m[None, :] <= m[:, None])
+           & ((e[None, :] < e[:, None]) | (m[None, :] < m[:, None])))
+    return ~dom.any(axis=1)

@@ -59,6 +59,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core.dvfs import npb_phase_split, phase_split, tier_tables
 from repro.core.policy import (BIG, UNCAPPED, Policy, apply_queue_spec,
                                make_policy, select, select_batched)
 from repro.core.result import SimResult, CampaignResult
@@ -142,6 +143,12 @@ class Workload:
     # [S] per-node idle watts (systems.py power model); None = 0 W (no
     # idle draw, power metrics degenerate to job-attributed power only).
     idle_w: np.ndarray | None = None
+    # [P, S] compute-phase seconds / dynamic compute joules — the
+    # DVFS-sensitive share of T_true / E_true (core/dvfs.py tier model).
+    # None = engine defaults (dvfs.phase_split): the whole runtime is
+    # compute-phase and every non-idle joule is dynamic.
+    T_comp: np.ndarray | None = None
+    E_comp: np.ndarray | None = None
 
 
 def make_npb_workload(systems, order=("BT", "EP", "IS", "LU", "SP"),
@@ -159,6 +166,7 @@ def make_npb_workload(systems, order=("BT", "EP", "IS", "LU", "SP"),
     noise = (1.0 + pred_noise * rng.standard_normal(C.shape)) if pred_noise else 1.0
     seq = list(order) * repeats
     J = len(seq)
+    T_comp, E_comp = npb_phase_split(systems, programs, N)
     return Workload(
         prog=np.array([pidx[p] for p in seq], np.int32),
         arrival=np.zeros(J, np.float32) if arrivals is None
@@ -171,6 +179,7 @@ def make_npb_workload(systems, order=("BT", "EP", "IS", "LU", "SP"),
         programs=programs, systems=tuple(s.name for s in systems),
         outage=None if outage is None else np.asarray(outage, np.float32),
         idle_w=np.array([s.idle_w for s in systems], np.float32),
+        T_comp=T_comp, E_comp=E_comp,
     )
 
 
@@ -205,6 +214,11 @@ def _workload_arrays(w: Workload) -> dict:
         "idle_w": jnp.zeros(len(w.n_nodes), jnp.float32)
         if w.idle_w is None else jnp.asarray(w.idle_w, jnp.float32),
     }
+    # DVFS tier model inputs (explicit phase split, or the trace-workload
+    # defaults — see dvfs.phase_split); consumed only under freq_tiers
+    T_comp, E_comp = phase_split(w)
+    arrs["T_comp"] = jnp.asarray(T_comp, jnp.float32)
+    arrs["E_comp"] = jnp.asarray(E_comp, jnp.float32)
     if w.outage is not None and w.outage.size:
         arrs["outage"] = jnp.asarray(w.outage, jnp.float32)
     return arrs
@@ -275,6 +289,33 @@ def _idle_energy(arrs, makespan, busy):
             - jnp.sum(idle_w * busy))
 
 
+def _tier_rows(tt, p, C_row, T_row, runs_row, avail_row, C_pred_row,
+               T_pred_row):
+    """Expand one job's (or a [W]-batched set of) selection rows over the
+    (tier x system) candidate axis, tier-major (flat index = f * S + s,
+    so tier 0 / phi = 1.0 occupies the first S entries and argmin
+    tie-breaks anchor at full frequency).
+
+    ``tt`` is the ``tier_tables`` dict; learned rows and predictions are
+    scaled by the per-tier energy/runtime ratios (unit ratios are exactly
+    1.0, so tier-0 entries are the base rows bit for bit), run counts are
+    tier-independent (tables always learn base observations), and
+    ``avail_row`` is tiled when per-system ([..., S]) or flattened when
+    already per-(tier, system) ([..., F, S] — the conservative core's
+    per-tier earliest-fit)."""
+    rc, rt = tt["rc"][p], tt["rt"][p]                    # [..., F, S]
+    F, S = rc.shape[-2], rc.shape[-1]
+    flat = lambda x: x.reshape(x.shape[:-2] + (F * S,))
+    tile = lambda x: flat(jnp.broadcast_to(x[..., None, :],
+                                           x.shape[:-1] + (F, S)))
+    avail_x = flat(avail_row) if avail_row.shape == rc.shape \
+        else tile(avail_row)
+    return (flat(C_row[..., None, :] * rc), flat(T_row[..., None, :] * rt),
+            tile(runs_row), avail_x,
+            flat(C_pred_row[..., None, :] * rc),
+            flat(T_pred_row[..., None, :] * rt))
+
+
 def _scan_sim(arrs: dict, policy: Policy, warm_start: bool,
               placer: str | None, totals_only: bool, seed, fvec,
               easy_eval: str = "batched", core: str = "arrival",
@@ -325,6 +366,9 @@ def _scan_sim(arrs: dict, policy: Policy, warm_start: bool,
                               kvec, sel_key, fault_key, fvec, tabs0,
                               easy_eval)
 
+    tiered = policy.tiered
+    tt = tier_tables(arrs, policy.freq_tiers) if tiered else None
+
     def step(carry, xs):
         node_free, C_tab, T_tab, runs, acc = carry
         j, p, arr, k = xs
@@ -332,15 +376,34 @@ def _scan_sim(arrs: dict, policy: Policy, warm_start: bool,
         nreq_row = n_req[p]                                      # [S]
         kth, avail = _earliest(node_free, nreq_row, arr, placer, outage)
 
-        sel = select(
-            policy, c_row=C_tab[p], t_row=T_tab[p], runs_row=runs[p],
-            avail_row=avail, k=k, c_pred_row=C_pred[p], t_pred_row=T_pred[p],
-            key=jax.random.fold_in(sel_key, j))
+        key = jax.random.fold_in(sel_key, j)
+        if tiered:
+            c_x, t_x, r_x, a_x, cp_x, tp_x = _tier_rows(
+                tt, p, C_tab[p], T_tab[p], runs[p], avail, C_pred[p],
+                T_pred[p])
+            sel_x = select(policy, c_row=c_x, t_row=t_x, runs_row=r_x,
+                           avail_row=a_x, k=k, c_pred_row=cp_x,
+                           t_pred_row=tp_x, key=key)
+            f = (sel_x // S).astype(jnp.int32)
+            sel = sel_x % S
+        else:
+            f = jnp.int32(0)
+            sel = select(
+                policy, c_row=C_tab[p], t_row=T_tab[p], runs_row=runs[p],
+                avail_row=avail, k=k, c_pred_row=C_pred[p],
+                t_pred_row=T_pred[p], key=key)
 
         factor = _fault_factor(fault_key, j, fvec)
-        T_act = T_true[p, sel] * factor
+        # tables learn base (tier-0) observations — a tier choice changes
+        # the realized runtime/energy, never the learned profile
         C_act = C_true[p, sel] * factor
-        E_act = E_true[p, sel] * factor
+        T_upd = T_true[p, sel] * factor
+        if tiered:
+            T_act = tt["T"][p, f, sel] * factor
+            E_act = tt["E"][p, f, sel] * factor
+        else:
+            T_act = T_upd
+            E_act = E_true[p, sel] * factor
         start = avail[sel]
         finish = start + T_act
 
@@ -349,7 +412,7 @@ def _scan_sim(arrs: dict, policy: Policy, warm_start: bool,
 
         n = runs[p, sel].astype(jnp.float32)
         C_tab = C_tab.at[p, sel].set((C_tab[p, sel] * n + C_act) / (n + 1))
-        T_tab = T_tab.at[p, sel].set((T_tab[p, sel] * n + T_act) / (n + 1))
+        T_tab = T_tab.at[p, sel].set((T_tab[p, sel] * n + T_upd) / (n + 1))
         runs = runs.at[p, sel].add(1)
 
         wait = start - arr
@@ -366,7 +429,7 @@ def _scan_sim(arrs: dict, policy: Policy, warm_start: bool,
                    jnp.maximum(wait_max, wait))
             out = None
         else:
-            out = (sel, start, finish, wait, E_act, T_act)
+            out = (sel, start, finish, wait, E_act, T_act, f)
         return (node_free, C_tab, T_tab, runs, acc), out
 
     acc0 = ((jnp.zeros(3, jnp.float32), jnp.zeros(3, jnp.float32),
@@ -385,13 +448,13 @@ def _scan_sim(arrs: dict, policy: Policy, warm_start: bool,
                 "total_wait": sums[1], "slowdown_sum": sums[2],
                 "max_wait": wait_max, "busy": busy,
                 **_power_totals(arrs, fin_max, busy), **tabs}
-    sel, start, finish, wait, E, T_act = ys
+    sel, start, finish, wait, E, T_act, tier = ys
     nodes = n_req[prog, sel]                                     # [J]
     busy = jnp.zeros(S, jnp.float32).at[sel].add(T_act * nodes)
     makespan = finish.max()
     return {
         "system": sel, "start": start, "finish": finish, "wait": wait,
-        "energy": E, "runtime": T_act, "nodes": nodes,
+        "energy": E, "runtime": T_act, "nodes": nodes, "tier": tier,
         "backfilled": jnp.zeros(J, bool),
         "total_energy": E.sum(), "makespan": makespan,
         "total_wait": wait.sum(), "max_wait": wait.max(),
@@ -467,6 +530,12 @@ def _scan_sim_easy(arrs: dict, policy: Policy, placer: str | None,
     J = prog.shape[0]
     W = int(policy.window)
     Wc = W + 1                           # buffer capacity (push-then-place)
+    tiered = policy.tiered
+    if tiered and easy_eval != "batched":
+        raise ValueError("freq_tiers requires easy_eval='batched' (the "
+                         "unrolled loop predates the tier axis and exists "
+                         "only as the single-tier bit-identity reference)")
+    tt = tier_tables(arrs, policy.freq_tiers) if tiered else None
 
     def sel_for(j, node_free, C_tab, T_tab, runs):
         """Policy selection + earliest start for job id j (sentinel-safe:
@@ -493,18 +562,32 @@ def _scan_sim_easy(arrs: dict, policy: Policy, placer: str | None,
                                         arrival[jjs][:, None], placer,
                                         outage)                   # [Wc, S]
         keys = jax.vmap(lambda j: jax.random.fold_in(sel_key, j))(jjs)
-        sels = select_batched(
-            policy, c_rows=C_tab[ps], t_rows=T_tab[ps], runs_rows=runs[ps],
-            avail_rows=avails, k=kvec[jjs], c_pred_rows=C_pred[ps],
-            t_pred_rows=T_pred[ps], keys=keys)                    # [Wc]
+        if tiered:
+            c_x, t_x, runs_x, avail_x, cp_x, tp_x = _tier_rows(
+                tt, ps, C_tab[ps], T_tab[ps], runs[ps], avails,
+                C_pred[ps], T_pred[ps])
+            sels_x = select_batched(
+                policy, c_rows=c_x, t_rows=t_x, runs_rows=runs_x,
+                avail_rows=avail_x, k=kvec[jjs], c_pred_rows=cp_x,
+                t_pred_rows=tp_x, keys=keys)                      # [Wc]
+            fs = (sels_x // S).astype(jnp.int32)
+            sels = sels_x % S
+        else:
+            sels = select_batched(
+                policy, c_rows=C_tab[ps], t_rows=T_tab[ps],
+                runs_rows=runs[ps], avail_rows=avails, k=kvec[jjs],
+                c_pred_rows=C_pred[ps], t_pred_rows=T_pred[ps],
+                keys=keys)                                        # [Wc]
+            fs = jnp.zeros(Wc, jnp.int32)
         factors = jax.vmap(lambda j: _fault_factor(fault_key, j, fvec))(jjs)
         idx = jnp.arange(Wc)
         starts = avails[idx, sels]                                # [Wc]
-        T_acts = T_true[ps, sels] * factors
+        T_acts = (tt["T"][ps, fs, sels] if tiered
+                  else T_true[ps, sels]) * factors
         needs = n_req[ps, sels]
         trials = jax.vmap(_alloc, in_axes=(None, 0, 0, 0, 0))(
             node_free, sels, kths[idx, sels], needs, starts + T_acts)
-        return jjs, ps, sels, starts, T_acts, factors, needs, trials
+        return jjs, ps, sels, fs, starts, T_acts, factors, needs, trials
 
     def step(carry, xs):
         node_free, C_tab, T_tab, runs, acc, pend, nbf = carry
@@ -521,7 +604,7 @@ def _scan_sim_easy(arrs: dict, policy: Policy, placer: str | None,
 
         if easy_eval == "batched":
             # one batched evaluation of all Wc slots; slot 0 is the head
-            jjs, ps, sels, starts, T_acts, factors, needs, trials = \
+            jjs, ps, sels, fs, starts, T_acts, factors, needs, trials = \
                 eval_candidates(node_free, C_tab, T_tab, runs, pend)
             hj, p_h, sel_h = jjs[0], ps[0], sels[0]
             r_h = starts[0]                       # head reservation
@@ -556,7 +639,7 @@ def _scan_sim_easy(arrs: dict, policy: Policy, placer: str | None,
 
             # gather the chosen slot: its trial allocation was computed
             # against the real starting node_free, so it IS the placement
-            jj, p, sel = jjs[ci], ps[ci], sels[ci]
+            jj, p, sel, f = jjs[ci], ps[ci], sels[ci], fs[ci]
             factor = factors[ci]
             T_act = T_acts[ci]
             start = starts[ci]
@@ -596,6 +679,7 @@ def _scan_sim_easy(arrs: dict, policy: Policy, placer: str | None,
             j_pl = jnp.where(placed, pend[jnp.minimum(chosen, Wc - 1)], J)
             jj, p, kth, avail, sel = sel_for(j_pl, node_free, C_tab, T_tab,
                                              runs)
+            f = jnp.int32(0)                      # unrolled path is untier
             factor = _fault_factor(fault_key, jj, fvec)
             T_act = T_true[p, sel] * factor
             start = avail[sel]
@@ -605,15 +689,18 @@ def _scan_sim_easy(arrs: dict, policy: Policy, placer: str | None,
                 _alloc(node_free, sel, kth[sel], need, start + T_act),
                 node_free)
 
+        # learned tables always absorb BASE (tier-0) observations; the
+        # recorded energy/runtime use the tier-scaled values
         C_act = C_true[p, sel] * factor
-        E_act = E_true[p, sel] * factor
+        T_upd = T_true[p, sel] * factor
+        E_act = (tt["E"][p, f, sel] if tiered else E_true[p, sel]) * factor
         finish = start + T_act
 
         n = runs[p, sel].astype(jnp.float32)
         C_tab = C_tab.at[p, sel].set(jnp.where(
             placed, (C_tab[p, sel] * n + C_act) / (n + 1), C_tab[p, sel]))
         T_tab = T_tab.at[p, sel].set(jnp.where(
-            placed, (T_tab[p, sel] * n + T_act) / (n + 1), T_tab[p, sel]))
+            placed, (T_tab[p, sel] * n + T_upd) / (n + 1), T_tab[p, sel]))
         runs = runs.at[p, sel].add(jnp.where(placed, 1, 0))
 
         was_backfill = placed & (chosen > 0)
@@ -638,7 +725,7 @@ def _scan_sim_easy(arrs: dict, policy: Policy, placer: str | None,
             out = None
         else:
             out = (j_pl, sel, start, finish, wait, E_act, T_act,
-                   was_backfill)
+                   was_backfill, f)
         return (node_free, C_tab, T_tab, runs, acc, pend, nbf), out
 
     acc0 = ((jnp.zeros(3, jnp.float32), jnp.zeros(3, jnp.float32),
@@ -664,7 +751,7 @@ def _scan_sim_easy(arrs: dict, policy: Policy, placer: str | None,
                 **_power_totals(arrs, fin_max, busy), **tabs}
 
     # scatter per-step outputs back to arrival order; sentinel ids drop
-    j_pl, sel_s, start_s, fin_s, wait_s, E_s, T_s, bf_s = ys
+    j_pl, sel_s, start_s, fin_s, wait_s, E_s, T_s, bf_s, f_s = ys
     def scat(vals, dtype):
         return jnp.zeros(J, dtype).at[j_pl].set(vals, mode="drop")
     sel = scat(sel_s, sel_s.dtype)
@@ -674,13 +761,14 @@ def _scan_sim_easy(arrs: dict, policy: Policy, placer: str | None,
     E = scat(E_s, jnp.float32)
     T_act = scat(T_s, jnp.float32)
     backfilled = scat(bf_s, bool)
+    tier = scat(f_s, jnp.int32)
     nodes = n_req[prog, sel]                                     # [J]
     busy = jnp.zeros(S, jnp.float32).at[sel].add(T_act * nodes)
     makespan = finish.max()
     return {
         "system": sel, "start": start, "finish": finish, "wait": wait,
         "energy": E, "runtime": T_act, "nodes": nodes,
-        "backfilled": backfilled,
+        "backfilled": backfilled, "tier": tier,
         "total_energy": E.sum(), "makespan": makespan,
         "total_wait": wait.sum(), "max_wait": wait.max(),
         "slowdown_sum": ((wait + T_act) / T_act).sum(), "busy": busy,
@@ -723,8 +811,11 @@ def event_context(arrs: dict, policy: Policy, seed, fvec) -> dict:
     kvec = jnp.where(jnp.isnan(arrs["k_job"]),
                      jnp.asarray(policy.k, jnp.float32), arrs["k_job"])
     sel_key, fault_key = jax.random.split(jax.random.key(seed))
-    return {"arrs": arrs, "kvec": kvec, "sel_key": sel_key,
-            "fault_key": fault_key, "fvec": fvec}
+    ctx = {"arrs": arrs, "kvec": kvec, "sel_key": sel_key,
+           "fault_key": fault_key, "fvec": fvec}
+    if policy.tiered:
+        ctx["tt"] = tier_tables(arrs, policy.freq_tiers)
+    return ctx
 
 
 def event_carry0(arrs: dict, policy: Policy, tabs0, totals_only: bool,
@@ -842,11 +933,13 @@ def make_event_step(policy: Policy, placer: str | None = None,
     W = int(policy.window)
     Wc = W + 1
     queue = policy.queue
+    tiered = policy.tiered
     idx = jnp.arange(Wc)
 
     def step(ctx, carry, horizon):
         arrs, kvec, fvec = ctx["arrs"], ctx["kvec"], ctx["fvec"]
         sel_key, fault_key = ctx["sel_key"], ctx["fault_key"]
+        tt = ctx["tt"] if tiered else None
         T_true, C_true, E_true = (arrs["T_true"], arrs["C_true"],
                                   arrs["E_true"])
         T_pred, C_pred = arrs["T_pred"], arrs["C_pred"]
@@ -903,10 +996,24 @@ def make_event_step(policy: Policy, placer: str | None = None,
         kths, avails = _earliest_shared(node_free, n_req[ps],
                                         t0f[:, None], placer, outage)
         keys = jax.vmap(lambda j: jax.random.fold_in(sel_key, j))(jjs)
-        sels = select_batched(
-            policy, c_rows=C_tab[ps], t_rows=T_tab[ps], runs_rows=runs[ps],
-            avail_rows=avails, k=kvec[jjs], c_pred_rows=C_pred[ps],
-            t_pred_rows=T_pred[ps], keys=keys)                   # [Wc]
+        if tiered:
+            S = T_true.shape[1]
+            c_x, t_x, runs_x, avail_x, cp_x, tp_x = _tier_rows(
+                tt, ps, C_tab[ps], T_tab[ps], runs[ps], avails,
+                C_pred[ps], T_pred[ps])
+            sels_x = select_batched(
+                policy, c_rows=c_x, t_rows=t_x, runs_rows=runs_x,
+                avail_rows=avail_x, k=kvec[jjs], c_pred_rows=cp_x,
+                t_pred_rows=tp_x, keys=keys)                     # [Wc]
+            fs = (sels_x // S).astype(jnp.int32)
+            sels = sels_x % S
+        else:
+            sels = select_batched(
+                policy, c_rows=C_tab[ps], t_rows=T_tab[ps],
+                runs_rows=runs[ps], avail_rows=avails, k=kvec[jjs],
+                c_pred_rows=C_pred[ps], t_pred_rows=T_pred[ps],
+                keys=keys)                                       # [Wc]
+            fs = jnp.zeros(Wc, jnp.int32)
         starts_res = avails[idx, sels]                           # [Wc]
 
         # fault draws (keyed by job id, as _fault_factor does)
@@ -921,8 +1028,10 @@ def make_event_step(policy: Policy, placer: str | None = None,
             first_fail = jnp.zeros(Wc, bool)
             scale = jnp.where(fails, 1.0 + fvec[3], 1.0)
         factors = slows * scale
-        T_acts = T_true[ps, sels] * factors
-        E_acts = E_true[ps, sels] * factors
+        T_acts = (tt["T"][ps, fs, sels] if tiered
+                  else T_true[ps, sels]) * factors
+        E_acts = (tt["E"][ps, fs, sels] if tiered
+                  else E_true[ps, sels]) * factors
         needs = n_req[ps, sels]
 
         # start rule: capped runs quantize to the current event (exact
@@ -960,7 +1069,8 @@ def make_event_step(policy: Policy, placer: str | None = None,
 
         # ---- power feasibility + the stuck valve
         p_now = jnp.sum(jnp.where(node_free > now, node_pow, idle_mat))
-        w_jobs = w_pow[ps, sels]                                 # [Wc]
+        w_jobs = (tt["w"][ps, fs, sels] if tiered
+                  else w_pow[ps, sels])                          # [Wc]
         new_P = p_now - needs * idle_w[sels] + w_jobs            # [Wc]
         power_ok = ~capped | (new_P <= pc)
         elig0 = elig_res & power_ok
@@ -1079,6 +1189,7 @@ def make_event_step(policy: Policy, placer: str | None = None,
                 "j_fin": jnp.where(final, jj, J), "sys": sel,
                 "s0": s0_ci, "finish": finish, "wait": wait_tot,
                 "T": T_tot, "bf": final & (chosen > 0),
+                "tier": fs[ci],
                 # live-decision channels (the service dispatcher reads
                 # these; pure additions, the batch channels are untouched)
                 "pushed": do_push, "j_push": jnp.where(do_push, a - 1, J),
@@ -1110,6 +1221,8 @@ def _scan_sim_events(arrs: dict, policy: Policy, placer: str | None,
     step = make_event_step(policy, placer, totals_only, retries)
     ctx = {"arrs": arrs, "kvec": kvec, "sel_key": sel_key,
            "fault_key": fault_key, "fvec": fvec}
+    if policy.tiered:
+        ctx["tt"] = tier_tables(arrs, policy.freq_tiers)
     carry0 = event_carry0(arrs, policy, tabs0, totals_only)
     hor = jnp.float32(BIG)
     carry_f, ys = jax.lax.scan(lambda c, _: step(ctx, c, hor), carry0,
@@ -1146,12 +1259,13 @@ def _event_results(arrs, totals_only, ys, carry):
     wait = scat(wait_s, jnp.float32)
     T_act = scat(T_s, jnp.float32)
     backfilled = scat(bf_s, bool)
+    tier = scat(ys["tier"], jnp.int32)
     nodes = n_req[prog, sel]                                     # [J]
     makespan = finish.max()
     return {
         "system": sel, "start": start, "finish": finish, "wait": wait,
         "energy": E, "runtime": T_act, "nodes": nodes,
-        "backfilled": backfilled,
+        "backfilled": backfilled, "tier": tier,
         "total_energy": E.sum(), "makespan": makespan,
         "total_wait": wait.sum(), "max_wait": wait.max(),
         "slowdown_sum": ((wait + T_act) / T_act).sum(), "busy": busy,
@@ -1202,7 +1316,8 @@ def cons_carry0(arrs: dict, policy: Policy, tabs0, totals_only: bool,
         fin=jnp.zeros(Wc, jnp.float32),
         T=jnp.ones(Wc, jnp.float32), E=jnp.zeros(Wc, jnp.float32),
         need=jnp.zeros(Wc, jnp.int32), wjob=jnp.zeros(Wc, jnp.float32),
-        fac=jnp.zeros(Wc, jnp.float32), fail=jnp.zeros(Wc, bool))
+        fac=jnp.zeros(Wc, jnp.float32), fail=jnp.zeros(Wc, bool),
+        tier=jnp.zeros(Wc, jnp.int32))
     return ConsCarry(
         node_free=arrs["free0"], node_pow=jnp.zeros_like(arrs["free0"]),
         C_tab=tabs0[0], T_tab=tabs0[1], runs=tabs0[2], acc=acc0,
@@ -1268,11 +1383,13 @@ def make_cons_step(policy: Policy, placer: str | None = None,
     (finite horizon gates the clock and the stuck valve).
     """
     Wc = int(policy.window) + 1
+    tiered = policy.tiered
     idx = jnp.arange(Wc)
 
     def step(ctx, carry, horizon):
         arrs, kvec, fvec = ctx["arrs"], ctx["kvec"], ctx["fvec"]
         sel_key, fault_key = ctx["sel_key"], ctx["fault_key"]
+        tt = ctx["tt"] if tiered else None
         T_true, C_true, E_true = (arrs["T_true"], arrs["C_true"],
                                   arrs["E_true"])
         T_pred, C_pred = arrs["T_pred"], arrs["C_pred"]
@@ -1291,7 +1408,7 @@ def make_cons_step(policy: Policy, placer: str | None = None,
         FILLS = dict(pend=J, t0=0.0, rt=False, accT=0.0, accF=0.0,
                      accW=0.0, s0=0.0, pblock=BIG, sel=0, start=0.0,
                      fin=0.0, T=1.0, E=0.0, need=0, wjob=0.0, fac=0.0,
-                     fail=False)
+                     fail=False, tier=0)
         sys_col = jnp.arange(S)[:, None, None]                   # [S, 1, 1]
 
         def earliest_fit(p, t0, Tdur, node_free, slots):
@@ -1351,18 +1468,44 @@ def make_cons_step(policy: Policy, placer: str | None = None,
                 first_fail = jnp.zeros((), bool)
                 scale = jnp.where(fail, 1.0 + fvec[3], 1.0)
             factor = slow * scale
-            Tdur = T_true[p] * factor                                # [S]
-            avail_p = earliest_fit(p, t0, Tdur, node_free, slots)
-            sel = select(
-                policy, c_row=C_tab[p], t_row=T_tab[p], runs_row=runs[p],
-                avail_row=avail_p, k=kvec[jp], c_pred_row=C_pred[p],
-                t_pred_row=T_pred[p], key=jax.random.fold_in(sel_key, jp))
-            start = avail_p[sel]
-            T_act = Tdur[sel]
+            key = jax.random.fold_in(sel_key, jp)
+            if tiered:
+                # hole-aware earliest fit per tier: a slower tier's longer
+                # window may fit a different hole, so each tier gets its
+                # own piecewise-capacity evaluation
+                Tdur_f = tt["T"][p] * factor                     # [F, S]
+                avail_f = jax.vmap(
+                    lambda td: earliest_fit(p, t0, td, node_free, slots)
+                )(Tdur_f)                                        # [F, S]
+                c_x, t_x, runs_x, avail_x, cp_x, tp_x = _tier_rows(
+                    tt, p, C_tab[p], T_tab[p], runs[p], avail_f,
+                    C_pred[p], T_pred[p])
+                sel_x = select(
+                    policy, c_row=c_x, t_row=t_x, runs_row=runs_x,
+                    avail_row=avail_x, k=kvec[jp], c_pred_row=cp_x,
+                    t_pred_row=tp_x, key=key)
+                f = (sel_x // S).astype(jnp.int32)
+                sel = sel_x % S
+                start = avail_f[f, sel]
+                T_act = Tdur_f[f, sel]
+                E_res = tt["E"][p, f, sel] * factor
+                wjob = tt["w"][p, f, sel]
+            else:
+                Tdur = T_true[p] * factor                            # [S]
+                avail_p = earliest_fit(p, t0, Tdur, node_free, slots)
+                sel = select(
+                    policy, c_row=C_tab[p], t_row=T_tab[p],
+                    runs_row=runs[p], avail_row=avail_p, k=kvec[jp],
+                    c_pred_row=C_pred[p], t_pred_row=T_pred[p], key=key)
+                f = jnp.int32(0)
+                start = avail_p[sel]
+                T_act = Tdur[sel]
+                E_res = E_true[p, sel] * factor
+                wjob = w_pow[p, sel]
             return dict(sel=sel.astype(jnp.int32), start=start,
                         fin=start + T_act, T=T_act,
-                        E=E_true[p, sel] * factor, need=n_req[p, sel],
-                        wjob=w_pow[p, sel], fac=factor, fail=first_fail)
+                        E=E_res, need=n_req[p, sel],
+                        wjob=wjob, fac=factor, fail=first_fail, tier=f)
 
         (node_free, node_pow, C_tab, T_tab, runs, acc, busy,
          slots, a, now, nbf, peak, cdel) = carry
@@ -1440,6 +1583,7 @@ def make_cons_step(policy: Policy, placer: str | None = None,
         p = prog[jj]
         sel, need = r_sel[ci], jnp.maximum(r_need[ci], 1)
         T_act, E_act, fac = slots["T"][ci], slots["E"][ci], slots["fac"][ci]
+        tier_ci = slots["tier"][ci]
         start = jnp.where(capped, jnp.maximum(r_start[ci], now),
                           r_start[ci])
         finish = start + T_act
@@ -1526,6 +1670,7 @@ def make_cons_step(policy: Policy, placer: str | None = None,
                 "j_fin": jnp.where(final, jj, J), "sys": sel,
                 "s0": s0_ci, "finish": finish, "wait": wait_tot,
                 "T": T_tot, "bf": final & (chosen > 0),
+                "tier": tier_ci,
                 # live-decision channels (the service dispatcher reads
                 # these; pure additions, the batch channels are untouched)
                 "pushed": do_push, "j_push": jnp.where(do_push, a - 1, J),
@@ -1555,6 +1700,8 @@ def _scan_sim_cons(arrs: dict, policy: Policy, placer: str | None,
     step = make_cons_step(policy, placer, totals_only, retries)
     ctx = {"arrs": arrs, "kvec": kvec, "sel_key": sel_key,
            "fault_key": fault_key, "fvec": fvec}
+    if policy.tiered:
+        ctx["tt"] = tier_tables(arrs, policy.freq_tiers)
     carry0 = cons_carry0(arrs, policy, tabs0, totals_only)
     hor = jnp.float32(BIG)
     carry_f, ys = jax.lax.scan(lambda c, _: step(ctx, c, hor), carry0,
@@ -1673,12 +1820,15 @@ class Scheduler:
         k = jnp.asarray(pol.k, jnp.float32)
         u = jnp.asarray(pol.ucb_scale, jnp.float32)
         pc = jnp.asarray(pol.power_cap, jnp.float32)
-        if k.ndim > 1 or u.ndim > 1 or pc.ndim > 1:
+        fw = jnp.asarray(pol.freq_weight, jnp.float32)
+        if k.ndim > 1 or u.ndim > 1 or pc.ndim > 1 or fw.ndim > 1:
             raise ValueError("policy leaves must be scalars or 1-D grids; "
                              "flatten K x ucb meshes with .ravel()")
-        has_policy_axis = k.ndim == 1 or u.ndim == 1 or pc.ndim == 1
-        k, u, pc = jnp.broadcast_arrays(jnp.atleast_1d(k), jnp.atleast_1d(u),
-                                        jnp.atleast_1d(pc))
+        has_policy_axis = (k.ndim == 1 or u.ndim == 1 or pc.ndim == 1
+                           or fw.ndim == 1)
+        k, u, pc, fw = jnp.broadcast_arrays(
+            jnp.atleast_1d(k), jnp.atleast_1d(u), jnp.atleast_1d(pc),
+            jnp.atleast_1d(fw))
         G = k.shape[0]
 
         has_seed_axis = not isinstance(self.seeds, (int, np.integer))
@@ -1709,12 +1859,13 @@ class Scheduler:
         kb = jnp.broadcast_to(k[None, :, None], (F, G, R)).reshape(B)
         ub = jnp.broadcast_to(u[None, :, None], (F, G, R)).reshape(B)
         pb = jnp.broadcast_to(pc[None, :, None], (F, G, R)).reshape(B)
+        fwb = jnp.broadcast_to(fw[None, :, None], (F, G, R)).reshape(B)
         sb = jnp.broadcast_to(seeds[None, None, :], (F, G, R)).reshape(B)
         fb = jnp.broadcast_to(fmat[:, None, None, :], (F, G, R, 4))
 
         out = _batched_run(
             _workload_arrays(w),
-            replace(pol, k=kb, ucb_scale=ub, power_cap=pb),
+            replace(pol, k=kb, ucb_scale=ub, power_cap=pb, freq_weight=fwb),
             sb, fb.reshape(B, 4), warm_start=self.warm_start,
             placer=self.placer, totals_only=totals_only,
             easy_eval=self.easy_eval, core=core, retries=retries)
@@ -1731,14 +1882,15 @@ class Scheduler:
 
         meta = dict(axes=tuple(axes), n_jobs=int(len(w.prog)),
                     n_nodes=np.asarray(w.n_nodes), programs=w.programs,
-                    systems=w.systems)
+                    systems=w.systems, freq_tiers=pol.freq_tiers)
         if not axes:
             return SimResult(**out, **meta)
         coords = {}
         if has_fault_axis:
             coords["fault"] = self.faults
         if has_policy_axis:
-            coords["policy"] = replace(pol, k=k, ucb_scale=u, power_cap=pc)
+            coords["policy"] = replace(pol, k=k, ucb_scale=u, power_cap=pc,
+                                       freq_weight=fw)
         if has_seed_axis:
             coords["seed"] = self.seeds
         return CampaignResult(**out, **meta, coords=coords)

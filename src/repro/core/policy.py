@@ -111,6 +111,20 @@ class Policy:
     # A finite cap routes the run onto the event-granular core, where a
     # placement can actually be deferred until cluster power drops.
     power_cap: float | jax.Array = float("inf")
+    # DVFS frequency multipliers phi made available to the selector.  STATIC
+    # metadata (it sizes the candidate axis: each placement candidate is a
+    # (system x tier) pair, so changing the tier set retraces — exactly like
+    # ``window``).  Tier 0 must be phi = 1.0: it anchors first_released
+    # exploration, min_avail tie-breaks and the K-guard T_min baseline at
+    # the uncapped frequency.  ``(1.0,)`` (the default) is the exact
+    # pre-DVFS engine, bit for bit.
+    freq_tiers: tuple = (1.0,)
+    # Energy<->time scalarization weight across frequency tiers (a LEAF, so
+    # whole cap x phi-weight grids batch in one jit): for ``min_c`` under
+    # tiers the scored coefficient becomes C + freq_weight * T_sel, i.e.
+    # 0.0 picks the lowest-energy tier outright and larger weights trade
+    # joules back for speed.  Units are C-per-second; ignored untiered.
+    freq_weight: float | jax.Array = 0.0
 
     def __post_init__(self):
         if self.exploration not in EXPLORATIONS:
@@ -129,10 +143,23 @@ class Policy:
         object.__setattr__(self, "window", int(self.window))
         if self.window < 1:
             raise ValueError(f"window must be >= 1, got {self.window}")
+        # freq_tiers is static metadata (hashable tuple of python floats);
+        # CLI specs may deliver lists — normalize on the frozen instance
+        tiers = tuple(float(p) for p in np.atleast_1d(
+            np.asarray(self.freq_tiers, dtype=np.float64)))
+        object.__setattr__(self, "freq_tiers", tiers)
+        if not tiers:
+            raise ValueError("freq_tiers must be non-empty")
+        if tiers[0] != 1.0:
+            raise ValueError(f"freq_tiers[0] must be 1.0 (the uncapped "
+                             f"anchor tier), got {tiers}")
+        if any(not (0.0 < p <= 1.0) for p in tiers):
+            raise ValueError(f"every freq tier must be in (0, 1], got "
+                             f"{tiers}")
 
     def with_params(self, **params) -> "Policy":
         """New Policy with replaced hyperparameter leaves (k, ucb_scale,
-        power_cap)."""
+        power_cap, freq_weight)."""
         return dataclasses.replace(self, **params)
 
     @property
@@ -141,9 +168,17 @@ class Policy:
         k = np.asarray(self.k)
         u = np.asarray(self.ucb_scale)
         p = np.asarray(self.power_cap)
-        if k.ndim == 0 and u.ndim == 0 and p.ndim == 0:
+        f = np.asarray(self.freq_weight)
+        if k.ndim == 0 and u.ndim == 0 and p.ndim == 0 and f.ndim == 0:
             return None
-        return int(np.broadcast_shapes(k.shape, u.shape, p.shape)[0])
+        return int(np.broadcast_shapes(k.shape, u.shape, p.shape,
+                                       f.shape)[0])
+
+    @property
+    def tiered(self) -> bool:
+        """True when the DVFS tier axis is non-trivial (static python
+        check — picks the expanded (system x tier) candidate code path)."""
+        return self.freq_tiers != (1.0,)
 
     @property
     def capped(self) -> bool:
@@ -153,9 +188,9 @@ class Policy:
 
 
 jax.tree_util.register_dataclass(
-    Policy, data_fields=("k", "ucb_scale", "power_cap"),
+    Policy, data_fields=("k", "ucb_scale", "power_cap", "freq_weight"),
     meta_fields=("exploration", "feasibility", "objective", "name",
-                 "queue", "window"))
+                 "queue", "window", "freq_tiers"))
 
 
 # ---------------------------------------------------------------- registry
@@ -222,6 +257,9 @@ def parse_policy_spec(spec: str, **defaults) -> Policy:
                 params[key] = val.strip()
             elif key == "window":
                 params[key] = int(val)
+            elif key == "freq_tiers":
+                # '+'-separated phi grid: freq_tiers=1.0+0.8+0.6
+                params[key] = tuple(float(p) for p in val.split("+"))
             else:
                 params[key] = float(val)
     return make_policy(name.strip(), **{**defaults, **params})
@@ -257,12 +295,12 @@ def apply_queue_spec(policy: Policy, spec: str) -> Policy:
 
 
 def _entry(name, exploration="first_released", feasibility="bare",
-           objective="min_c", queue="fcfs", window=8):
+           objective="min_c", queue="fcfs", window=8, freq_tiers=(1.0,)):
     @register_policy(name)
     def factory(**params):
         base = dict(exploration=exploration, feasibility=feasibility,
                     objective=objective, name=name, queue=queue,
-                    window=window)
+                    window=window, freq_tiers=freq_tiers)
         base.update(params)          # spec overrides (incl. queue/window)
         return Policy(**base)
     return factory
@@ -291,6 +329,14 @@ _entry("easy_queue_aware", feasibility="queue_aware", queue="easy_backfill")
 # reservation; a backfill may not delay ANY of them.  Always runs on the
 # event-granular core (reservations are rechecked whenever nodes free up).
 _entry("conservative", queue="conservative")
+# DVFS tier axis (ISSUE 8): the paper's selection rule over the expanded
+# (system x frequency tier) candidate set — frequency scales compute-phase
+# runtime up by 1/phi and dynamic compute power down by phi^3 (core/dvfs.py),
+# so argmin-C naturally trades makespan for joules; freq_weight (a leaf)
+# dials the trade back toward speed.
+_entry("dvfs_paper", freq_tiers=(1.0, 0.8, 0.6))
+_entry("dvfs_queue_aware", feasibility="queue_aware",
+       freq_tiers=(1.0, 0.8, 0.6))
 
 
 # ------------------------------------------------------------ jnp selector
@@ -354,6 +400,13 @@ def select(policy: Policy, *, c_row, t_row, runs_row, avail_row, k,
         t_sel = jnp.where(t_eff < BIG, t_eff + wait, BIG)
     else:  # "bare" and "none" share the runtime estimate
         t_sel = t_eff
+
+    if obj == "min_c" and policy.tiered:
+        # tier scalarization: C + freq_weight * T biases the energy argmin
+        # toward faster tiers (freq_weight = 0 => lowest-energy tier);
+        # unknown-row BIG sentinels stay astronomically large either way
+        c_eff = c_eff + policy.freq_weight * jnp.where(t_sel < BIG,
+                                                       t_sel, 0.0)
 
     if obj == "min_c":
         if feas == "none":
@@ -441,6 +494,10 @@ def select_py(policy: Policy, *, c_row, t_row, runs_row, avail_row, k,
         t_sel = np.where(t_eff < BIG, t_eff + wait, BIG)
     else:
         t_sel = t_eff
+
+    if obj == "min_c" and policy.tiered:
+        fw = float(np.asarray(policy.freq_weight))
+        c_eff = c_eff + fw * np.where(t_sel < BIG, t_sel, 0.0)
 
     if obj == "min_c":
         if feas == "none":

@@ -35,7 +35,7 @@ _TOTAL_FIELDS = ("total_energy", "makespan", "total_wait", "slowdown_sum",
                  "peak_power", "idle_energy", "capped_delay")
 #: Array fields with a trailing per-job axis [..., J]; None if totals_only.
 _PERJOB_FIELDS = ("system", "start", "finish", "wait", "energy", "runtime",
-                  "nodes", "backfilled")
+                  "nodes", "backfilled", "tier")
 #: Learned-table fields [..., P, S] and the per-system busy field [..., S].
 _TABLE_FIELDS = ("C_tab", "T_tab", "runs", "busy")
 
@@ -73,12 +73,16 @@ class SimResult:
     runtime: jnp.ndarray | None = None
     nodes: jnp.ndarray | None = None
     backfilled: jnp.ndarray | None = None
+    # per-job DVFS tier index into ``freq_tiers`` (0 = full frequency;
+    # all-zero for untier policies) [*axes, J]
+    tier: jnp.ndarray | None = None
     # metadata
     axes: tuple = ()
     n_jobs: int = 0
     n_nodes: np.ndarray | None = None        # [S]
     programs: tuple = ()
     systems: tuple = ()
+    freq_tiers: tuple = (1.0,)
 
     @property
     def totals_only(self) -> bool:
@@ -108,6 +112,26 @@ class SimResult:
             return None
         return self.n_backfilled / max(self.n_jobs, 1)
 
+    @property
+    def tier_counts(self):
+        """Placements per frequency tier, shaped [*axes, F] (F =
+        ``len(freq_tiers)``); None when ``totals_only``."""
+        if self.tier is None:
+            return None
+        F = len(self.freq_tiers)
+        return (self.tier[..., None] == jnp.arange(F)).sum(axis=-2)
+
+    @property
+    def tier_energy(self):
+        """Job-attributed energy per frequency tier [*axes, F]; rows sum
+        to ``total_energy`` up to f32 reduction order."""
+        if self.tier is None:
+            return None
+        F = len(self.freq_tiers)
+        onehot = (self.tier[..., None] == jnp.arange(F))
+        return (self.energy[..., None]
+                * onehot.astype(self.energy.dtype)).sum(axis=-2)
+
     def to_dict(self, arrays: bool = True) -> dict:
         """Flatten to a plain dict (the legacy ``simulate_jax`` schema plus
         the derived metrics).  ``arrays=False`` keeps only totals/derived —
@@ -119,6 +143,9 @@ class SimResult:
         out["utilization"] = self.utilization
         if self.backfill_rate is not None:
             out["backfill_rate"] = self.backfill_rate
+        if self.tier_counts is not None:
+            out["tier_counts"] = self.tier_counts
+            out["tier_energy"] = self.tier_energy
         if arrays:
             for k in _TABLE_FIELDS:
                 out[k] = getattr(self, k)

@@ -25,6 +25,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.core.dvfs import tier_tables_py
 from repro.core.engine import (                     # noqa: F401 (re-exports)
     BIG, FaultConfig, Scheduler, SimConfig, Workload, make_npb_workload,
 )
@@ -114,6 +115,25 @@ class _PySim:
             self.runs = np.zeros((P, S), np.int64)
         self.sel_key = (jax.random.split(jax.random.key(scfg.seed))[0]
                         if pol.objective == "random" else None)
+        # DVFS tier axis (float64 twin of the engine's tier_tables; None
+        # for untier policies so the historical path is untouched)
+        self.tiers = tuple(pol.freq_tiers)
+        self.F = len(self.tiers)
+        self.tt = tier_tables_py(w, self.tiers) if pol.tiered else None
+
+    # tier-aware ground-truth lookups (base values when untier)
+    def T_of(self, p, f, s):
+        return float(self.tt["T"][p, f, s] if self.tt is not None
+                     else self.w.T_true[p, s])
+
+    def E_of(self, p, f, s):
+        return float(self.tt["E"][p, f, s] if self.tt is not None
+                     else self.w.E_true[p, s])
+
+    def w_of(self, p, f, s):
+        if self.tt is not None:
+            return float(self.tt["w"][p, f, s])
+        return float(self.w_pow[p, s])
 
     def avail_for(self, p: int, arr: float, node_free=None) -> np.ndarray:
         """Earliest start per system (float64 kth-free + outage push)."""
@@ -132,27 +152,50 @@ class _PySim:
 
     def choose(self, j: int, node_free=None, arr=None, avail=None):
         """Policy selection for job j under current state: returns
-        (p, arr, avail, sel).  ``node_free`` selects an alternate table,
+        (p, arr, avail, sel, f) — ``f`` the chosen frequency tier (0 for
+        untier policies).  ``node_free`` selects an alternate table,
         ``avail`` overrides the availability row entirely (the
-        conservative mirror's hole-aware earliest fit), ``arr`` overrides
-        the arrival floor."""
-        w = self.w
+        conservative mirror's hole-aware earliest fit: [S], or [F, S]
+        per-tier under DVFS), ``arr`` overrides the arrival floor."""
+        w, S, F = self.w, self.S, self.F
         p = int(w.prog[j])
         arr = float(w.arrival[j]) if arr is None else float(arr)
         kj = float(w.k_job[j])
         k = self.scfg.k if np.isnan(kj) else kj
         if avail is None:
             avail = self.avail_for(p, arr, node_free)
+        if self.tt is None:
+            rand_sel = None
+            if self.pol.objective == "random":
+                rand_sel = int(jax.random.randint(
+                    jax.random.fold_in(self.sel_key, j), (), 0, S))
+            sel = select_py(
+                self.pol, c_row=self.C_tab[p], t_row=self.T_tab[p],
+                runs_row=self.runs[p], avail_row=avail, k=k,
+                c_pred_row=w.C_pred[p], t_pred_row=w.T_pred[p],
+                rand_sel=rand_sel)
+            return p, arr, avail, sel, 0
+        # tier-major expansion, the float64 twin of engine._tier_rows
+        rc, rt = self.tt["rc"][p], self.tt["rt"][p]              # [F, S]
+        av = np.asarray(avail, np.float64)
+        avail_x = (av.reshape(-1) if av.ndim == 2
+                   else np.broadcast_to(av, (F, S)).reshape(-1))
         rand_sel = None
         if self.pol.objective == "random":
             rand_sel = int(jax.random.randint(
-                jax.random.fold_in(self.sel_key, j), (), 0, self.S))
-        sel = select_py(
-            self.pol, c_row=self.C_tab[p], t_row=self.T_tab[p],
-            runs_row=self.runs[p], avail_row=avail, k=k,
-            c_pred_row=w.C_pred[p], t_pred_row=w.T_pred[p],
+                jax.random.fold_in(self.sel_key, j), (), 0, F * S))
+        sel_x = select_py(
+            self.pol,
+            c_row=(self.C_tab[p][None, :] * rc).reshape(-1),
+            t_row=(self.T_tab[p][None, :] * rt).reshape(-1),
+            runs_row=np.broadcast_to(self.runs[p], (F, S)).reshape(-1),
+            avail_row=avail_x, k=k,
+            c_pred_row=(np.asarray(w.C_pred[p], np.float64)[None, :]
+                        * rc).reshape(-1),
+            t_pred_row=(np.asarray(w.T_pred[p], np.float64)[None, :]
+                        * rt).reshape(-1),
             rand_sel=rand_sel)
-        return p, arr, avail, sel
+        return p, arr, avail, sel_x % S, sel_x // S
 
     @staticmethod
     def alloc(node_free, sel: int, need: int, finish: float):
@@ -166,18 +209,20 @@ class _PySim:
         """Place job j (the FCFS step body): allocate, update tables,
         return the per-job record."""
         w = self.w
-        p, arr, avail, sel = self.choose(j)
-        T_act = float(w.T_true[p, sel])
-        E_act = float(w.E_true[p, sel])
+        p, arr, avail, sel, f = self.choose(j)
+        T_act = self.T_of(p, f, sel)
+        E_act = self.E_of(p, f, sel)
+        # learned tables absorb BASE (tier-0) observations
+        T_upd = float(w.T_true[p, sel])
         C_act = float(w.C_true[p, sel])
         start = float(avail[sel])
         finish = start + T_act
         self.alloc(self.node_free, sel, int(w.n_req[p, sel]), finish)
         n = self.runs[p, sel]
         self.C_tab[p, sel] = (self.C_tab[p, sel] * n + C_act) / (n + 1)
-        self.T_tab[p, sel] = (self.T_tab[p, sel] * n + T_act) / (n + 1)
+        self.T_tab[p, sel] = (self.T_tab[p, sel] * n + T_upd) / (n + 1)
         self.runs[p, sel] += 1
-        return (sel, start, finish, start - arr, E_act, T_act)
+        return (sel, start, finish, start - arr, E_act, T_act, f)
 
     # ------------------------------------------- event-replay helpers
     # The power / event / placement bookkeeping shared verbatim by the
@@ -246,10 +291,13 @@ class _PySim:
 
     def realize(self, j: int, chosen: int, p: int, sel: int, start: float,
                 T_act: float, E_act: float, wjob: float, arr: float,
-                p_now: float):
+                p_now: float, tier: int = 0):
         """Realize a placement: allocate + per-node power, update the
         learned tables, and record the power / backfill / per-job
-        outputs — the float64 twin of the engine's placement tail."""
+        outputs — the float64 twin of the engine's placement tail.
+        ``T_act``/``E_act`` are the (possibly tier-scaled) realized
+        values; the learned tables always absorb the BASE observation
+        (``w.T_true[p, sel]`` — identical for untier policies)."""
         w = self.w
         finish = start + T_act
         need = int(w.n_req[p, sel])
@@ -259,8 +307,9 @@ class _PySim:
             self.node_pow[sel][int(i)] = wjob / max(need, 1)
         n = self.runs[p, sel]
         C_act = float(w.C_true[p, sel])
+        T_upd = float(w.T_true[p, sel])
         self.C_tab[p, sel] = (self.C_tab[p, sel] * n + C_act) / (n + 1)
-        self.T_tab[p, sel] = (self.T_tab[p, sel] * n + T_act) / (n + 1)
+        self.T_tab[p, sel] = (self.T_tab[p, sel] * n + T_upd) / (n + 1)
         self.runs[p, sel] += 1
         new_P = p_now - need * self.idle_pw[sel] + wjob
         self.peak = max(self.peak, new_P)
@@ -269,7 +318,8 @@ class _PySim:
         if chosen > 0:
             self.backfilled[j] = True
             self.nbf += 1
-        self.ev_out[j] = (sel, start, finish, start - arr, E_act, T_act)
+        self.ev_out[j] = (sel, start, finish, start - arr, E_act, T_act,
+                          tier)
         self.placed_n += 1
 
     def event_results(self):
@@ -290,7 +340,7 @@ def _easy_order_py(sim: _PySim, J: int, window: int):
         if not pend:
             continue
         h = pend[0]
-        p_h, arr_h, avail_h, sel_h = sim.choose(h)
+        p_h, arr_h, avail_h, sel_h, _ = sim.choose(h)
         r_h = float(avail_h[sel_h])
         chosen = None
         if len(pend) == window + 1 or r_h <= now:   # overflow: FCFS fallback
@@ -298,11 +348,11 @@ def _easy_order_py(sim: _PySim, J: int, window: int):
         else:
             for ci in range(1, len(pend)):
                 b = pend[ci]
-                p_b, _, avail_b, sel_b = sim.choose(b)
+                p_b, _, avail_b, sel_b, f_b = sim.choose(b)
                 s_b = float(avail_b[sel_b])
                 trial = [list(fl) for fl in sim.node_free]
                 sim.alloc(trial, sel_b, int(w.n_req[p_b, sel_b]),
-                          s_b + float(w.T_true[p_b, sel_b]))
+                          s_b + sim.T_of(p_b, f_b, sel_b))
                 if sim.avail_for(p_h, arr_h, trial)[sel_h] <= r_h:
                     chosen = ci
                     break
@@ -337,16 +387,16 @@ def _events_py(sim: _PySim, pol):
             pushed = True
 
         chosen = None
-        evals = [sim.choose(j) for j in pend]       # (p, arr, avail, sel)
+        evals = [sim.choose(j) for j in pend]    # (p, arr, avail, sel, f)
         starts_res = [float(ev[2][ev[3]]) for ev in evals]
         p_now = sim.power_at(now)
 
         def trial_of(ci):
-            p_b, _, avail_b, sel_b = evals[ci]
+            p_b, _, avail_b, sel_b, f_b = evals[ci]
             s_b = max(starts_res[ci], now) if capped else starts_res[ci]
             trial = [list(fl) for fl in sim.node_free]
             sim.alloc(trial, sel_b, int(w.n_req[p_b, sel_b]),
-                      s_b + float(w.T_true[p_b, sel_b]))
+                      s_b + sim.T_of(p_b, f_b, sel_b))
             return trial
 
         def guard_ok(ci):
@@ -355,19 +405,19 @@ def _events_py(sim: _PySim, pol):
             if queue == "fcfs":
                 return False
             trial = trial_of(ci)        # EASY: only the head is guarded
-            p_h, arr_h, _, sel_h = evals[0]
+            p_h, arr_h, _, sel_h, _ = evals[0]
             return sim.avail_for(p_h, arr_h, trial)[sel_h] <= starts_res[0]
 
         blocked_recorded = False
         for ci in range(len(pend)):
             if starts_res[ci] > now or not guard_ok(ci):
                 continue
-            p_b, _, _, sel_b = evals[ci]
+            p_b, _, _, sel_b, f_b = evals[ci]
             if sim.outage_gated(sel_b, max(starts_res[ci], now)):
                 continue
             new_P = (p_now
                      - int(w.n_req[p_b, sel_b]) * sim.idle_pw[sel_b]
-                     + sim.w_pow[p_b, sel_b])
+                     + sim.w_of(p_b, f_b, sel_b))
             if capped and new_P > sim.ev_cap:
                 if not blocked_recorded:
                     # the next would-be placement is power-blocked
@@ -389,12 +439,12 @@ def _events_py(sim: _PySim, pol):
 
         # ---- place pend[chosen] (float64 twin of the engine's step)
         j = pend.pop(chosen)
-        p, arr, avail, sel = evals[chosen]
+        p, arr, avail, sel, f = evals[chosen]
         start = (max(starts_res[chosen], now) if capped
                  else starts_res[chosen])
-        sim.realize(j, chosen, p, sel, start, float(w.T_true[p, sel]),
-                    float(w.E_true[p, sel]), sim.w_pow[p, sel], arr,
-                    p_now)
+        sim.realize(j, chosen, p, sel, start, sim.T_of(p, f, sel),
+                    sim.E_of(p, f, sel), sim.w_of(p, f, sel), arr,
+                    p_now, tier=f)
     assert sim.placed_n == J, \
         f"event mirror stalled: {sim.placed_n}/{J} placed"
     return sim.event_results()
@@ -420,14 +470,16 @@ def _cons_py(sim: _PySim, pol, check_reservations: bool = False):
     pend: list[dict] = []
     max_iters = 16 * J + 64
 
-    def earliest_fit(p, t0):
+    def earliest_fit(p, t0, Trow=None):
         """Float64 twin of the engine's hole-aware earliest fit: per
         system, the first candidate start whose capacity (free nodes
-        minus reservation occupancy) covers the job's whole window."""
+        minus reservation occupancy) covers the job's whole window.
+        ``Trow`` overrides the per-system durations (the DVFS mirror's
+        per-tier evaluation)."""
         out = np.full(S, BIG)
         for s in range(S):
             n = int(w.n_req[p, s])
-            Td = float(w.T_true[p, s])
+            Td = float(w.T_true[p, s] if Trow is None else Trow[s])
             res = [r for r in pend if r["sel"] == s]
 
             def availn(t):
@@ -455,15 +507,26 @@ def _cons_py(sim: _PySim, pol, check_reservations: bool = False):
 
     def reserve(j, t0):
         """Admission: hole-aware earliest fit + selection — the new
-        reservation row (reservations are NOT committed to node_free)."""
-        avail = earliest_fit(int(w.prog[j]), t0)
-        p, _, _, sel = sim.choose(j, arr=t0, avail=avail)
-        start = float(avail[sel])
-        T_act = float(w.T_true[p, sel])
+        reservation row (reservations are NOT committed to node_free).
+        Under DVFS each tier gets its own earliest fit (a slower tier's
+        longer window may land in a different hole)."""
+        pp = int(w.prog[j])
+        if sim.tt is not None:
+            avail = np.stack([
+                earliest_fit(pp, t0, np.asarray(sim.tt["T"][pp, fi],
+                                                np.float64))
+                for fi in range(sim.F)])                         # [F, S]
+            p, _, _, sel, f = sim.choose(j, arr=t0, avail=avail)
+            start = float(avail[f, sel])
+        else:
+            avail = earliest_fit(pp, t0)
+            p, _, _, sel, f = sim.choose(j, arr=t0, avail=avail)
+            start = float(avail[sel])
+        T_act = sim.T_of(p, f, sel)
         return dict(j=j, p=p, t0=t0, sel=sel, start=start, T=T_act,
-                    fin=start + T_act, E=float(w.E_true[p, sel]),
+                    fin=start + T_act, E=sim.E_of(p, f, sel),
                     need=int(w.n_req[p, sel]),
-                    wjob=float(sim.w_pow[p, sel]))
+                    wjob=sim.w_of(p, f, sel), tier=f)
 
     for _ in range(max_iters):
         if sim.placed_n == J:
@@ -520,7 +583,8 @@ def _cons_py(sim: _PySim, pol, check_reservations: bool = False):
                 f"reservation of job {j} not realizable: {avail_real} > "
                 f"{rec['start']} (a backfill delayed it)")
         sim.realize(j, chosen, p, sel, start, rec["T"], rec["E"],
-                    rec["wjob"], float(w.arrival[j]), p_now)
+                    rec["wjob"], float(w.arrival[j]), p_now,
+                    tier=rec["tier"])
     assert sim.placed_n == J, \
         f"conservative mirror stalled: {sim.placed_n}/{J}"
     return sim.event_results()
@@ -566,7 +630,7 @@ def simulate_py(w: Workload, scfg: SimConfig, *,
                   else np.asarray(w.idle_w, np.float64))
     assert all(rec is not None for rec in out), "job left unplaced"
 
-    sel, start, finish, wait, E, T_act = map(np.array, zip(*out))
+    sel, start, finish, wait, E, T_act, tier = map(np.array, zip(*out))
     makespan = finish.max()
     busy = np.zeros(sim.S)
     np.add.at(busy, sel, T_act * np.asarray(w.n_req)[np.asarray(w.prog), sel])
@@ -575,7 +639,7 @@ def simulate_py(w: Workload, scfg: SimConfig, *,
     return {
         "system": sel, "start": start, "finish": finish, "wait": wait,
         "energy": E, "runtime": T_act, "backfilled": backfilled,
-        "n_backfilled": int(nbf),
+        "tier": tier, "n_backfilled": int(nbf),
         "total_energy": E.sum(), "makespan": makespan,
         "total_wait": wait.sum(), "max_wait": wait.max(),
         "peak_power": peak, "capped_delay": cdel,

@@ -67,7 +67,7 @@ class Dispatcher:
             pol = apply_queue_spec(pol, queue)
         if power_cap is not None:
             pol = replace(pol, power_cap=np.asarray(power_cap, np.float32))
-        for leaf in ("k", "ucb_scale", "power_cap"):
+        for leaf in ("k", "ucb_scale", "power_cap", "freq_weight"):
             if np.asarray(getattr(pol, leaf)).ndim:
                 raise ValueError(f"live policy leaf {leaf!r} must be a "
                                  "scalar, got a grid")
@@ -123,6 +123,7 @@ class Dispatcher:
         self._wait = np.zeros(C, np.float32)
         self._T = np.ones(C, np.float32)
         self._bf = np.zeros(C, bool)
+        self._tier = np.zeros(C, np.int32)
 
         self._mgr = (CheckpointManager(checkpoint_dir, keep_n=keep_n)
                      if checkpoint_dir else None)
@@ -192,11 +193,13 @@ class Dispatcher:
                 self._wait[jf] = out["wait"]
                 self._T[jf] = out["T"]
                 self._bf[jf] = out["bf"]
+                self._tier[jf] = out["tier"]
                 self.decisions.append({
                     "job": jf, "system": int(out["sys"]),
                     "start": float(out["s0"]), "finish": float(out["finish"]),
                     "wait": float(out["wait"]),
                     "backfilled": bool(out["bf"]),
+                    "tier": int(out["tier"]),
                     "power": float(out["power"]), "now": float(out["now"]),
                 })
 
@@ -257,8 +260,10 @@ class Dispatcher:
             wait=wait, energy=E, runtime=T_act,
             nodes=arrs["n_req"][prog, sel],
             backfilled=jnp.asarray(self._bf[:n]),
+            tier=jnp.asarray(self._tier[:n]),
             axes=(), n_jobs=n, n_nodes=np.asarray(self.w.n_nodes),
-            programs=self.w.programs, systems=self.w.systems)
+            programs=self.w.programs, systems=self.w.systems,
+            freq_tiers=self.policy.freq_tiers)
 
     def carry_snapshot(self):
         """Host copy of the live carry (tests pin what-if purity on it)."""
@@ -272,7 +277,7 @@ class Dispatcher:
                      for k in ("prog", "arrival", "k_job")},
             "perjob": {"E": self._E, "sys": self._sys, "s0": self._s0,
                        "fin": self._fin, "wait": self._wait, "T": self._T,
-                       "bf": self._bf},
+                       "bf": self._bf, "tier": self._tier},
         }
 
     def save(self, blocking: bool = True) -> int:
@@ -307,7 +312,7 @@ class Dispatcher:
         pj = tree["perjob"]
         self._E, self._sys, self._s0 = pj["E"], pj["sys"], pj["s0"]
         self._fin, self._wait, self._T = pj["fin"], pj["wait"], pj["T"]
-        self._bf = pj["bf"]
+        self._bf, self._tier = pj["bf"], pj["tier"]
         self.n_submitted = int(meta["n_submitted"])
         self.decisions = list(meta["decisions"])
         self.metrics = ServiceMetrics.from_snapshot(meta["metrics"])

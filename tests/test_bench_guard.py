@@ -69,6 +69,7 @@ def test_committed_rows_carry_timed_flag():
     assert rows["queue_swf_conservative"]["timed"]
     assert rows["queue_swf_fcfs"]["timed"]
     assert rows["service_decision_latency"]["timed"]
+    assert rows["dvfs_pareto_grid"]["timed"]
 
 
 def test_power_cap_rows_committed():
@@ -86,6 +87,52 @@ def test_power_cap_rows_committed():
         peak = float(rows[name]["derived"].split("peak=")[1].split("kW")[0])
         assert peak <= cap_kw * (1 + 1e-3), \
             f"committed {name} peak {peak}kW exceeds its cap"
+
+
+def test_dvfs_pareto_rows_committed():
+    """The ISSUE 8 DVFS Pareto lattice rows are part of the committed
+    artifact: the timed grid row records a single compilation for the
+    whole cap x phi-weight x K lattice, and the frontier row records a
+    non-trivial front that dominates the selection-only baseline."""
+    rows = _committed_rows()
+    grid = rows["dvfs_pareto_grid"]
+    assert grid["timed"]
+    assert "compiles=1" in grid["derived"], \
+        "committed lattice row must record a single jit compilation"
+    points = int(grid["derived"].split("points=")[1].split(";")[0])
+    assert points >= 24, f"lattice too small: {points} points (>= 24)"
+    front = rows["dvfs_pareto_frontier"]
+    assert "dominates_baseline=True" in front["derived"]
+    size = int(front["derived"].split("size=")[1].split("/")[0])
+    assert size >= 2, f"degenerate committed frontier (size {size})"
+
+
+def test_dvfs_pareto_wallclock_gate():
+    """Fresh warm per-grid-point wall-clock of the one-jit DVFS lattice
+    must stay within GATE x of the committed ``dvfs_pareto_grid`` row,
+    machine-normalized through the median-of-3 FCFS anchor.  Running the
+    suite also re-asserts the single-compilation and baseline-domination
+    acceptance criteria (they are asserts inside the benchmark)."""
+    from scheduler_ablation import (machine_speed_factor, queue_streams,
+                                    run_dvfs_pareto)
+
+    rows = _committed_rows()
+    committed = rows["dvfs_pareto_grid"]["us_per_call"]
+    committed_fcfs = rows["queue_swf_fcfs"]["us_per_call"]
+
+    fresh_fcfs = _median_fcfs_us(queue_streams()["swf"])
+    fresh_rows = {name: (us, derived)
+                  for name, us, derived in run_dvfs_pareto()}
+    fresh = fresh_rows["dvfs_pareto_grid"][0]
+    assert "dominates_baseline=True" in fresh_rows["dvfs_pareto_frontier"][1]
+
+    speed = machine_speed_factor(fresh_fcfs, committed_fcfs)
+    bound = GATE * committed * speed
+    assert fresh <= bound, (
+        f"DVFS lattice warm wall-clock regressed: fresh {fresh:.0f}us/point "
+        f"> {GATE}x committed {committed:.0f}us (speed factor {speed:.2f}) "
+        f"— if intentional, regenerate BENCH_scheduler.json via "
+        f"`python benchmarks/scheduler_ablation.py --suites dvfs_pareto`")
 
 
 @pytest.mark.parametrize("row,queue", [

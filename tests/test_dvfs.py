@@ -1,12 +1,26 @@
-"""DVFS virtual-system tests (beyond-paper extension)."""
+"""DVFS tests: the legacy virtual-system expansion and the first-class
+``Policy.freq_tiers`` axis (ISSUE 8) — registry entries, jax==python
+differential coverage of the tier decision sequence on every core
+(arrival / EASY / conservative / capped event), totals_only equivalence,
+and a live ``Dispatcher`` session picking non-unit tiers bit-identically
+to the batch scan.  The deterministic tier-model/frontier invariants
+(``assert_tier_monotone`` / ``assert_front_nondominated``) are shared
+with the hypothesis sweeps in tests/test_property_dvfs.py."""
+
+from dataclasses import replace
 
 import numpy as np
 import pytest
 
-from repro.core import JSCC_SYSTEMS, SimConfig, simulate_jax, sweep_k
-from repro.core.dvfs import dvfs_variant, expand_with_dvfs, dvfs_npb_workload
+from repro.core import (JSCC_SYSTEMS, Scheduler, SimConfig, make_npb_workload,
+                        make_policy, simulate_jax, simulate_py, sweep_k)
+from repro.core.dvfs import (dvfs_variant, expand_with_dvfs,
+                             dvfs_npb_workload, pareto_mask, phase_split,
+                             tier_tables, tier_tables_py)
 from repro.core.systems import SKYLAKE
 from repro.core.workload_model import NPB_PROFILES, predict_energy
+from repro.data.scenarios import (load_swf, maintenance_windows,
+                                  make_stream_workload, workload_from_trace)
 
 
 def test_dvfs_variant_scaling():
@@ -47,3 +61,248 @@ def test_dvfs_never_worse_than_selection_only():
     Ep = np.asarray(rp["total_energy"])
     Ed = np.asarray(rd["total_energy"])
     assert (Ed <= Ep * (1 + 1e-6)).all(), (Ep, Ed)
+
+
+# ================== first-class tier axis (Policy.freq_tiers, ISSUE 8)
+
+DVFS_MODES = ("dvfs_paper", "dvfs_queue_aware")
+
+
+def _tier_stream(n=30, seed=3, rate=0.8, **kw):
+    """Contended mixed stream: enough queueing that tier choices interact
+    with waits, node availability and (when capped) the power trace."""
+    return make_stream_workload(JSCC_SYSTEMS, n, arrival="poisson",
+                                rate=rate, seed=seed, pred_noise=0.05, **kw)
+
+
+def assert_differential_dvfs(w, cfg):
+    """jax == float64-mirror on the tier decision sequence: exact tier and
+    system indices, close energies/starts/totals."""
+    rj = simulate_jax(w, cfg)
+    rp = simulate_py(w, cfg)
+    np.testing.assert_array_equal(np.asarray(rj["system"]), rp["system"])
+    np.testing.assert_array_equal(np.asarray(rj["tier"]), rp["tier"])
+    np.testing.assert_allclose(np.asarray(rj["energy"]), rp["energy"],
+                               rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(rj["start"]), rp["start"],
+                               rtol=1e-5, atol=1e-3)
+    np.testing.assert_allclose(float(rj["total_energy"]), rp["total_energy"],
+                               rtol=1e-5)
+    np.testing.assert_allclose(float(rj["makespan"]), rp["makespan"],
+                               rtol=1e-5)
+    return rj
+
+
+def test_dvfs_registry_entries():
+    for name in DVFS_MODES:
+        pol = make_policy(name)
+        assert pol.freq_tiers == (1.0, 0.8, 0.6)
+        assert pol.tiered
+    assert not make_policy("paper").tiered
+    assert make_policy("paper").freq_tiers == (1.0,)
+
+
+@pytest.mark.parametrize("mode", DVFS_MODES)
+@pytest.mark.parametrize("warm", [True, False], ids=["warm", "cold"])
+def test_differential_dvfs_fcfs(mode, warm):
+    w = _tier_stream()
+    k_job = np.full(len(w.prog), np.nan, np.float32)
+    k_job[::4] = 0.6                       # per-job K opens deeper tiers
+    rj = assert_differential_dvfs(
+        replace(w, k_job=k_job),
+        SimConfig(mode=mode, k=0.2, warm_start=warm, seed=3))
+    if warm:
+        assert (np.asarray(rj["tier"]) > 0).any(), \
+            "warm DVFS run never left the unit tier (axis inert?)"
+
+
+@pytest.mark.parametrize("mode", DVFS_MODES)
+@pytest.mark.parametrize("queue", ["easy_backfill", "conservative"])
+def test_differential_dvfs_backfill_queues(mode, queue):
+    """Tier decisions through the batched EASY window and the hole-aware
+    conservative reservations, jax == mirror."""
+    w = _tier_stream(n=36, seed=7, rate=1.2)
+    assert_differential_dvfs(
+        w, SimConfig(mode=mode, k=0.4, warm_start=True, queue=queue,
+                     queue_window=6))
+
+
+def test_differential_dvfs_capped_event_core():
+    """DVFS x finite power cap composes on the event-granular core; the
+    mirror replays the tier-aware node-power table in float64."""
+    w = _tier_stream(n=30, seed=9, rate=1.0)
+    assert_differential_dvfs(
+        w, SimConfig(mode="dvfs_paper", k=0.4, warm_start=True,
+                     power_cap=50_000.0))
+
+
+def test_differential_dvfs_outage_windows():
+    outage = maintenance_windows(
+        4, {2: [(0.0, 400.0)], 0: [(100.0, 250.0)]})
+    w = _tier_stream(n=28, seed=5, rate=0.4, outage=outage)
+    assert_differential_dvfs(
+        w, SimConfig(mode="dvfs_paper", k=0.3, warm_start=True))
+
+
+def test_differential_dvfs_trace_replay():
+    swf = "\n".join(
+        f"{i + 1} {i * 30} 0 {150 + 53 * i % 1200} {2 ** (2 + i % 6)} 100.0 "
+        f"0 {2 ** (2 + i % 6)} 1000 0 1 1 1 1 1 1 -1 -1"
+        for i in range(40)).splitlines()
+    w = workload_from_trace(load_swf(swf), JSCC_SYSTEMS)
+    for mode in DVFS_MODES:
+        assert_differential_dvfs(
+            w, SimConfig(mode=mode, k=0.4, warm_start=True))
+
+
+def test_dvfs_totals_only_matches_full():
+    """``totals_only=True`` must drop the per-job channels (tier included)
+    without perturbing any total, bit for bit."""
+    w = _tier_stream(n=25, seed=2)
+    sched = Scheduler(make_policy("dvfs_paper", k=0.4), warm_start=True)
+    full = sched.run(w)
+    totals = sched.run(w, totals_only=True)
+    assert totals.tier is None and totals.totals_only
+    assert full.tier is not None
+    for f in ("total_energy", "makespan", "total_wait", "max_wait",
+              "peak_power", "idle_energy"):
+        a, b = np.asarray(getattr(full, f)), np.asarray(getattr(totals, f))
+        assert a.tobytes() == b.tobytes(), f"totals_only changed {f}"
+
+
+def test_dvfs_saves_energy_on_npb():
+    """With K slack the tier axis must find non-unit tiers and spend less
+    energy than selection-only at the same K (the tier-0 candidates embed
+    the plain decision space, so warm argmin-C can only improve)."""
+    w = make_npb_workload(JSCC_SYSTEMS, repeats=2)
+    base = Scheduler(make_policy("paper", k=0.5), warm_start=True).run(w)
+    dvfs = Scheduler(make_policy("dvfs_paper", k=0.5), warm_start=True).run(w)
+    counts = np.asarray(dvfs.tier_counts)
+    assert counts.sum() == dvfs.n_jobs
+    assert counts[1:].sum() > 0, "no job ever downclocked at K=0.5"
+    assert float(dvfs.total_energy) < float(base.total_energy)
+    # tier_energy partitions the job-attributed energy
+    np.testing.assert_allclose(
+        np.asarray(dvfs.tier_energy).sum(),
+        np.asarray(dvfs.energy).sum(), rtol=1e-6)
+
+
+def test_dispatcher_session_picks_nonunit_tier():
+    """A live service session under ``dvfs_paper`` downclocks jobs and
+    stays bit-identical to the batch event-core run — the tier channel
+    survives the decision record, the result epilogue and checkpointing's
+    per-job tree (ISSUE 8 service acceptance)."""
+    from repro.service import Dispatcher
+
+    w = _tier_stream(n=24, seed=4)
+    pol = make_policy("dvfs_paper", k=0.5)
+    qs = "easy_backfill:window=8"
+    batch = Scheduler(pol, warm_start=True, queue=qs, engine="events").run(w)
+    disp = Dispatcher(w, pol, warm_start=True, queue=qs)
+    for j in range(len(w.prog)):
+        disp.drive(until=float(w.arrival[j]))
+        disp.submit(int(w.prog[j]), float(w.arrival[j]))
+    decisions = disp.drain()
+    res = disp.result()
+    assert any(d["tier"] > 0 for d in disp.decisions), \
+        "live session never picked a non-unit tier at K=0.5"
+    assert decisions is not None
+    np.testing.assert_array_equal(np.asarray(res.tier),
+                                  np.asarray(batch.tier))
+    assert res.freq_tiers == pol.freq_tiers
+    for f in ("total_energy", "makespan", "total_wait", "peak_power"):
+        a, b = np.asarray(getattr(batch, f)), np.asarray(getattr(res, f))
+        assert a.tobytes() == b.tobytes(), \
+            f"live session diverged from batch on {f}: {b} != {a}"
+
+
+# ------------- deterministic tier-model / frontier invariants (shared
+# with the hypothesis sweeps in tests/test_property_dvfs.py)
+
+def assert_tier_monotone(w, tiers):
+    """The power-model monotonicities on ``tier_tables_py`` outputs, for a
+    strictly descending phi grid: downclocking stretches the compute
+    phase and lowers the power it draws (the phi^3 law), monotonically
+    in phi."""
+    tt = tier_tables_py(w, tiers)
+    Tc, Ec = phase_split(w)
+    T = np.asarray(w.T_true, np.float64)
+    E = np.asarray(w.E_true, np.float64)
+    idle = (np.zeros(len(w.n_nodes)) if w.idle_w is None
+            else np.asarray(w.idle_w, np.float64))
+    n_idle = np.asarray(w.n_req, np.float64) * idle[None, :]
+    comp = Tc > 1e-12
+    for f in range(1, len(tiers)):
+        assert tiers[f] < tiers[f - 1], "grid must be strictly descending"
+        # compute-phase runtime grows as phi drops ...
+        stretch_hi = np.asarray(tt["T"][:, f - 1, :]) - T
+        stretch_lo = np.asarray(tt["T"][:, f, :]) - T
+        assert (stretch_lo[comp] > stretch_hi[comp]).all()
+        # ... and the compute-phase power draw shrinks (dynamic energy
+        # E_comp * phi^2 over the stretched Tc / phi window)
+        for a, b in ((f - 1, f),):
+            e_hi = (np.asarray(tt["E"][:, a, :]) - E + Ec
+                    - n_idle * stretch_hi)
+            e_lo = (np.asarray(tt["E"][:, b, :]) - E + Ec
+                    - n_idle * stretch_lo)
+            p_hi = e_hi[comp] / (Tc + stretch_hi)[comp]
+            p_lo = e_lo[comp] / (Tc + stretch_lo)[comp]
+            assert (p_lo < p_hi * (1 + 1e-12)).all(), \
+                "downclocking failed to lower compute-phase power"
+    # tier 0 (and any duplicate unit tier) is the base table bit for bit
+    for f, phi in enumerate(tiers):
+        if phi == 1.0:
+            assert np.asarray(tt["T"][:, f, :]).tobytes() == T.tobytes()
+            assert np.asarray(tt["E"][:, f, :]).tobytes() == E.tobytes()
+
+
+def assert_front_nondominated(energy, makespan):
+    """``pareto_mask`` returns exactly the non-dominated points: nothing
+    on the front is dominated, everything off it is."""
+    e = np.asarray(energy, np.float64).ravel()
+    m = np.asarray(makespan, np.float64).ravel()
+    mask = pareto_mask(e, m)
+    assert mask.any(), "a non-empty point set always has a frontier"
+    dominated = np.array(
+        [((e <= e[i]) & (m <= m[i]) & ((e < e[i]) | (m < m[i]))).any()
+         for i in range(len(e))])
+    np.testing.assert_array_equal(mask, ~dominated)
+    return mask
+
+
+def test_tier_monotone_npb():
+    w = make_npb_workload(JSCC_SYSTEMS)
+    assert_tier_monotone(w, (1.0, 0.9, 0.75, 0.6, 0.4))
+
+
+def test_tier_monotone_trace_defaults():
+    """Stream workloads have no explicit phase split; the engine default
+    (all-compute, all-dynamic) must satisfy the same monotonicities."""
+    assert_tier_monotone(_tier_stream(n=20, seed=1), (1.0, 0.8, 0.5))
+
+
+def test_tier_tables_unit_grid_is_base():
+    """A duplicate all-unit grid reproduces the base tables exactly in
+    BOTH table builders (the f32 scan tables and the float64 mirror)."""
+    from repro.core.engine import _workload_arrays
+    w = _tier_stream(n=15, seed=6)
+    arrs = _workload_arrays(w)
+    tt = tier_tables(arrs, (1.0, 1.0))
+    for f in range(2):
+        for key, base in (("T", arrs["T_true"]), ("E", arrs["E_true"]),
+                          ("C", arrs["C_true"]), ("w", arrs["w_pow"])):
+            assert (np.asarray(tt[key][:, f, :]).tobytes()
+                    == np.asarray(base).tobytes())
+    assert_tier_monotone(w, (1.0,))        # degenerate grid: unit checks
+
+
+def test_pareto_mask_deterministic():
+    rng = np.random.default_rng(0)
+    for n in (1, 2, 17, 60):
+        e, m = rng.uniform(1.0, 10.0, (2, n))
+        assert_front_nondominated(e, m)
+    # ties survive together; a strictly better point kills both
+    mask = pareto_mask([1.0, 1.0, 2.0], [5.0, 5.0, 4.0])
+    assert mask.tolist() == [True, True, True]
+    mask = pareto_mask([1.0, 1.0, 0.5], [5.0, 5.0, 5.0])
+    assert mask.tolist() == [False, False, True]

@@ -1,0 +1,129 @@
+"""Single-tier bit-identity regressions (ISSUE 8 acceptance).
+
+The DVFS tier axis must be EXACTLY free when it is trivial: for every
+registered policy, forcing ``freq_tiers=(1.0, 1.0)`` — a duplicate unit
+grid, which activates the whole tier-expansion machinery (tier-major
+candidate rows, tier-aware power tables, the tier decision channel) —
+must reproduce the pre-DVFS ``Scheduler.run`` bit for bit, warm and
+cold, on every scan core (arrival FCFS / batched EASY / conservative
+reservations / capped event-granular).  The unit short-circuit in
+``dvfs._tier_model`` (``where(phi == 1.0, base, ...)``) plus the
+tier-major argmin tie-break (duplicate tiers produce identical scores;
+the first flat index wins, so f = 0 everywhere) make this exact even
+under f32 rounding.
+
+The one exception: the ``random`` objective draws
+``randint(0, F * S)`` over the expanded candidate axis, so a duplicate
+tier changes the draw's bound — the behavior stays valid but is not
+bit-comparable; it is skipped with that reason.
+"""
+
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+from repro.core import (JSCC_SYSTEMS, Scheduler, make_policy, policy_names)
+from repro.data.scenarios import make_stream_workload
+
+#: Result fields the bitwise comparison covers (everything the engine
+#: emits except the tier channel itself, which only the forced run has).
+_FIELDS = ("total_energy", "makespan", "total_wait", "slowdown_sum",
+           "max_wait", "n_backfilled", "peak_power", "idle_energy",
+           "capped_delay", "system", "start", "finish", "wait", "energy",
+           "runtime", "nodes", "backfilled", "busy", "C_tab", "T_tab",
+           "runs")
+
+FORCED = (1.0, 1.0)
+
+
+def _stream(n=25, seed=3):
+    return make_stream_workload(JSCC_SYSTEMS, n, arrival="poisson", rate=0.6,
+                                seed=seed, pred_noise=0.08)
+
+
+def assert_bit_identical(base_res, forced_res):
+    for f in _FIELDS:
+        a, b = getattr(base_res, f), getattr(forced_res, f)
+        if a is None:
+            assert b is None, f"forced-tier run grew field {f}"
+            continue
+        a, b = np.asarray(a), np.asarray(b)
+        assert a.tobytes() == b.tobytes(), \
+            f"duplicate unit tier changed {f}: {b} != {a}"
+    # the trivially-expanded run records the anchor tier everywhere
+    # (identical scores across duplicate tiers; first flat index wins)
+    assert (np.asarray(forced_res.tier) == 0).all()
+
+
+def _skip_random(name):
+    if make_policy(name).objective == "random":
+        pytest.skip("random objective draws randint(0, F*S): a duplicate "
+                    "tier changes the draw bound, so the run is valid but "
+                    "not bit-comparable")
+
+
+@pytest.mark.parametrize("warm", [True, False], ids=["warm", "cold"])
+@pytest.mark.parametrize("name", policy_names())
+def test_single_tier_bit_identity_all_policies(name, warm):
+    """Every registered policy, on its own registered queue discipline:
+    untier vs duplicate-unit-tier, bitwise."""
+    _skip_random(name)
+    w = _stream()
+    pol = make_policy(name, k=0.15)
+    base = Scheduler(replace(pol, freq_tiers=(1.0,)), warm_start=warm).run(w)
+    forced = Scheduler(replace(pol, freq_tiers=FORCED), warm_start=warm).run(w)
+    assert_bit_identical(base, forced)
+
+
+@pytest.mark.parametrize("warm", [True, False], ids=["warm", "cold"])
+@pytest.mark.parametrize("queue", ["fcfs", "easy_backfill:window=6",
+                                   "conservative:window=6"])
+def test_single_tier_bit_identity_queues(queue, warm):
+    """The three scan cores under the paper selector: the tier expansion
+    threads the batched EASY window evaluation and the conservative
+    hole-aware reservation math without perturbing either."""
+    w = _stream(n=30, seed=5)
+    pol = make_policy("paper", k=0.2)
+    base = Scheduler(replace(pol, freq_tiers=(1.0,)), warm_start=warm,
+                     queue=queue).run(w)
+    forced = Scheduler(replace(pol, freq_tiers=FORCED), warm_start=warm,
+                       queue=queue).run(w)
+    assert_bit_identical(base, forced)
+
+
+def test_single_tier_bit_identity_capped_event_core():
+    """A binding power cap routes onto the event-granular core with its
+    node-power table; the duplicate unit tier must not move a single
+    placement or the power trace."""
+    w = _stream(n=28, seed=8)
+    pol = make_policy("paper", k=0.2, power_cap=48_000.0)
+    base = Scheduler(replace(pol, freq_tiers=(1.0,)), warm_start=True).run(w)
+    forced = Scheduler(replace(pol, freq_tiers=FORCED),
+                       warm_start=True).run(w)
+    assert_bit_identical(base, forced)
+
+
+def test_dvfs_entry_with_unit_grid_is_plain_paper():
+    """``dvfs_paper`` differs from ``paper`` ONLY through its tier grid:
+    collapse the grid to ``(1.0,)`` and the runs are bit-identical."""
+    w = _stream(n=25, seed=2)
+    plain = Scheduler(make_policy("paper", k=0.2), warm_start=True).run(w)
+    collapsed = Scheduler(
+        replace(make_policy("dvfs_paper", k=0.2), freq_tiers=(1.0,)),
+        warm_start=True).run(w)
+    for f in ("system", "start", "total_energy", "makespan", "T_tab"):
+        a = np.asarray(getattr(plain, f))
+        b = np.asarray(getattr(collapsed, f))
+        assert a.tobytes() == b.tobytes(), f"dvfs_paper@(1.0,) != paper: {f}"
+
+
+def test_non_dvfs_registry_entries_default_untier():
+    """No registered policy silently grows a tier axis: everything but
+    the ``dvfs_*`` entries defaults to the trivial grid."""
+    for name in policy_names():
+        tiers = make_policy(name).freq_tiers
+        if name.startswith("dvfs_"):
+            assert tiers == (1.0, 0.8, 0.6), (name, tiers)
+        else:
+            assert tiers == (1.0,), (name, tiers)

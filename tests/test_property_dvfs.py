@@ -1,0 +1,86 @@
+"""Hypothesis property sweeps for the DVFS power model (ISSUE 8):
+arbitrary phi grids satisfy the tier-model monotonicities (downclocking
+stretches the compute phase and lowers its power draw, with unit tiers
+bit-exactly free), ``pareto_mask`` returns exactly the non-dominated
+points on arbitrary clouds, and ``peak_power <= cap`` stays EXACT (no
+tolerance) when the tier axis and a binding SCC cap compose on the
+event-granular core.  Hypothesis is a dev extra: the suite skips cleanly
+where it isn't installed (see requirements-dev.txt);
+tests/test_dvfs.py carries the non-hypothesis coverage of the same
+invariants."""
+
+import pytest
+
+pytest.importorskip("hypothesis")
+
+import numpy as np  # noqa: E402
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import JSCC_SYSTEMS, Scheduler, make_npb_workload, \
+    make_policy  # noqa: E402
+from test_dvfs import (  # noqa: E402
+    _tier_stream, assert_front_nondominated, assert_tier_monotone)
+from test_event_core import reconstruct_peak_power  # noqa: E402
+
+#: Shared NPB workload (exact predict_phases split) for the grid sweeps.
+W_NPB = make_npb_workload(JSCC_SYSTEMS)
+
+
+@st.composite
+def phi_grids(draw):
+    """A valid ``freq_tiers`` grid: leading unit anchor, then strictly
+    descending phis on a 0.01 lattice in [0.05, 0.99] (the lattice keeps
+    adjacent grids >= 0.01 apart, so the strict monotonicity assertions
+    are float64-robust rather than fighting 1-ulp-apart draws)."""
+    lo = draw(st.lists(st.integers(5, 99), min_size=1, max_size=4,
+                       unique=True))
+    return (1.0,) + tuple(sorted((i / 100 for i in lo), reverse=True))
+
+
+@settings(max_examples=40, deadline=None)
+@given(phi_grids())
+def test_property_tier_model_monotone_npb(grid):
+    """phi down => compute-phase runtime up AND compute-phase power down,
+    for every (program, system) with a compute phase, on the exact NPB
+    phase split; unit tiers reproduce the base tables bit for bit."""
+    assert_tier_monotone(W_NPB, grid)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), phi_grids())
+def test_property_tier_model_monotone_trace_defaults(seed, grid):
+    """Same monotonicities under the trace-workload default phase split
+    (all-compute, all-dynamic) on arbitrary generated streams."""
+    assert_tier_monotone(_tier_stream(n=12, seed=seed), grid)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 80), st.booleans())
+def test_property_pareto_mask_exact(seed, n, quantize):
+    """``pareto_mask`` == the brute-force non-dominance predicate on
+    arbitrary point clouds; quantized clouds exercise the tie rule
+    (equal points survive together)."""
+    rng = np.random.default_rng(seed)
+    e, m = rng.uniform(1.0, 10.0, (2, n))
+    if quantize:
+        e, m = np.round(e), np.round(m)
+    mask = assert_front_nondominated(e, m)
+    # the frontier's energy-sorted makespans are non-increasing
+    order = np.argsort(e[mask], kind="stable")
+    assert (np.diff(m[mask][order]) <= 1e-12).all()
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from([40_000.0, 50_000.0]))
+def test_property_cap_exact_with_dvfs(seed, cap):
+    """DVFS x finite cap compose: the engine's peak_power respects the
+    cap EXACTLY (the admission gate and the recorded trace share one f32
+    accounting), the independent float64 trace reconstruction agrees,
+    and the tier axis is genuinely in play (not vacuously capped at the
+    unit tier)."""
+    w = _tier_stream(n=16, rate=1.2, seed=seed)
+    res = Scheduler(make_policy("dvfs_paper", k=0.6, power_cap=cap),
+                    warm_start=True).run(w)
+    assert float(res.peak_power) <= cap
+    assert reconstruct_peak_power(w, res) <= cap * (1 + 1e-4)
+    assert (np.asarray(res.tier) > 0).any()
