@@ -343,6 +343,49 @@ def run_service():
              f";peak={m.peak_power / 1e3:.1f}kW;bit_identical=True")]
 
 
+def run_pool():
+    """Pooled decision latency (ISSUE 9): N sessions replay the
+    contended SWF stream concurrently through ONE jitted vmapped step
+    (repro.service.SessionPool).  Every lane's totals are asserted
+    bit-identical to the batch run, and the per-decision cost (warm
+    pool-step wall / N) must scale SUB-linearly in N — the vmapped step
+    amortizes dispatch and device traffic across the whole pool."""
+    from repro.service import SessionPool
+
+    w = queue_streams()["swf"]
+    pol = make_policy("paper", k=0.10)
+    qs = "easy_backfill:window=16"
+    batch = Scheduler(pol, warm_start=True, queue=qs, engine="events").run(w)
+    per_dec = {}
+    for n in (1, 4, 8):
+        pool = SessionPool.replicate(
+            Scheduler(pol, warm_start=True, queue=qs), n, w)
+        for j in range(len(w.prog)):
+            t = float(w.arrival[j])
+            pool.drive(t)
+            for i in range(n):
+                pool.submit(i, int(w.prog[j]), t)
+        pool.drain()
+        for i in range(n):
+            res = pool.result(i)
+            for f in ("total_energy", "makespan", "total_wait"):
+                a = np.asarray(getattr(batch, f))
+                b = np.asarray(getattr(res, f))
+                assert a.tobytes() == b.tobytes(), \
+                    f"pool lane {i}/{n} diverged from batch on {f}: {b} != {a}"
+        warm = ((pool.wall_us_total - pool.wall_us_max)
+                / max(pool.n_pool_steps - 1, 1))
+        per_dec[n] = warm / n
+        pool.close()
+    assert per_dec[8] < per_dec[1], \
+        f"pool per-decision cost scaled super-linearly: {per_dec}"
+    return [("pool_decision_latency", per_dec[8],
+             f"n1={per_dec[1]:.0f}us;n4={per_dec[4]:.0f}us"
+             f";n8={per_dec[8]:.0f}us"
+             f";scaling_x8={per_dec[8] / per_dec[1]:.2f}"
+             f";bit_identical=True")]
+
+
 def run_dvfs_pareto():
     """DVFS x selection Pareto lattice (ISSUE 8): one leaf-batched
     ``Scheduler.run`` over a (power_cap x freq_weight x K) grid of the
@@ -362,6 +405,7 @@ SUITES = (("ablation", run),
           ("window_scaling", run_window_scaling),
           ("power_caps", run_power_caps),
           ("service", run_service),
+          ("pool", run_pool),
           ("dvfs_pareto", run_dvfs_pareto))
 
 

@@ -39,7 +39,17 @@ def _tree_to_flat(tree):
 
 
 class CheckpointManager:
-    def __init__(self, directory: str, keep_n: int = 3):
+    """``namespace`` scopes a manager to a subdirectory of ``directory``
+    — the session pool gives every member session its own namespace
+    (``s000``, ``s001``, ...) so per-session checkpoints never collide
+    while sharing one ``--checkpoint-dir`` root (docs/SERVICE.md)."""
+
+    def __init__(self, directory: str, keep_n: int = 3,
+                 namespace: str | None = None):
+        if namespace is not None:
+            if os.sep in namespace or namespace.startswith("."):
+                raise ValueError(f"bad checkpoint namespace {namespace!r}")
+            directory = os.path.join(directory, namespace)
         self.dir = directory
         self.keep_n = keep_n
         os.makedirs(directory, exist_ok=True)

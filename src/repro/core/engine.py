@@ -51,6 +51,7 @@ distinct programs never wait on each other's profile entries).
 
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass, replace
 from functools import partial
 from typing import NamedTuple
@@ -1729,6 +1730,27 @@ def _fault_vec(cfg: SimConfig | FaultConfig):
                       cfg.failure_prob, cfg.restart_overhead], jnp.float32)
 
 
+#: distinguishes "core= not passed" from an explicit core=None (both mean
+#: auto granularity, but only the explicit spelling earns the deprecation
+#: warning)
+_CORE_UNSET = object()
+
+
+def stack_sessions(trees):
+    """Stack N same-structure session pytrees (carries / contexts /
+    scalar-leaf policies) along a new leading axis — the pool's [N, ...]
+    batch the vmapped step consumes.  Leaves must agree in shape, which
+    the fixed-capacity session arrays guarantee."""
+    trees = list(trees)
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def index_session(tree, i: int):
+    """Slice session ``i`` back out of a stacked pool pytree (the inverse
+    of ``stack_sessions`` for one lane)."""
+    return jax.tree.map(lambda x: x[i], tree)
+
+
 class Scheduler:
     """The one entry point: a policy (point or grid), a placement backend,
     optional fault and seed grids — ``run`` simulates everything in a
@@ -1755,18 +1777,18 @@ class Scheduler:
                 Overrides the policy's ``power_cap`` leaf; any finite cap
                 routes onto the event-granular core.  None = keep the
                 policy's leaf (default: uncapped).
-    core:       scan granularity: None (auto — "events" for conservative
+    engine:     scan granularity: None (auto — "events" for conservative
                 queues or finite power caps, "arrival" otherwise),
                 "arrival" (the historical arrival-indexed scans), or
-                "events" (force the event-granular core; FCFS placements
+                "events" (force the event-granular core the online
+                dispatcher runs — see docs/SERVICE.md; FCFS placements
                 are bit-identical to "arrival", asserted per registered
-                policy in tests/test_event_core.py)
-    engine:     alias for ``core`` (the service-facing spelling:
-                ``engine="events"`` routes the default EASY path onto
-                the event core the online dispatcher runs — see
-                docs/SERVICE.md; EASY divergence vs the arrival-indexed
-                scan is documented in tests/test_service.py).  Passing
-                both with different values is an error.
+                policy in tests/test_event_core.py; EASY divergence vs
+                the arrival-indexed scan is documented in
+                tests/test_service.py).
+    core:       DEPRECATED spelling of ``engine`` (emits a
+                ``DeprecationWarning``; docs/API.md migration table).
+                Passing both with different values is an error.
 
     ``run(w)`` returns a ``SimResult`` when no axis is present, else a
     ``CampaignResult`` with ``axes`` ordered (fault, policy, seed) — the
@@ -1779,12 +1801,17 @@ class Scheduler:
                  placer: str | None = None, faults=None, seeds=0,
                  warm_start: bool = False, queue: str | None = None,
                  easy_eval: str = "batched", power_cap=None,
-                 core: str | None = None, engine: str | None = None):
-        if engine is not None:
-            if core is not None and core != engine:
-                raise ValueError(f"core={core!r} conflicts with its alias "
+                 engine: str | None = None, core=_CORE_UNSET):
+        if core is not _CORE_UNSET:
+            warnings.warn(
+                "Scheduler(core=...) is deprecated; use engine=... "
+                "(docs/API.md migration table)", DeprecationWarning,
+                stacklevel=2)
+            if engine is not None and core is not None and core != engine:
+                raise ValueError(f"core={core!r} conflicts with "
                                  f"engine={engine!r}")
-            core = engine
+            if engine is None:
+                engine = core
         self.policy = make_policy(policy) if isinstance(policy, str) else policy
         if queue is not None:
             self.policy = apply_queue_spec(self.policy, queue)
@@ -1794,17 +1821,17 @@ class Scheduler:
         if easy_eval not in ("batched", "unrolled"):
             raise ValueError(f"easy_eval {easy_eval!r} not in "
                              "('batched', 'unrolled')")
-        if core not in (None, "arrival", "events"):
-            raise ValueError(f"core {core!r} not in (None, 'arrival', "
+        if engine not in (None, "arrival", "events"):
+            raise ValueError(f"engine {engine!r} not in (None, 'arrival', "
                              "'events')")
-        if core == "arrival" and self.policy.queue == "conservative":
+        if engine == "arrival" and self.policy.queue == "conservative":
             raise ValueError("queue='conservative' requires the event-"
-                             "granular core (core='events' or None)")
-        if core == "arrival" and self.policy.capped:
+                             "granular core (engine='events' or None)")
+        if engine == "arrival" and self.policy.capped:
             raise ValueError("a finite power_cap requires the event-"
-                             "granular core (core='events' or None): the "
+                             "granular core (engine='events' or None): the "
                              "arrival-indexed scan cannot defer placements")
-        self.core = core
+        self.engine = engine
         self.easy_eval = easy_eval
         self.placer = placer
         self.warm_start = bool(warm_start)
@@ -1814,6 +1841,11 @@ class Scheduler:
             self.faults = tuple(faults)
         self.seeds = seeds if isinstance(seeds, (int, np.integer)) \
             else tuple(int(s) for s in seeds)
+
+    @property
+    def core(self):
+        """Deprecated read alias of ``engine`` (docs/API.md migration)."""
+        return self.engine
 
     def run(self, w: Workload, *, totals_only: bool = False):
         pol = self.policy
@@ -1847,8 +1879,8 @@ class Scheduler:
         # core routing (static): conservative queues and finite caps need
         # completion-event granularity; mid-job failure re-queue rides the
         # event stream whenever the fault grid can fail jobs
-        core = self.core or ("events" if (pol.queue == "conservative"
-                                          or pol.capped) else "arrival")
+        core = self.engine or ("events" if (pol.queue == "conservative"
+                                            or pol.capped) else "arrival")
         fault_list = (() if self.faults is None else
                       (self.faults,) if isinstance(self.faults, FaultConfig)
                       else self.faults)

@@ -83,7 +83,7 @@ def _scheduler_for(scfg: SimConfig, policy=None, seeds=None, faults=None):
     return Scheduler(
         scfg.policy() if policy is None else policy,
         placer=scfg.placer, warm_start=scfg.warm_start,
-        core=scfg.core or None,
+        engine=scfg.core or None,
         seeds=scfg.seed if seeds is None else seeds,
         faults=FaultConfig(
             straggler_prob=scfg.straggler_prob,

@@ -75,9 +75,8 @@ import argparse
 import numpy as np
 
 from repro.core import (JSCC_SYSTEMS, FaultConfig, Scheduler,
-                        make_npb_workload, make_policy, parse_policy_spec,
-                        policy_names, QUEUES)
-from repro.core.policy import apply_queue_spec
+                        make_npb_workload)
+from repro.core.cliargs import add_policy_options, build_engine, build_policy
 from repro.data.scenarios import (make_stream_workload, maintenance_windows,
                                   load_swf, workload_from_trace,
                                   NPB_SMALL, NPB_LARGE, ARRIVAL_KINDS)
@@ -109,42 +108,9 @@ def build_workload(args):
     return make_npb_workload(JSCC_SYSTEMS, outage=outage)
 
 
-def build_policy(args):
-    if args.policy:
-        # --k fills in when the spec doesn't set k explicitly, so
-        # `--policy paper` == `--mode paper` (K defaults to 0.1)
-        pol = parse_policy_spec(args.policy, k=args.k)
-    else:
-        pol = make_policy(args.mode, k=args.k)
-    if args.queue:
-        pol = apply_queue_spec(pol, args.queue)
-    if args.power_cap:
-        from dataclasses import replace
-        pol = replace(pol, power_cap=float(args.power_cap))
-    return pol
-
-
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--policy", default="", metavar="NAME[:k=v,...]",
-                    help="registered policy spec, e.g. paper:k=0.1 or "
-                         f"ucb:k=0.1,ucb_scale=0.25; registry: "
-                         f"{', '.join(policy_names())}")
-    ap.add_argument("--mode", default="paper", choices=policy_names(),
-                    help="legacy spelling of --policy NAME")
-    ap.add_argument("--k", type=float, default=0.1,
-                    help="legacy spelling of --policy NAME:k=F")
-    ap.add_argument("--queue", default="", metavar="DISC[:window=W]",
-                    help="queue discipline overriding the policy's own: "
-                         f"{' | '.join(QUEUES)}; e.g. easy_backfill:window=16"
-                         " or conservative:window=16")
-    ap.add_argument("--power-cap", type=float, default=0.0, metavar="WATTS",
-                    help="SCC power cap (0 = uncapped): placements are "
-                         "deferred while cluster draw would exceed it "
-                         "(event-granular core)")
-    ap.add_argument("--core", default="", choices=("", "arrival", "events"),
-                    help="scan granularity (default: auto — events for "
-                         "conservative/power-capped runs)")
+    add_policy_options(ap, engine=True)     # the shared grammar (cliargs)
     ap.add_argument("--easy-eval", default="batched",
                     choices=("batched", "unrolled"),
                     help="EASY candidate evaluation: batched (one [W, S] "
@@ -173,8 +139,6 @@ def main():
     ap.add_argument("--totals-only", action="store_true",
                     help="campaign memory: aggregate metrics only, no "
                          "per-job arrays (for huge job x grid products)")
-    ap.add_argument("--stragglers", type=float, default=0.0)
-    ap.add_argument("--failures", type=float, default=0.0)
     ap.add_argument("--cold", action="store_true",
                     help="empty profile tables (exploration phase)")
     ap.add_argument("--seed", type=int, default=0)
@@ -182,6 +146,7 @@ def main():
 
     w = build_workload(args)
     pol = build_policy(args)
+    engine = build_engine(args)
     faults = FaultConfig(straggler_prob=args.stragglers,
                          failure_prob=args.failures)
 
@@ -190,7 +155,7 @@ def main():
                       np.float32)
         seeds = [args.seed + i for i in range(max(args.campaign_seeds, 1))]
         res = Scheduler(pol.with_params(k=ks), faults=faults, seeds=seeds,
-                        warm_start=not args.cold, core=args.core or None,
+                        warm_start=not args.cold, engine=engine,
                         easy_eval=args.easy_eval).run(
             w, totals_only=args.totals_only)
         E = np.asarray(res.total_energy)            # [K, R]
@@ -209,7 +174,7 @@ def main():
         ks = np.array([float(x) for x in args.sweep_k.split(",")], np.float32)
         res = Scheduler(pol.with_params(k=ks), faults=faults,
                         seeds=args.seed, warm_start=not args.cold,
-                        core=args.core or None,
+                        engine=engine,
                         easy_eval=args.easy_eval).run(w)
         E = np.asarray(res.total_energy)
         M = np.asarray(res.makespan)
@@ -220,7 +185,7 @@ def main():
         return
 
     r = Scheduler(pol, faults=faults, seeds=args.seed,
-                  warm_start=not args.cold, core=args.core or None,
+                  warm_start=not args.cold, engine=engine,
                   easy_eval=args.easy_eval).run(w)
     sel = np.asarray(r.system)
     k_str = np.format_float_positional(float(np.asarray(pol.k)), trim="-")

@@ -26,7 +26,6 @@ identical remaining decisions.
 from __future__ import annotations
 
 import time
-from dataclasses import replace
 from functools import partial
 
 import numpy as np
@@ -34,11 +33,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.engine import (
-    BIG, FaultConfig, Workload, _fault_vec, _power_totals,
+    BIG, FaultConfig, Scheduler, Workload, _fault_vec, _power_totals,
     _workload_arrays, cons_carry0, event_carry0, event_context,
     make_cons_step, make_event_step,
 )
-from repro.core.policy import Policy, apply_queue_spec, make_policy
+from repro.core.policy import Policy
 from repro.core.result import SimResult
 from repro.checkpoint.manager import CheckpointManager
 from repro.service.metrics import ServiceMetrics
@@ -50,10 +49,17 @@ class Dispatcher:
     ``w`` supplies the program x system tables (runtimes, energies, node
     counts, idle watts, outages); its job stream is only a catalog — the
     session's jobs are whatever ``submit`` registers, up to ``capacity``
-    (default: the catalog's length).  ``policy`` / ``queue`` /
-    ``power_cap`` / ``fault`` / ``seed`` / ``warm_start`` mirror the
-    batch ``Scheduler`` arguments; policy leaves must be scalars (a grid
-    has no live interpretation).  ``checkpoint_dir`` arms save/restore.
+    (default: the catalog's length).
+
+    Construction: ``Dispatcher.from_scheduler(sched, w, ...)`` is the
+    one path — a configured batch ``Scheduler`` IS the session spec
+    (policy with queue/cap/tier knobs applied, placer, fault model,
+    seed, warm start), so the live session re-declares nothing.  The
+    legacy keyword signature survives as a thin shim that builds the
+    ``Scheduler`` for you.  Policy leaves must be scalars (a grid has no
+    live interpretation).  ``checkpoint_dir`` arms save/restore
+    (``checkpoint_namespace`` sub-scopes it — the pool gives every
+    session its own).
     """
 
     def __init__(self, w: Workload, policy: str | Policy = "paper", *,
@@ -62,21 +68,55 @@ class Dispatcher:
                  warm_start: bool = False, queue: str | None = None,
                  power_cap=None, checkpoint_dir: str | None = None,
                  keep_n: int = 3):
-        pol = make_policy(policy) if isinstance(policy, str) else policy
-        if queue is not None:
-            pol = apply_queue_spec(pol, queue)
-        if power_cap is not None:
-            pol = replace(pol, power_cap=np.asarray(power_cap, np.float32))
+        # thin forwarding shim: every session knob a Scheduler already
+        # declares is declared THERE (ISSUE 9 api_redesign)
+        sched = Scheduler(
+            policy, placer=placer, faults=fault, seeds=int(seed),
+            warm_start=warm_start, queue=queue, power_cap=power_cap)
+        self._setup(sched, w, capacity=capacity,
+                    checkpoint_dir=checkpoint_dir, keep_n=keep_n)
+
+    @classmethod
+    def from_scheduler(cls, sched: Scheduler, w: Workload, *,
+                       capacity: int | None = None,
+                       seed: int | None = None,
+                       checkpoint_dir: str | None = None,
+                       keep_n: int = 3,
+                       checkpoint_namespace: str | None = None
+                       ) -> "Dispatcher":
+        """The single construction path (CLI, ``SessionPool``, tests):
+        adopt a batch ``Scheduler``'s full configuration as the live
+        session spec.  ``seed`` overrides the scheduler's scalar seed;
+        grid-valued schedulers (seed/fault axes, leaf-batched policies)
+        are rejected — a live session is one point."""
+        self = cls.__new__(cls)
+        self._setup(sched, w, capacity=capacity, seed=seed,
+                    checkpoint_dir=checkpoint_dir, keep_n=keep_n,
+                    checkpoint_namespace=checkpoint_namespace)
+        return self
+
+    def _setup(self, sched: Scheduler, w: Workload, *,
+               capacity=None, seed=None, checkpoint_dir=None, keep_n=3,
+               checkpoint_namespace=None):
+        if isinstance(sched.faults, tuple):
+            raise ValueError("live sessions take one FaultConfig, not a "
+                             "fault grid")
+        if not isinstance(sched.seeds, (int, np.integer)):
+            raise ValueError("live sessions take one seed, not a grid")
+        pol = sched.policy
         for leaf in ("k", "ucb_scale", "power_cap", "freq_weight"):
             if np.asarray(getattr(pol, leaf)).ndim:
                 raise ValueError(f"live policy leaf {leaf!r} must be a "
                                  "scalar, got a grid")
+        self.scheduler = sched
         self.policy = pol
-        self.seed = int(seed)
-        self.fault = fault
+        self.seed = int(sched.seeds if seed is None else seed)
+        self.fault = sched.faults
+        self.placer = sched.placer
         self.capacity = int(capacity) if capacity else max(len(w.prog), 1)
         self.w = w
 
+        fault = self.fault
         self._fvec = _fault_vec(fault or FaultConfig())
         self._retries = bool(fault and fault.failure_prob > 0)
         arrs = _workload_arrays(w)
@@ -89,19 +129,24 @@ class Dispatcher:
                        if "outage" in arrs else 0)
 
         P, S = w.T_true.shape
-        if warm_start:
+        if sched.warm_start:
             tabs0 = (jnp.asarray(w.C_true), jnp.asarray(w.T_true),
                      jnp.ones((P, S), jnp.int32))
         else:
             tabs0 = (jnp.zeros((P, S)), jnp.zeros((P, S)),
                      jnp.zeros((P, S), jnp.int32))
-        self.warm_start = bool(warm_start)
+        self.warm_start = bool(sched.warm_start)
+        self._tabs0 = tabs0
 
         if pol.queue == "conservative":
             build, carry0 = make_cons_step, cons_carry0
         else:
             build, carry0 = make_event_step, event_carry0
-        step = build(pol, placer, totals_only=False, retries=self._retries)
+        # the pool re-invokes the builder with a leaf-batched policy
+        # under vmap — expose it alongside the concrete-leaf closure
+        self._build_step = build
+        step = build(pol, self.placer, totals_only=False,
+                     retries=self._retries)
         self._step_fn = step
         self._step = jax.jit(step)
         # live sessions open at t=0 (the batch scan opens at the first
@@ -125,28 +170,37 @@ class Dispatcher:
         self._bf = np.zeros(C, bool)
         self._tier = np.zeros(C, np.int32)
 
-        self._mgr = (CheckpointManager(checkpoint_dir, keep_n=keep_n)
+        self._mgr = (CheckpointManager(checkpoint_dir, keep_n=keep_n,
+                                       namespace=checkpoint_namespace)
                      if checkpoint_dir else None)
         self._save_step = 0
 
     # ------------------------------------------------------------ intake
+    def _validate_intake(self, prog: int, t: float, *, queued: int = 0,
+                         last: float | None = None):
+        """The submit-time checks, shared with the pool's buffered
+        intake (``queued``/``last`` describe its not-yet-flushed
+        buffer)."""
+        if self.n_submitted + queued >= self.capacity:
+            raise RuntimeError(f"session full: capacity {self.capacity}")
+        if not 0 <= int(prog) < self.w.T_true.shape[0]:
+            raise ValueError(f"prog {prog} not in the facility catalog "
+                             f"(P={self.w.T_true.shape[0]})")
+        if t < self.now:
+            raise ValueError(f"arrival {t} is in the past (now={self.now})")
+        if last is None and self.n_submitted:
+            last = float(self._arrs["arrival"][self.n_submitted - 1])
+        if last is not None and t < last:
+            raise ValueError("submissions must be arrival-ordered")
+
     def submit(self, prog: int, arrival: float | None = None,
                k: float | None = None) -> int:
         """Register a job: program index, submit time (default: the
         current clock), optional per-job K override.  Returns the job id.
         Submitting an arrival earlier than the clock is an error — the
         past is already decided."""
-        if self.n_submitted >= self.capacity:
-            raise RuntimeError(f"session full: capacity {self.capacity}")
-        if not 0 <= int(prog) < self.w.T_true.shape[0]:
-            raise ValueError(f"prog {prog} not in the facility catalog "
-                             f"(P={self.w.T_true.shape[0]})")
         t = float(self.now if arrival is None else arrival)
-        if t < self.now:
-            raise ValueError(f"arrival {t} is in the past (now={self.now})")
-        if self.n_submitted and t < float(
-                self._arrs["arrival"][self.n_submitted - 1]):
-            raise ValueError("submissions must be arrival-ordered")
+        self._validate_intake(prog, t)
         j = self.n_submitted
         a = self._arrs
         a["prog"] = a["prog"].at[j].set(int(prog))

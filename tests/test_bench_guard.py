@@ -69,6 +69,7 @@ def test_committed_rows_carry_timed_flag():
     assert rows["queue_swf_conservative"]["timed"]
     assert rows["queue_swf_fcfs"]["timed"]
     assert rows["service_decision_latency"]["timed"]
+    assert rows["pool_decision_latency"]["timed"]
     assert rows["dvfs_pareto_grid"]["timed"]
 
 
@@ -192,3 +193,34 @@ def test_service_decision_latency_gate():
         f"{GATE}x committed {committed:.0f}us (speed factor {speed:.2f}) "
         f"— if intentional, regenerate BENCH_scheduler.json via "
         f"`python benchmarks/scheduler_ablation.py --suites service`")
+
+
+def test_pool_decision_latency_gate():
+    """ISSUE 9: warm per-decision latency of the 8-session vmapped pool
+    on the SWF stream must stay within GATE x of the committed
+    ``pool_decision_latency`` row (machine-normalized through the FCFS
+    anchor), and the suite's own asserts re-check per-lane bit-identity
+    plus SUB-linear per-decision scaling in N — one pool step must be
+    cheaper than N independent steps."""
+    from scheduler_ablation import (machine_speed_factor, queue_streams,
+                                    run_pool)
+
+    rows = _committed_rows()
+    committed = rows["pool_decision_latency"]["us_per_call"]
+    committed_fcfs = rows["queue_swf_fcfs"]["us_per_call"]
+
+    fresh_fcfs = _median_fcfs_us(queue_streams()["swf"])
+    (_, fresh, derived), = run_pool()
+    assert "bit_identical=True" in derived
+    scaling = float(derived.split("scaling_x8=")[1].split(";")[0])
+    assert scaling < 1.0, (
+        f"pool per-decision cost no longer sub-linear in N "
+        f"(x8 scaling {scaling:.2f})")
+
+    speed = machine_speed_factor(fresh_fcfs, committed_fcfs)
+    bound = GATE * committed * speed
+    assert fresh <= bound, (
+        f"pool decision latency regressed: fresh {fresh:.0f}us/decision > "
+        f"{GATE}x committed {committed:.0f}us (speed factor {speed:.2f}) "
+        f"— if intentional, regenerate BENCH_scheduler.json via "
+        f"`python benchmarks/scheduler_ablation.py --suites pool`")

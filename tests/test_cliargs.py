@@ -1,0 +1,121 @@
+"""The unified CLI option grammar (core/cliargs.py, ISSUE 9).
+
+One parser now feeds both launch CLIs; these tests pin (a) every
+pre-consolidation spelling still resolving to the same Policy, (b) the
+canonical ``policy_spec`` rendering round-tripping through
+``parse_policy_spec``, and (c) the ``--engine``/``--core`` resolution
+(deprecation included).
+"""
+
+import argparse
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import make_policy, parse_policy_spec
+from repro.core.cliargs import (add_policy_options, build_engine,
+                                build_fault, build_policy, policy_spec)
+
+
+def parse(*argv):
+    ap = argparse.ArgumentParser()
+    add_policy_options(ap, engine=True)
+    return ap.parse_args(list(argv))
+
+
+# ---------------------------------------------------- existing spellings
+
+@pytest.mark.parametrize("argv,expect", [
+    # legacy --mode/--k pair
+    (["--mode", "paper", "--k", "0.2"], make_policy("paper", k=0.2)),
+    # spec with explicit k
+    (["--policy", "paper:k=0.1"], make_policy("paper", k=0.1)),
+    # --k fills in when the spec leaves k unset (--policy paper == --mode)
+    (["--policy", "paper", "--k", "0.3"], make_policy("paper", k=0.3)),
+    # multi-param spec
+    (["--policy", "ucb:k=0.1,ucb_scale=0.25"],
+     make_policy("ucb", k=0.1, ucb_scale=0.25)),
+    # queue override with window
+    (["--mode", "paper", "--queue", "easy_backfill:window=16"],
+     make_policy("paper", k=0.1, queue="easy_backfill", window=16)),
+    (["--mode", "paper", "--queue", "conservative:window=4"],
+     make_policy("paper", k=0.1, queue="conservative", window=4)),
+    # power cap override
+    (["--mode", "paper", "--power-cap", "60000"],
+     make_policy("paper", k=0.1, power_cap=60000.0)),
+    # DVFS tier grid: '+'-separated tiers, freq_weight leaf
+    (["--policy", "dvfs_paper:freq_tiers=1.0+0.8+0.6,freq_weight=0.5"],
+     make_policy("dvfs_paper", k=0.1, freq_tiers=(1.0, 0.8, 0.6),
+                 freq_weight=0.5)),
+])
+def test_existing_spellings_unchanged(argv, expect):
+    assert build_policy(parse(*argv)) == expect
+
+
+def test_spec_precedence_over_mode():
+    """--policy wins over --mode; --queue/--power-cap still apply on top
+    (the precedence both CLIs historically used)."""
+    args = parse("--policy", "ucb:k=0.05", "--mode", "paper",
+                 "--queue", "easy_backfill:window=8",
+                 "--power-cap", "45000")
+    pol = build_policy(args)
+    assert pol.name == "ucb" and float(np.asarray(pol.k)) == 0.05
+    assert pol.queue == "easy_backfill" and pol.window == 8
+    assert float(np.asarray(pol.power_cap)) == 45000.0
+
+
+def test_bad_specs_rejected():
+    with pytest.raises(ValueError, match="key=val"):
+        build_policy(parse("--policy", "paper:k"))
+    with pytest.raises(ValueError, match="queue"):
+        build_policy(parse("--mode", "paper", "--queue", "nope"))
+    with pytest.raises(ValueError, match="window"):
+        build_policy(parse("--mode", "paper", "--queue", "fcfs:depth=3"))
+
+
+# ----------------------------------------------------------- round-trip
+
+@pytest.mark.parametrize("pol", [
+    make_policy("paper", k=0.1),
+    make_policy("ucb", k=0.2, ucb_scale=0.75),
+    make_policy("paper", k=0.1, queue="easy_backfill", window=16),
+    make_policy("conservative", k=0.15, window=4),
+    make_policy("paper", k=0.1, power_cap=52000.0),
+    make_policy("dvfs_paper", k=0.1, freq_tiers=(1.0, 0.8, 0.6),
+                freq_weight=0.5, power_cap=60000.0),
+])
+def test_policy_spec_round_trips(pol):
+    """parse(spec(p)) == p — the canonical rendering is a faithful CLI
+    spelling of any scalar registered policy."""
+    spec = policy_spec(pol)
+    assert parse_policy_spec(spec) == pol
+    # and the rendering is stable (spec of the reparse is identical)
+    assert policy_spec(parse_policy_spec(spec)) == spec
+
+
+def test_policy_spec_rejects_grids_and_anonymous():
+    with pytest.raises(ValueError, match="grid"):
+        policy_spec(make_policy("paper", k=np.asarray([0.1, 0.2],
+                                                      np.float32)))
+
+
+# -------------------------------------------------- engine / fault flags
+
+def test_engine_flag_resolution():
+    assert build_engine(parse("--mode", "paper")) is None
+    assert build_engine(parse("--engine", "events")) == "events"
+    with pytest.warns(DeprecationWarning, match="--core is deprecated"):
+        assert build_engine(parse("--core", "events")) == "events"
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError, match="conflicts"):
+            build_engine(parse("--core", "arrival", "--engine", "events"))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        assert build_engine(parse("--engine", "arrival")) == "arrival"
+
+
+def test_fault_flag_resolution():
+    assert build_fault(parse("--mode", "paper")) is None
+    f = build_fault(parse("--failures", "0.1", "--stragglers", "0.05"))
+    assert f.failure_prob == 0.1 and f.straggler_prob == 0.05

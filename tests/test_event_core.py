@@ -42,7 +42,7 @@ def assert_event_fcfs_bit_identical(w, name, *, warm=True, seeds=7,
                                     faults=None):
     kw = dict(warm_start=warm, seeds=seeds, faults=faults)
     ra = Scheduler(make_policy(name, k=0.1), **kw).run(w)
-    re = Scheduler(make_policy(name, k=0.1), core="events", **kw).run(w)
+    re = Scheduler(make_policy(name, k=0.1), engine="events", **kw).run(w)
     for field in FCFS_FIELDS:
         np.testing.assert_array_equal(
             np.asarray(getattr(ra, field)), np.asarray(getattr(re, field)),
@@ -77,7 +77,7 @@ def test_event_fcfs_bit_identity_stragglers_and_outages():
     assert_event_fcfs_bit_identical(w, "paper", faults=faults)
     kw = dict(warm_start=True, faults=faults)
     ta = Scheduler("paper", **kw).run(w, totals_only=True)
-    te = Scheduler("paper", core="events", **kw).run(w, totals_only=True)
+    te = Scheduler("paper", engine="events", **kw).run(w, totals_only=True)
     for field in ("total_energy", "total_wait", "slowdown_sum", "makespan",
                   "max_wait", "busy"):
         np.testing.assert_array_equal(np.asarray(getattr(ta, field)),
@@ -145,8 +145,10 @@ def test_differential_power_capped(queue):
 
 
 def test_differential_event_easy_and_fcfs():
-    """core="events" differentials for the re-used disciplines: the
-    mirror replays the merged event stream step for step."""
+    """engine="events" differentials for the re-used disciplines: the
+    mirror replays the merged event stream step for step.  (The legacy
+    ``SimConfig`` keeps its ``core`` field — only the ``Scheduler``
+    facade grew the ``engine=`` spelling.)"""
     w = _stream(n=35, rate=1.0)
     assert_differential(w, SimConfig(mode="paper", k=0.1, warm_start=True,
                                      core="events"))
@@ -249,7 +251,7 @@ def test_peak_power_under_cap_and_reconstruction(queue):
                                rtol=1e-4)
     # uncapped run on the same stream actually exceeds the cap (binding)
     un = Scheduler("paper", warm_start=True, queue=queue or None,
-                   core="events").run(w)
+                   engine="events").run(w)
     assert float(un.peak_power) > cap
     assert float(res.makespan) >= float(un.makespan) * (1 - 1e-6)
     assert float(res.capped_delay) > 0
@@ -292,9 +294,9 @@ def test_cap_below_idle_floor_forces_progress():
 
 def test_power_cap_requires_event_core():
     with pytest.raises(ValueError, match="event-"):
-        Scheduler("paper", power_cap=50_000.0, core="arrival")
+        Scheduler("paper", power_cap=50_000.0, engine="arrival")
     with pytest.raises(ValueError, match="event-"):
-        Scheduler("conservative", core="arrival")
+        Scheduler("conservative", engine="arrival")
 
 
 def test_trace_workloads_carry_idle_watts():
@@ -309,7 +311,7 @@ def test_trace_workloads_carry_idle_watts():
         np.asarray(w.idle_w),
         np.asarray([s.idle_w for s in JSCC_SYSTEMS], np.float32))
     idle_floor = float(np.sum(np.asarray(w.idle_w) * np.asarray(w.n_nodes)))
-    res = Scheduler("paper", warm_start=True, core="events").run(w)
+    res = Scheduler("paper", warm_start=True, engine="events").run(w)
     assert float(res.peak_power) >= idle_floor
     assert float(res.idle_energy) > 0
 
@@ -338,7 +340,7 @@ def test_failure_requeue_semantics(queue):
     per-job runtime carries both attempts (restart_overhead + full
     rerun when both attempts land on one system)."""
     w = _stream(n=20, rate=0.5, seed=9)
-    kw = dict(warm_start=True, core="events" if not queue else None,
+    kw = dict(warm_start=True, engine="events" if not queue else None,
               queue=queue or None)
     clean = Scheduler("paper", **kw).run(w)
     faulty = Scheduler(

@@ -10,9 +10,10 @@ The acceptance criteria pinned here:
     finishes with decisions/totals bit-identical to uninterrupted;
   - a what-if query answers from a forked rollout without mutating the
     live carry (carry snapshot equality);
-  - ``engine="events"`` (the service-facing alias of ``core=``) routes
-    the default EASY path onto the event core; its divergence from the
-    arrival-indexed EASY scan is real and documented below.
+  - ``engine="events"`` routes the default EASY path onto the event
+    core (``core=`` survives only as a deprecation shim, PR 9); the
+    divergence from the arrival-indexed EASY scan is real and
+    documented below.
 """
 
 import pathlib
@@ -203,19 +204,34 @@ def test_whatif_reports_cap_headroom():
     assert proj["peak_power"] + proj["cap_headroom"] == pytest.approx(60e3)
 
 
-# ------------------------------------------------- engine= alias / EASY
+# -------------------------------------------- engine= / core= shim / EASY
 
-def test_engine_alias_matches_core():
+def test_core_deprecation_shim_matches_engine():
+    """``core=`` still routes (bit-identically) but warns: the PR 9
+    migration keeps every old call site working while naming the one
+    supported spelling (``engine=``)."""
     w = small_stream()
     pol = make_policy("paper", k=0.1)
-    ra = Scheduler(pol, warm_start=True, core="events").run(w)
+    with pytest.warns(DeprecationWarning, match="core=.*deprecated"):
+        sched = Scheduler(pol, warm_start=True, core="events")
+    assert sched.engine == "events"
+    ra = sched.run(w)
     rb = Scheduler(pol, warm_start=True, engine="events").run(w)
     assert_bit_identical(ra, rb)
 
 
+def test_engine_keyword_does_not_warn():
+    import warnings as _warnings
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error", DeprecationWarning)
+        sched = Scheduler("paper", engine="events")
+    assert sched.engine == sched.core == "events"
+
+
 def test_engine_alias_conflict_raises():
-    with pytest.raises(ValueError, match="conflicts"):
-        Scheduler("paper", core="arrival", engine="events")
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError, match="conflicts"):
+            Scheduler("paper", core="arrival", engine="events")
 
 
 @pytest.mark.slow

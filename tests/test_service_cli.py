@@ -80,3 +80,50 @@ def test_kill_and_restore_matches_uninterrupted(tmp_path):
     solo = run_cli(STREAM + finish)
     assert solo[-1]["totals"] == second[-1]["totals"]
     assert solo[-1]["n_jobs"] == second[-1]["n_jobs"] == 4
+
+
+# ------------------------------------------------------------ pool mode
+
+POOL = ["--pool", "4"]
+#: four distinct per-session program orders over one shared arrival grid
+PROGS = [["BT", "LU", "SP", "EP"], ["LU", "BT", "EP", "SP"],
+         ["SP", "EP", "BT", "LU"], ["EP", "SP", "LU", "BT"]]
+
+
+def _psub(i, j):
+    return {"op": "submit", "session": i,
+            "prog": PROGS[i][j], "arrival": 30.0 * j}
+
+
+def test_pool_kill_and_restore_per_session(tmp_path):
+    """The pool smoke (ISSUE 9): 4 sessions multiplexed over one loop,
+    checkpointed mid-stream into per-session namespaces, killed,
+    ``--restore``d in a new process, finished — per-session totals
+    bit-identical to an uninterrupted pool."""
+    ck = ["--checkpoint-dir", str(tmp_path)]
+    head = [_psub(i, j) for j in (0, 1) for i in range(4)]
+    tail = [_psub(i, j) for j in (2, 3) for i in range(4)]
+    finish = ([{"op": "drain"}]
+              + [{"op": "result", "session": i} for i in range(4)]
+              + [{"op": "metrics"}])
+
+    first = run_cli(head + [{"op": "drive", "until": 60.0},
+                            {"op": "checkpoint"}], *POOL, *ck)
+    assert all(r["ok"] for r in first)
+    assert first[-1]["steps"] == [0, 0, 0, 0]
+    # per-session namespaces under one root
+    assert sorted(p.name for p in tmp_path.iterdir()) == \
+        ["s000", "s001", "s002", "s003"]
+
+    second = run_cli(tail + finish, *POOL, *ck, "--restore")
+    assert all(r["ok"] for r in second)
+    banner = second[0]
+    assert banner["resumed"] and banner["sessions"] == 4
+    assert banner["n_submitted"] == [2, 2, 2, 2]
+
+    solo = run_cli(head + tail + finish, *POOL)
+    assert solo[-5:-1] == second[-5:-1]          # 4 per-session results
+    for i in range(4):
+        m = second[-1]["metrics"][str(i)]
+        assert m["n_submitted"] == 4 and m["n_finished"] == 4
+        assert m["queue_depth"] == 0

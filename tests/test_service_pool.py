@@ -1,0 +1,282 @@
+"""Multi-session scale-out (ISSUE 9): the vmapped session pool.
+
+Acceptance criteria pinned here:
+
+  - an N-session ``SessionPool`` fed per-session streams is bit-identical,
+    per session, to N independent ``Dispatcher``s — across fcfs / EASY /
+    conservative disciplines, a power-capped config and a DVFS-tier
+    config (leaves differ per session, composition shared);
+  - one compile serves the whole pool (the jit cache stays at 1);
+  - buffered intake (submit-many, flush in one scatter at the next
+    drive) realizes the same decisions as immediate per-job submission;
+  - pool checkpoints are per-session namespaced and a restored pool
+    resumes bit-identically (sync and async save paths);
+  - ``whatif`` answers from the member's cached fork without mutating
+    the lane's carry and matches the independent session's projection;
+  - the ``AsyncWriter`` runs its queue in order, drains on close, and
+    surfaces worker exceptions at the API boundary;
+  - the decision log carries every placement with its session tag.
+"""
+
+import json
+
+import numpy as np
+import pytest
+import jax
+
+from repro.core import JSCC_SYSTEMS, Scheduler, make_npb_workload, \
+    make_policy
+from repro.service import AsyncWriter, Dispatcher, SessionPool
+
+from test_service import FIELDS, assert_bit_identical, small_stream
+
+
+def pool_scheds(kind):
+    """Three-session configurations: leaves differ, composition shared."""
+    if kind == "fcfs":
+        pols = [make_policy("paper", k=k) for k in (0.05, 0.1, 0.2)]
+    elif kind == "easy":
+        pols = [make_policy("paper", k=k, queue="easy_backfill", window=4)
+                for k in (0.05, 0.1, 0.2)]
+    elif kind == "conservative":
+        pols = [make_policy("paper", k=k, queue="conservative", window=4)
+                for k in (0.05, 0.1, 0.2)]
+    elif kind == "capped":
+        pols = [make_policy("paper", k=0.1, power_cap=c)
+                for c in (45000.0, 60000.0, 80000.0)]
+    elif kind == "dvfs":
+        pols = [make_policy("dvfs_paper", k=0.1,
+                            freq_tiers=(1.0, 0.8, 0.6), freq_weight=fw)
+                for fw in (0.0, 0.5, 1.0)]
+    else:
+        raise ValueError(kind)
+    return [Scheduler(p, warm_start=True, seeds=i)
+            for i, p in enumerate(pols)]
+
+
+def pool_replay(w, pool):
+    """The live protocol, session-interleaved: every lane is driven to
+    each arrival (the others hold their horizon) and submits the job."""
+    for j in range(len(w.prog)):
+        t = float(w.arrival[j])
+        for i in range(pool.n):
+            pool.drive(t, session=i)
+            pool.submit(i, int(w.prog[j]), t)
+    pool.drain()
+    return pool
+
+
+def independent_replay(w, scheds, capacity=None):
+    ds = [Dispatcher.from_scheduler(s, w, capacity=capacity)
+          for s in scheds]
+    for d in ds:
+        for j in range(len(w.prog)):
+            d.drive(until=float(w.arrival[j]))
+            d.submit(int(w.prog[j]), float(w.arrival[j]))
+        d.drain()
+    return ds
+
+
+# ------------------------------------------------- per-session identity
+
+@pytest.mark.parametrize("kind", ["fcfs", "easy", "conservative",
+                                  "capped", "dvfs"])
+def test_pool_bit_identical_to_independent_sessions(kind):
+    """The correctness bar: every lane of the pool realizes the same
+    decisions and the same SimResult, bitwise, as an independent
+    Dispatcher with the same spec — and ONE compile served all lanes."""
+    w = small_stream()
+    inds = independent_replay(w, pool_scheds(kind))
+    pool = pool_replay(w, SessionPool(pool_scheds(kind), w))
+    for i, d in enumerate(inds):
+        assert pool.sessions[i].decisions == d.decisions
+        assert_bit_identical(d.result(), pool.result(i))
+    assert pool._step._cache_size() == 1
+    pool.close()
+
+
+def test_pool_rejects_mixed_composition():
+    w = small_stream()
+    with pytest.raises(ValueError, match="static"):
+        SessionPool([Scheduler(make_policy("paper", k=0.1)),
+                     Scheduler(make_policy("paper", k=0.1,
+                                           queue="easy_backfill",
+                                           window=4))], w)
+
+
+# ------------------------------------------------------- batched intake
+
+def test_batched_intake_matches_immediate_submission():
+    """Many buffered submissions flush in one scatter at the next drive
+    and realize exactly what per-job submission realizes."""
+    w = small_stream()
+    inds = independent_replay(w, pool_scheds("easy"))
+    pool = SessionPool(pool_scheds("easy"), w)
+    # buffer the whole stream for every session, then one global drain
+    for i in range(pool.n):
+        for j in range(len(w.prog)):
+            jid = pool.submit(i, int(w.prog[j]), float(w.arrival[j]))
+            assert jid == j
+    assert sum(len(b) for b in pool._buffers) == pool.n * len(w.prog)
+    pool.drain()
+    for i, d in enumerate(inds):
+        assert pool.sessions[i].decisions == d.decisions
+        assert_bit_identical(d.result(), pool.result(i))
+    pool.close()
+
+
+def test_intake_validation_at_buffer_time():
+    w = small_stream()
+    pool = SessionPool(pool_scheds("fcfs")[:2], w, capacity=3)
+    pool.submit(0, 0, 0.0)
+    pool.submit(0, 1, 5.0)
+    with pytest.raises(ValueError, match="arrival-ordered"):
+        pool.submit(0, 2, 1.0)          # behind the buffered tail
+    pool.submit(0, 2, 9.0)
+    with pytest.raises(RuntimeError, match="session full"):
+        pool.submit(0, 3, 10.0)         # capacity counts the buffer
+    with pytest.raises(ValueError, match="catalog"):
+        pool.submit(1, 99, 0.0)
+    pool.close()
+
+
+def test_undriven_lanes_hold_state():
+    """Driving one session leaves the others' clocks and decision lists
+    untouched (their steps are carry no-ops)."""
+    w = small_stream()
+    pool = SessionPool(pool_scheds("fcfs"), w)
+    for i in range(pool.n):
+        pool.submit(i, int(w.prog[0]), 0.0)
+    pool.drive(300.0, session=0)
+    assert pool.now(0) > 0.0
+    assert pool.now(1) == 0.0 and pool.now(2) == 0.0
+    assert not pool.sessions[1].decisions and not pool.sessions[2].decisions
+    pool.close()
+
+
+# ---------------------------------------------------- checkpoint/restore
+
+def _feed(pool, w, lo, hi):
+    for j in range(lo, hi):
+        t = float(w.arrival[j])
+        for i in range(pool.n):
+            pool.drive(t, session=i)
+            pool.submit(i, int(w.prog[j]), t)
+
+
+@pytest.mark.parametrize("blocking", [True, False])
+def test_pool_checkpoint_restore_bit_identical(tmp_path, blocking):
+    """Kill a pool mid-stream, restore a fresh one from the namespaced
+    checkpoints, replay the remainder: decisions and totals match the
+    uninterrupted pool bitwise (sync and async-writer save paths)."""
+    w = small_stream()
+    half = len(w.prog) // 2
+    ref = pool_replay(w, SessionPool(pool_scheds("easy"), w))
+
+    ck = str(tmp_path / "ck")
+    pool = SessionPool(pool_scheds("easy"), w, checkpoint_dir=ck)
+    _feed(pool, w, 0, half)
+    steps = pool.save(blocking=blocking)
+    assert steps == [0] * pool.n
+    pool.close()                          # drains the async writer
+    del pool
+
+    pool2 = SessionPool(pool_scheds("easy"), w, checkpoint_dir=ck)
+    assert pool2.restore() is True
+    assert [d.n_submitted for d in pool2.sessions] == [half] * pool2.n
+    _feed(pool2, w, half, len(w.prog))
+    pool2.drain()
+    for i in range(ref.n):
+        assert pool2.sessions[i].decisions == ref.sessions[i].decisions
+        assert_bit_identical(ref.result(i), pool2.result(i))
+    pool2.close()
+    ref.close()
+
+
+def test_pool_restore_single_session(tmp_path):
+    """One lane can be rolled back while the others keep their state."""
+    w = small_stream()
+    ck = str(tmp_path / "ck")
+    pool = SessionPool(pool_scheds("fcfs"), w, checkpoint_dir=ck)
+    _feed(pool, w, 0, 3)
+    pool.save()
+    _feed(pool, w, 3, 6)
+    pool.drain()                # restore refuses buffered submissions
+    n_after = pool.sessions[2].n_submitted
+    assert pool.restore(session=1) is True
+    assert pool.sessions[1].n_submitted == 3
+    assert pool.sessions[2].n_submitted == n_after
+    pool.close()
+
+
+# --------------------------------------------------------------- whatif
+
+def test_pool_whatif_pure_and_matches_member():
+    w = small_stream()
+    # capacity > stream length: the what-if needs a free slot
+    inds = independent_replay(w, pool_scheds("easy"), capacity=12)
+    pool = pool_replay(w, SessionPool(pool_scheds("easy"), w, capacity=12))
+    before = pool.sessions[1].carry_snapshot()
+    proj = pool.whatif(1, 2)
+    after = pool.sessions[1].carry_snapshot()
+    for a, b in zip(jax.tree.leaves(before), jax.tree.leaves(after)):
+        assert np.asarray(a).tobytes() == np.asarray(b).tobytes()
+    from repro.service import whatif
+    assert proj == whatif(inds[1], 2)
+    pool.close()
+
+
+# --------------------------------------------------------- async writer
+
+def test_async_writer_orders_and_drains():
+    out = []
+    with AsyncWriter(maxsize=4) as wtr:
+        for i in range(200):
+            wtr.submit(out.append, i)   # backpressure past maxsize
+    assert out == list(range(200))      # in order, fully drained
+
+
+def test_async_writer_surfaces_worker_errors():
+    wtr = AsyncWriter()
+
+    def boom():
+        raise RuntimeError("disk full")
+
+    wtr.submit(boom)
+    with pytest.raises(RuntimeError, match="disk full"):
+        wtr.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        wtr.submit(print)
+
+
+def test_async_writer_flush_waits():
+    import time
+    out = []
+
+    def slow(i):
+        time.sleep(0.005)
+        out.append(i)
+
+    wtr = AsyncWriter()
+    for i in range(10):
+        wtr.submit(slow, i)
+    wtr.flush()
+    assert out == list(range(10))
+    wtr.close()
+
+
+# --------------------------------------------------------- decision log
+
+def test_pool_decision_log(tmp_path):
+    log = tmp_path / "decisions.jsonl"
+    with SessionPool(pool_scheds("fcfs"), w := small_stream(),
+                     decision_log=str(log)) as pool:
+        pool_replay(w, pool)
+        per_session = {i: list(pool.sessions[i].decisions)
+                       for i in range(pool.n)}
+    recs = [json.loads(line) for line in log.read_text().splitlines()]
+    assert len(recs) == sum(len(d) for d in per_session.values())
+    for i, decs in per_session.items():
+        got = [{k: v for k, v in r.items() if k != "session"}
+               for r in recs if r["session"] == i]
+        assert got == decs
