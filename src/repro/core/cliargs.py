@@ -19,6 +19,11 @@ This module is the single definition of the shared grammar:
     --engine {arrival,events}     scan granularity (``--core`` survives
                                   as a deprecated alias)
     --stragglers / --failures     fault-model probabilities
+    --shards auto|N               device-shard the campaign grid axis
+                                  (``add_scale_options``; shard_map over
+                                  the ("grid",) mesh)
+    --chunk SIZE                  stream the event scan in SIZE-step
+                                  windows (bounded memory at J=10^6)
 
 ``build_policy`` / ``build_fault`` / ``build_engine`` resolve parsed
 args into engine objects; ``policy_spec`` renders a scalar policy back
@@ -81,6 +86,37 @@ def add_policy_options(ap, *, engine: bool = False, faults: bool = True):
         ap.add_argument("--failures", type=float, default=0.0,
                         help="per-job failure probability (enables retries)")
     return ap
+
+
+def add_scale_options(ap):
+    """Install the campaign scale-out pair (``--shards``/``--chunk``) —
+    shared by the batch CLI and the million-job benches.  Returns the
+    parser for chaining."""
+    ap.add_argument("--shards", default="", metavar="auto|N",
+                    help="shard the campaign grid across local devices "
+                         "(shard_map): 'auto' = every device, N = explicit "
+                         "count; default: single-device vmap")
+    ap.add_argument("--chunk", type=int, default=0, metavar="SIZE",
+                    help="stream the event scan in SIZE-step windows with "
+                         "the carry threaded between chunks (bounded "
+                         "memory for million-job traces; 0 = monolithic)")
+    return ap
+
+
+def build_scale(args) -> dict:
+    """Resolve the scale-out pair into ``Scheduler(shards=, chunk=)``
+    kwargs (absent flags resolve to the single-device monolithic
+    defaults, so callers can always ``**build_scale(args)``)."""
+    shards = getattr(args, "shards", "") or None
+    if shards is not None and shards != "auto":
+        try:
+            shards = int(shards)
+        except ValueError:
+            raise ValueError(
+                f"--shards expects 'auto' or a device count, got "
+                f"{shards!r}") from None
+    chunk = int(getattr(args, "chunk", 0) or 0) or None
+    return {"shards": shards, "chunk": chunk}
 
 
 def build_policy(args) -> Policy:

@@ -67,6 +67,9 @@ from repro.core.result import SimResult, CampaignResult
 from repro.core.workload_model import NPB_PROFILES, npb_tables
 from repro.kernels.kth_free import (kth_free_time, kth_free_time_rows,
                                     kth_free_time_shared)
+from repro.sharding.grid import (grid_spec as _grid_spec,
+                                 replicated as _replicated,
+                                 shard_map as _shard_map)
 
 
 @dataclass(frozen=True)
@@ -317,32 +320,67 @@ def _tier_rows(tt, p, C_row, T_row, runs_row, avail_row, C_pred_row,
             flat(T_pred_row[..., None, :] * rt))
 
 
-def _scan_sim(arrs: dict, policy: Policy, warm_start: bool,
-              placer: str | None, totals_only: bool, seed, fvec,
-              easy_eval: str = "batched", core: str = "arrival",
-              retries: bool = False):
-    """One full simulation as a lax.scan; every argument traced except the
+class _SimPieces(NamedTuple):
+    """One simulation, disassembled for streamed execution:
+    ``lax.scan(step, carry0, xs, length=length)`` followed by
+    ``finish(carry, ys)`` IS ``_scan_sim`` — same step trace, same
+    epilogue ops.  The chunked driver (``_run_chunked``) instead slices
+    ``xs`` into fixed windows, threads the carry between per-chunk scans
+    and reassembles spilled ``ys`` before the shared finish, so chunked
+    results are bit-identical to the monolithic scan by construction."""
+    step: object      # step(carry, x) -> (carry, out)
+    xs: object        # [length]-leading scan inputs, or None (event cores)
+    length: int       # static step count
+    carry0: object    # initial carry
+    finish: object    # finish(carry, ys) -> result dict
+
+
+def _stream_xs(arrs: dict, policy: Policy, core: str = "arrival",
+               retries: bool = False):
+    """Scan inputs + static step count of the routed core, buildable on
+    the host (the chunked driver slices these without constructing the
+    full pieces).  Step counts: the event core needs one push + one
+    placement per job and every advance lands on a distinct event time,
+    so ``4J + |outage| + 4`` steps suffice (``7J`` with retries: a
+    failure adds one push, one placement, one event); the conservative
+    core's reservation starts add at most one advance each (``5J`` /
+    ``9J``).  The arrival xs carry the RAW per-job K column — steps
+    resolve NaN -> policy.k at use, so no per-lane [J] K vector ever
+    materializes under the batched vmap."""
+    J = arrs["prog"].shape[0]
+    n_out = arrs["outage"][..., 1].size if "outage" in arrs else 0
+    if policy.queue == "conservative":
+        return None, (9 if retries else 5) * J + n_out + 4
+    if core == "events":
+        return None, (7 if retries else 4) * J + n_out + 4
+    if policy.queue == "easy_backfill":
+        W = int(policy.window)
+        jxs = jnp.concatenate([jnp.arange(J, dtype=jnp.int32),
+                               jnp.full((W,), J, jnp.int32)])
+        nows = jnp.concatenate([arrs["arrival"],
+                                jnp.full((W,), BIG, jnp.float32)])
+        return (jxs, nows), J + W
+    return (jnp.arange(J), arrs["prog"], arrs["arrival"], arrs["k_job"]), J
+
+
+def _sim_pieces(arrs: dict, policy: Policy, warm_start: bool,
+                placer: str | None, totals_only: bool, seed, fvec,
+                easy_eval: str = "batched", core: str = "arrival",
+                retries: bool = False) -> _SimPieces:
+    """Build one simulation's pieces; every argument traced except the
     static (policy metadata, warm_start, placer, totals_only, easy_eval,
     core, retries).  Dispatch:
 
     - ``core="arrival"`` (default): the historical arrival-indexed scans —
       the FCFS path bit-identical to the pre-queue-axis engine, EASY via
-      the windowed scan (``_scan_sim_easy``);
+      the windowed scan (``_easy_pieces``);
     - ``core="events"`` (or ``queue="conservative"``, which requires it):
-      the event-granular scan (``_scan_sim_events``) whose clock advances
-      through merged arrival + completion events — the core that can
-      defer placements under an SCC power cap and re-queue mid-job
+      the event-granular step folded with an open horizon — the core that
+      can defer placements under an SCC power cap and re-queue mid-job
       failures (``retries``).
     """
-    T_true, C_true, E_true = arrs["T_true"], arrs["C_true"], arrs["E_true"]
-    T_pred, C_pred = arrs["T_pred"], arrs["C_pred"]
-    n_req, prog, arrival = arrs["n_req"], arrs["prog"], arrs["arrival"]
-    outage = arrs.get("outage")
+    T_true, C_true = arrs["T_true"], arrs["C_true"]
     P, S = T_true.shape
-    J = prog.shape[0]
-    # per-job effective K: explicit workload overrides win over the policy's
-    kvec = jnp.where(jnp.isnan(arrs["k_job"]),
-                     jnp.asarray(policy.k, jnp.float32), arrs["k_job"])
     # independent streams for selection and fault draws — folding a shared
     # key with j and j+offset would collide once J exceeds the offset,
     # which campaign streams (10k+ jobs) do
@@ -353,26 +391,66 @@ def _scan_sim(arrs: dict, policy: Policy, warm_start: bool,
     else:
         tabs0 = (jnp.zeros((P, S)), jnp.zeros((P, S)),
                  jnp.zeros((P, S), jnp.int32))
+    xs, length = _stream_xs(arrs, policy, core, retries)
 
-    if policy.queue == "conservative":
-        return _scan_sim_cons(arrs, policy, placer, totals_only,
-                              kvec, sel_key, fault_key, fvec, tabs0,
-                              retries)
-    if core == "events":
-        return _scan_sim_events(arrs, policy, placer, totals_only,
-                                kvec, sel_key, fault_key, fvec, tabs0,
-                                retries)
+    if policy.queue == "conservative" or core == "events":
+        cons = policy.queue == "conservative"
+        estep = (make_cons_step if cons else make_event_step)(
+            policy, placer, totals_only, retries)
+        ctx = {"arrs": arrs, "sel_key": sel_key, "fault_key": fault_key,
+               "fvec": fvec}
+        if policy.tiered:
+            ctx["tt"] = tier_tables(arrs, policy.freq_tiers)
+        hor = jnp.float32(BIG)
+        carry0 = (cons_carry0 if cons else event_carry0)(
+            arrs, policy, tabs0, totals_only)
+        return _SimPieces(
+            lambda c, _: estep(ctx, c, hor), xs, length, carry0,
+            lambda carry, ys: _event_results(arrs, totals_only, ys, carry))
     if policy.queue == "easy_backfill":
-        return _scan_sim_easy(arrs, policy, placer, totals_only,
-                              kvec, sel_key, fault_key, fvec, tabs0,
-                              easy_eval)
+        step, carry0, fin = _easy_pieces(arrs, policy, placer, totals_only,
+                                         sel_key, fault_key, fvec, tabs0,
+                                         easy_eval)
+    else:
+        step, carry0, fin = _arrival_pieces(arrs, policy, placer,
+                                            totals_only, sel_key,
+                                            fault_key, fvec, tabs0)
+    return _SimPieces(step, xs, length, carry0, fin)
 
+
+def _scan_sim(arrs: dict, policy: Policy, warm_start: bool,
+              placer: str | None, totals_only: bool, seed, fvec,
+              easy_eval: str = "batched", core: str = "arrival",
+              retries: bool = False):
+    """One full simulation: fold the routed core's pieces through a
+    single lax.scan (see ``_sim_pieces`` for dispatch and staticness)."""
+    pieces = _sim_pieces(arrs, policy, warm_start, placer, totals_only,
+                         seed, fvec, easy_eval, core, retries)
+    carry, ys = jax.lax.scan(pieces.step, pieces.carry0, pieces.xs,
+                             length=pieces.length)
+    return pieces.finish(carry, ys)
+
+
+def _arrival_pieces(arrs: dict, policy: Policy, placer: str | None,
+                    totals_only: bool, sel_key, fault_key, fvec, tabs0):
+    """Pieces of the arrival-indexed FCFS scan (the historical core)."""
+    T_true, C_true, E_true = arrs["T_true"], arrs["C_true"], arrs["E_true"]
+    T_pred, C_pred = arrs["T_pred"], arrs["C_pred"]
+    n_req, prog, arrival = arrs["n_req"], arrs["prog"], arrs["arrival"]
+    outage = arrs.get("outage")
+    P, S = T_true.shape
+    J = prog.shape[0]
     tiered = policy.tiered
     tt = tier_tables(arrs, policy.freq_tiers) if tiered else None
+    pol_k = jnp.asarray(policy.k, jnp.float32)
 
     def step(carry, xs):
         node_free, C_tab, T_tab, runs, acc = carry
-        j, p, arr, k = xs
+        j, p, arr, kj = xs
+        # per-job effective K: explicit workload overrides win over the
+        # policy's (resolved at use — the xs carry the raw NaN-padded
+        # column, see _stream_xs)
+        k = jnp.where(jnp.isnan(kj), pol_k, kj)
 
         nreq_row = n_req[p]                                      # [S]
         kth, avail = _earliest(node_free, nreq_row, arr, placer, outage)
@@ -438,30 +516,32 @@ def _scan_sim(arrs: dict, policy: Policy, warm_start: bool,
              jnp.float32(0.0))
             if totals_only else ())
     carry0 = (arrs["free0"], *tabs0, acc0)
-    xs = (jnp.arange(J), prog, arrival, kvec)
-    (node_free, C_tab, T_tab, runs, acc), ys = jax.lax.scan(step, carry0, xs)
 
-    tabs = {"C_tab": C_tab, "T_tab": T_tab, "runs": runs,
-            "n_backfilled": jnp.zeros((), jnp.int32)}
-    if totals_only:
-        sums, _, fin_max, busy, wait_max = acc
-        return {"total_energy": sums[0], "makespan": fin_max,
-                "total_wait": sums[1], "slowdown_sum": sums[2],
-                "max_wait": wait_max, "busy": busy,
-                **_power_totals(arrs, fin_max, busy), **tabs}
-    sel, start, finish, wait, E, T_act, tier = ys
-    nodes = n_req[prog, sel]                                     # [J]
-    busy = jnp.zeros(S, jnp.float32).at[sel].add(T_act * nodes)
-    makespan = finish.max()
-    return {
-        "system": sel, "start": start, "finish": finish, "wait": wait,
-        "energy": E, "runtime": T_act, "nodes": nodes, "tier": tier,
-        "backfilled": jnp.zeros(J, bool),
-        "total_energy": E.sum(), "makespan": makespan,
-        "total_wait": wait.sum(), "max_wait": wait.max(),
-        "slowdown_sum": ((wait + T_act) / T_act).sum(), "busy": busy,
-        **_power_totals(arrs, makespan, busy), **tabs,
-    }
+    def finish(carry, ys):
+        node_free, C_tab, T_tab, runs, acc = carry
+        tabs = {"C_tab": C_tab, "T_tab": T_tab, "runs": runs,
+                "n_backfilled": jnp.zeros((), jnp.int32)}
+        if totals_only:
+            sums, _, fin_max, busy, wait_max = acc
+            return {"total_energy": sums[0], "makespan": fin_max,
+                    "total_wait": sums[1], "slowdown_sum": sums[2],
+                    "max_wait": wait_max, "busy": busy,
+                    **_power_totals(arrs, fin_max, busy), **tabs}
+        sel, start, fin, wait, E, T_act, tier = ys
+        nodes = n_req[prog, sel]                                 # [J]
+        busy = jnp.zeros(S, jnp.float32).at[sel].add(T_act * nodes)
+        makespan = fin.max()
+        return {
+            "system": sel, "start": start, "finish": fin, "wait": wait,
+            "energy": E, "runtime": T_act, "nodes": nodes, "tier": tier,
+            "backfilled": jnp.zeros(J, bool),
+            "total_energy": E.sum(), "makespan": makespan,
+            "total_wait": wait.sum(), "max_wait": wait.max(),
+            "slowdown_sum": ((wait + T_act) / T_act).sum(), "busy": busy,
+            **_power_totals(arrs, makespan, busy), **tabs,
+        }
+
+    return step, carry0, finish
 
 
 def _power_totals(arrs, makespan, busy, peak_power=None, capped_delay=None):
@@ -479,9 +559,9 @@ def _power_totals(arrs, makespan, busy, peak_power=None, capped_delay=None):
     }
 
 
-def _scan_sim_easy(arrs: dict, policy: Policy, placer: str | None,
-                   totals_only: bool, kvec, sel_key, fault_key, fvec, tabs0,
-                   easy_eval: str = "batched"):
+def _easy_pieces(arrs: dict, policy: Policy, placer: str | None,
+                 totals_only: bool, sel_key, fault_key, fvec, tabs0,
+                 easy_eval: str = "batched"):
     """EASY-backfilling scan: J + W steps over a bounded pending window.
 
     The carry grows a pending buffer of W + 1 job-id slots (ascending,
@@ -537,6 +617,14 @@ def _scan_sim_easy(arrs: dict, policy: Policy, placer: str | None,
                          "unrolled loop predates the tier axis and exists "
                          "only as the single-tier bit-identity reference)")
     tt = tier_tables(arrs, policy.freq_tiers) if tiered else None
+    k_job = arrs["k_job"]
+    pol_k = jnp.asarray(policy.k, jnp.float32)
+
+    def k_of(j):
+        """Per-job effective K at use (NaN -> the policy leaf); no [J]
+        K vector materializes per batch lane."""
+        kj = k_job[j]
+        return jnp.where(jnp.isnan(kj), pol_k, kj)
 
     def sel_for(j, node_free, C_tab, T_tab, runs):
         """Policy selection + earliest start for job id j (sentinel-safe:
@@ -547,7 +635,7 @@ def _scan_sim_easy(arrs: dict, policy: Policy, placer: str | None,
                                outage)
         sel = select(
             policy, c_row=C_tab[p], t_row=T_tab[p], runs_row=runs[p],
-            avail_row=avail, k=kvec[jj], c_pred_row=C_pred[p],
+            avail_row=avail, k=k_of(jj), c_pred_row=C_pred[p],
             t_pred_row=T_pred[p], key=jax.random.fold_in(sel_key, jj))
         return jj, p, kth, avail, sel
 
@@ -569,14 +657,14 @@ def _scan_sim_easy(arrs: dict, policy: Policy, placer: str | None,
                 C_pred[ps], T_pred[ps])
             sels_x = select_batched(
                 policy, c_rows=c_x, t_rows=t_x, runs_rows=runs_x,
-                avail_rows=avail_x, k=kvec[jjs], c_pred_rows=cp_x,
+                avail_rows=avail_x, k=k_of(jjs), c_pred_rows=cp_x,
                 t_pred_rows=tp_x, keys=keys)                      # [Wc]
             fs = (sels_x // S).astype(jnp.int32)
             sels = sels_x % S
         else:
             sels = select_batched(
                 policy, c_rows=C_tab[ps], t_rows=T_tab[ps],
-                runs_rows=runs[ps], avail_rows=avails, k=kvec[jjs],
+                runs_rows=runs[ps], avail_rows=avails, k=k_of(jjs),
                 c_pred_rows=C_pred[ps], t_pred_rows=T_pred[ps],
                 keys=keys)                                        # [Wc]
             fs = jnp.zeros(Wc, jnp.int32)
@@ -735,46 +823,44 @@ def _scan_sim_easy(arrs: dict, policy: Policy, placer: str | None,
             if totals_only else ())
     pend0 = jnp.full((Wc,), J, jnp.int32)
     carry0 = (arrs["free0"], *tabs0, acc0, pend0, jnp.zeros((), jnp.int32))
-    T_steps = J + W
-    jxs = jnp.concatenate([jnp.arange(J, dtype=jnp.int32),
-                           jnp.full((W,), J, jnp.int32)])
-    nows = jnp.concatenate([arrival, jnp.full((W,), BIG, jnp.float32)])
-    (node_free, C_tab, T_tab, runs, acc, pend, nbf), ys = jax.lax.scan(
-        step, carry0, (jxs, nows), length=T_steps)
 
-    tabs = {"C_tab": C_tab, "T_tab": T_tab, "runs": runs,
-            "n_backfilled": nbf}
-    if totals_only:
-        sums, _, fin_max, busy, wait_max = acc
-        return {"total_energy": sums[0], "makespan": fin_max,
-                "total_wait": sums[1], "slowdown_sum": sums[2],
-                "max_wait": wait_max, "busy": busy,
-                **_power_totals(arrs, fin_max, busy), **tabs}
+    def finish(carry, ys):
+        node_free, C_tab, T_tab, runs, acc, pend, nbf = carry
+        tabs = {"C_tab": C_tab, "T_tab": T_tab, "runs": runs,
+                "n_backfilled": nbf}
+        if totals_only:
+            sums, _, fin_max, busy, wait_max = acc
+            return {"total_energy": sums[0], "makespan": fin_max,
+                    "total_wait": sums[1], "slowdown_sum": sums[2],
+                    "max_wait": wait_max, "busy": busy,
+                    **_power_totals(arrs, fin_max, busy), **tabs}
 
-    # scatter per-step outputs back to arrival order; sentinel ids drop
-    j_pl, sel_s, start_s, fin_s, wait_s, E_s, T_s, bf_s, f_s = ys
-    def scat(vals, dtype):
-        return jnp.zeros(J, dtype).at[j_pl].set(vals, mode="drop")
-    sel = scat(sel_s, sel_s.dtype)
-    start = scat(start_s, jnp.float32)
-    finish = scat(fin_s, jnp.float32)
-    wait = scat(wait_s, jnp.float32)
-    E = scat(E_s, jnp.float32)
-    T_act = scat(T_s, jnp.float32)
-    backfilled = scat(bf_s, bool)
-    tier = scat(f_s, jnp.int32)
-    nodes = n_req[prog, sel]                                     # [J]
-    busy = jnp.zeros(S, jnp.float32).at[sel].add(T_act * nodes)
-    makespan = finish.max()
-    return {
-        "system": sel, "start": start, "finish": finish, "wait": wait,
-        "energy": E, "runtime": T_act, "nodes": nodes,
-        "backfilled": backfilled, "tier": tier,
-        "total_energy": E.sum(), "makespan": makespan,
-        "total_wait": wait.sum(), "max_wait": wait.max(),
-        "slowdown_sum": ((wait + T_act) / T_act).sum(), "busy": busy,
-        **_power_totals(arrs, makespan, busy), **tabs,
-    }
+        # scatter per-step outputs back to arrival order; sentinels drop
+        j_pl, sel_s, start_s, fin_s, wait_s, E_s, T_s, bf_s, f_s = ys
+        def scat(vals, dtype):
+            return jnp.zeros(J, dtype).at[j_pl].set(vals, mode="drop")
+        sel = scat(sel_s, sel_s.dtype)
+        start = scat(start_s, jnp.float32)
+        fin = scat(fin_s, jnp.float32)
+        wait = scat(wait_s, jnp.float32)
+        E = scat(E_s, jnp.float32)
+        T_act = scat(T_s, jnp.float32)
+        backfilled = scat(bf_s, bool)
+        tier = scat(f_s, jnp.int32)
+        nodes = n_req[prog, sel]                                 # [J]
+        busy = jnp.zeros(S, jnp.float32).at[sel].add(T_act * nodes)
+        makespan = fin.max()
+        return {
+            "system": sel, "start": start, "finish": fin, "wait": wait,
+            "energy": E, "runtime": T_act, "nodes": nodes,
+            "backfilled": backfilled, "tier": tier,
+            "total_energy": E.sum(), "makespan": makespan,
+            "total_wait": wait.sum(), "max_wait": wait.max(),
+            "slowdown_sum": ((wait + T_act) / T_act).sum(), "busy": busy,
+            **_power_totals(arrs, makespan, busy), **tabs,
+        }
+
+    return step, carry0, finish
 
 
 class EventCarry(NamedTuple):
@@ -806,9 +892,12 @@ class EventCarry(NamedTuple):
 
 def event_context(arrs: dict, policy: Policy, seed, fvec) -> dict:
     """The traced per-run inputs of the factored event steps (everything a
-    step reads besides its carry): workload arrays, per-job effective K,
-    and the selection / fault PRNG keys — derived exactly as ``_scan_sim``
-    derives them, so a service session shares the batch scan's streams."""
+    step reads besides its carry): workload arrays and the selection /
+    fault PRNG keys — derived exactly as ``_sim_pieces`` derives them, so
+    a service session shares the batch scan's streams.  The ``kvec`` entry
+    (precomputed per-job effective K) is retained for checkpoint/back-
+    compat; steps resolve K at use from ``arrs["k_job"]`` and the policy
+    leaf (elementwise identical), so no [J] K vector rides the hot path."""
     kvec = jnp.where(jnp.isnan(arrs["k_job"]),
                      jnp.asarray(policy.k, jnp.float32), arrs["k_job"])
     sel_key, fault_key = jax.random.split(jax.random.key(seed))
@@ -877,8 +966,8 @@ def make_event_step(policy: Policy, placer: str | None = None,
                                reservation (event-driven EASY: backfills
                                start at the current event, never in the
                                future);
-               (``conservative`` runs its own event-granular scan,
-               ``_scan_sim_cons`` — reservations chained through a
+               (``conservative`` runs its own event-granular step,
+               ``make_cons_step`` — reservations chained through a
                profile table instead of per-step re-evaluation);
       advance  otherwise move ``now`` to the next event: the earliest of
                the next arrival, the earliest node-free time > now (a
@@ -918,7 +1007,7 @@ def make_event_step(policy: Policy, placer: str | None = None,
     Factored form (the online-service refactor): this builder returns the
     bare ``step(ctx, carry, horizon) -> (carry, out)`` callable — ``ctx``
     from ``event_context``, ``carry`` from ``event_carry0``.  The batch
-    scan (``_scan_sim_events``) folds it through ``lax.scan`` with
+    scan (``_sim_pieces``) folds it through ``lax.scan`` with
     ``horizon = BIG`` (bit-identical to the pre-refactor closure, asserted
     across tests/test_event_core.py); the service dispatcher jits it once
     and calls it per event with a finite horizon, which only gates the
@@ -938,7 +1027,7 @@ def make_event_step(policy: Policy, placer: str | None = None,
     idx = jnp.arange(Wc)
 
     def step(ctx, carry, horizon):
-        arrs, kvec, fvec = ctx["arrs"], ctx["kvec"], ctx["fvec"]
+        arrs, fvec = ctx["arrs"], ctx["fvec"]
         sel_key, fault_key = ctx["sel_key"], ctx["fault_key"]
         tt = ctx["tt"] if tiered else None
         T_true, C_true, E_true = (arrs["T_true"], arrs["C_true"],
@@ -947,6 +1036,12 @@ def make_event_step(policy: Policy, placer: str | None = None,
         n_req, prog, arrival = arrs["n_req"], arrs["prog"], arrs["arrival"]
         outage = arrs.get("outage")
         w_pow, idle_w = arrs["w_pow"], arrs["idle_w"]
+        # per-job effective K at use (NaN -> the policy leaf; elementwise
+        # identical to the historical precomputed kvec gather, without a
+        # per-lane [J] intermediate)
+        pol_k = jnp.asarray(policy.k, jnp.float32)
+        k_of = lambda j: jnp.where(jnp.isnan(arrs["k_job"][j]), pol_k,
+                                   arrs["k_job"][j])
         J = prog.shape[0]
         exists = arrs["free0"] < BIG                             # [S, maxN]
         idle_mat = jnp.where(exists, idle_w[:, None], 0.0)       # [S, maxN]
@@ -1004,14 +1099,14 @@ def make_event_step(policy: Policy, placer: str | None = None,
                 C_pred[ps], T_pred[ps])
             sels_x = select_batched(
                 policy, c_rows=c_x, t_rows=t_x, runs_rows=runs_x,
-                avail_rows=avail_x, k=kvec[jjs], c_pred_rows=cp_x,
+                avail_rows=avail_x, k=k_of(jjs), c_pred_rows=cp_x,
                 t_pred_rows=tp_x, keys=keys)                     # [Wc]
             fs = (sels_x // S).astype(jnp.int32)
             sels = sels_x % S
         else:
             sels = select_batched(
                 policy, c_rows=C_tab[ps], t_rows=T_tab[ps],
-                runs_rows=runs[ps], avail_rows=avails, k=kvec[jjs],
+                runs_rows=runs[ps], avail_rows=avails, k=k_of(jjs),
                 c_pred_rows=C_pred[ps], t_pred_rows=T_pred[ps],
                 keys=keys)                                       # [Wc]
             fs = jnp.zeros(Wc, jnp.int32)
@@ -1207,30 +1302,6 @@ def make_event_step(policy: Policy, placer: str | None = None,
     return step
 
 
-def _scan_sim_events(arrs: dict, policy: Policy, placer: str | None,
-                     totals_only: bool, kvec, sel_key, fault_key, fvec,
-                     tabs0, retries: bool = False):
-    """The event core's batch form: fold the factored step (see
-    ``make_event_step``) through ``lax.scan`` with an open horizon.
-    Every job needs one push + one placement and every advance lands on
-    a distinct event time, so ``4J + |outage| + 4`` steps suffice
-    (``7J`` with retries: a failure adds one push, one placement, one
-    event)."""
-    J = arrs["prog"].shape[0]
-    n_out = arrs["outage"][..., 1].size if "outage" in arrs else 0
-    T_steps = (7 if retries else 4) * J + n_out + 4
-    step = make_event_step(policy, placer, totals_only, retries)
-    ctx = {"arrs": arrs, "kvec": kvec, "sel_key": sel_key,
-           "fault_key": fault_key, "fvec": fvec}
-    if policy.tiered:
-        ctx["tt"] = tier_tables(arrs, policy.freq_tiers)
-    carry0 = event_carry0(arrs, policy, tabs0, totals_only)
-    hor = jnp.float32(BIG)
-    carry_f, ys = jax.lax.scan(lambda c, _: step(ctx, c, hor), carry0,
-                               None, length=T_steps)
-    return _event_results(arrs, totals_only, ys, carry_f)
-
-
 def _event_results(arrs, totals_only, ys, carry):
     """Shared result epilogue of the two event-granular scans: unpack the
     totals accumulator, or scatter the per-step (attempt-energy,
@@ -1374,13 +1445,13 @@ def make_cons_step(policy: Policy, placer: str | None = None,
     idle gap under the head's reservation (everything else is committed
     eagerly), while the interval table exposes the holes under EVERY
     pending job.  Faults ride the event stream as in
-    ``_scan_sim_events``: with ``retries`` a failing first attempt
+    ``make_event_step``: with ``retries`` a failing first attempt
     occupies exactly its reserved span (the failure IS a completion
     event) and re-queues for a fresh reservation at the failure time.
 
     Factored form: as ``make_event_step`` — returns the bare
     ``step(ctx, carry, horizon)`` shared verbatim by the batch scan
-    (``_scan_sim_cons``, open horizon) and the service dispatcher
+    (``_sim_pieces``, open horizon) and the service dispatcher
     (finite horizon gates the clock and the stuck valve).
     """
     Wc = int(policy.window) + 1
@@ -1388,7 +1459,7 @@ def make_cons_step(policy: Policy, placer: str | None = None,
     idx = jnp.arange(Wc)
 
     def step(ctx, carry, horizon):
-        arrs, kvec, fvec = ctx["arrs"], ctx["kvec"], ctx["fvec"]
+        arrs, fvec = ctx["arrs"], ctx["fvec"]
         sel_key, fault_key = ctx["sel_key"], ctx["fault_key"]
         tt = ctx["tt"] if tiered else None
         T_true, C_true, E_true = (arrs["T_true"], arrs["C_true"],
@@ -1397,6 +1468,10 @@ def make_cons_step(policy: Policy, placer: str | None = None,
         n_req, prog, arrival = arrs["n_req"], arrs["prog"], arrs["arrival"]
         outage = arrs.get("outage")
         w_pow, idle_w = arrs["w_pow"], arrs["idle_w"]
+        # per-job effective K at use (see make_event_step's k_of)
+        pol_k = jnp.asarray(policy.k, jnp.float32)
+        k_of = lambda j: jnp.where(jnp.isnan(arrs["k_job"][j]), pol_k,
+                                   arrs["k_job"][j])
         S = T_true.shape[1]
         J = prog.shape[0]
         exists = arrs["free0"] < BIG
@@ -1483,7 +1558,7 @@ def make_cons_step(policy: Policy, placer: str | None = None,
                     C_pred[p], T_pred[p])
                 sel_x = select(
                     policy, c_row=c_x, t_row=t_x, runs_row=runs_x,
-                    avail_row=avail_x, k=kvec[jp], c_pred_row=cp_x,
+                    avail_row=avail_x, k=k_of(jp), c_pred_row=cp_x,
                     t_pred_row=tp_x, key=key)
                 f = (sel_x // S).astype(jnp.int32)
                 sel = sel_x % S
@@ -1496,7 +1571,7 @@ def make_cons_step(policy: Policy, placer: str | None = None,
                 avail_p = earliest_fit(p, t0, Tdur, node_free, slots)
                 sel = select(
                     policy, c_row=C_tab[p], t_row=T_tab[p],
-                    runs_row=runs[p], avail_row=avail_p, k=kvec[jp],
+                    runs_row=runs[p], avail_row=avail_p, k=k_of(jp),
                     c_pred_row=C_pred[p], t_pred_row=T_pred[p], key=key)
                 f = jnp.int32(0)
                 start = avail_p[sel]
@@ -1687,29 +1762,6 @@ def make_cons_step(policy: Policy, placer: str | None = None,
     return step
 
 
-def _scan_sim_cons(arrs: dict, policy: Policy, placer: str | None,
-                   totals_only: bool, kvec, sel_key, fault_key, fvec,
-                   tabs0, retries: bool = False):
-    """The conservative core's batch form: fold the factored step (see
-    ``make_cons_step``) through ``lax.scan`` with an open horizon.  Each
-    job needs one push + one placement; reservation starts add at most
-    one advance each on top of the event times, so ``5J`` steps suffice
-    (``9J`` with retries)."""
-    J = arrs["prog"].shape[0]
-    n_out = arrs["outage"][..., 1].size if "outage" in arrs else 0
-    T_steps = (9 if retries else 5) * J + n_out + 4
-    step = make_cons_step(policy, placer, totals_only, retries)
-    ctx = {"arrs": arrs, "kvec": kvec, "sel_key": sel_key,
-           "fault_key": fault_key, "fvec": fvec}
-    if policy.tiered:
-        ctx["tt"] = tier_tables(arrs, policy.freq_tiers)
-    carry0 = cons_carry0(arrs, policy, tabs0, totals_only)
-    hor = jnp.float32(BIG)
-    carry_f, ys = jax.lax.scan(lambda c, _: step(ctx, c, hor), carry0,
-                               None, length=T_steps)
-    return _event_results(arrs, totals_only, ys, carry_f)
-
-
 @partial(jax.jit, static_argnames=("warm_start", "placer", "totals_only",
                                    "easy_eval", "core", "retries"))
 def _batched_run(arrs, policy, seeds, faults, *, warm_start, placer,
@@ -1723,6 +1775,137 @@ def _batched_run(arrs, policy, seeds, faults, *, warm_start, placer,
                                       totals_only, sd, fv, easy_eval,
                                       core, retries))(
         policy, seeds, faults)
+
+
+#: static argnames shared by the sharded/chunked grid entries; ``mesh``
+#: (a hashable jax.sharding.Mesh, or None = single-device) is static so
+#: shard_map specializes per mesh like every other compile key
+_GRID_STATICS = ("warm_start", "placer", "totals_only", "easy_eval",
+                 "core", "retries", "mesh")
+
+
+@partial(jax.jit, static_argnames=_GRID_STATICS)
+def _sharded_run(arrs, policy, seeds, faults, *, mesh, warm_start, placer,
+                 totals_only, easy_eval="batched", core="arrival",
+                 retries=False):
+    """``_batched_run`` with the flat batch axis partitioned over a 1-D
+    ``("grid",)`` mesh (launch.mesh.make_grid_mesh): each device vmaps
+    its B/n slice of the (policy leaves, seeds, faults) batch against
+    the replicated workload arrays.  Grid lanes never communicate, so
+    sharding is a pure partition of the batch axis and results are
+    bit-identical to the single-device vmap (asserted in
+    tests/test_sharded_campaign.py)."""
+    def body(arrs_, pol, sd, fv):
+        return jax.vmap(
+            lambda p_, s_, f_: _scan_sim(arrs_, p_, warm_start, placer,
+                                         totals_only, s_, f_, easy_eval,
+                                         core, retries))(pol, sd, fv)
+    return _shard_map(
+        body, mesh=mesh,
+        in_specs=(_replicated, _grid_spec, _grid_spec, _grid_spec),
+        out_specs=_grid_spec)(arrs, policy, seeds, faults)
+
+
+@partial(jax.jit, static_argnames=_GRID_STATICS)
+def _chunk_init(arrs, policy, seeds, faults, *, mesh, warm_start, placer,
+                totals_only, easy_eval="batched", core="arrival",
+                retries=False):
+    """Initial [B]-leading carries of the chunked campaign (sharded over
+    ``mesh`` when given, so the carry is born device-resident on its
+    shard and never gathers)."""
+    def body(arrs_, pol, sd, fv):
+        return jax.vmap(
+            lambda p_, s_, f_: _sim_pieces(
+                arrs_, p_, warm_start, placer, totals_only, s_, f_,
+                easy_eval, core, retries).carry0)(pol, sd, fv)
+    if mesh is None:
+        return body(arrs, policy, seeds, faults)
+    return _shard_map(
+        body, mesh=mesh,
+        in_specs=(_replicated, _grid_spec, _grid_spec, _grid_spec),
+        out_specs=_grid_spec)(arrs, policy, seeds, faults)
+
+
+@partial(jax.jit, static_argnames=_GRID_STATICS + ("nsteps",))
+def _chunk_advance(arrs, policy, seeds, faults, carries, xs, *, mesh,
+                   nsteps, warm_start, placer, totals_only,
+                   easy_eval="batched", core="arrival", retries=False):
+    """Advance every batch lane ``nsteps`` scan steps: the per-lane step
+    closure is the monolithic scan's own (``_sim_pieces``), the carry is
+    threaded in and out, and ``xs`` is the host-sliced window of the
+    stream inputs (replicated across shards; None for the event cores,
+    whose scans are length-driven).  At most two compilations exist per
+    configuration: the full chunk and the remainder."""
+    def body(arrs_, pol, sd, fv, carry, xs_):
+        def lane(p_, s_, f_, c_):
+            pieces = _sim_pieces(arrs_, p_, warm_start, placer,
+                                 totals_only, s_, f_, easy_eval, core,
+                                 retries)
+            return jax.lax.scan(pieces.step, c_, xs_, length=nsteps)
+        return jax.vmap(lane)(pol, sd, fv, carry)
+    if mesh is None:
+        return body(arrs, policy, seeds, faults, carries, xs)
+    return _shard_map(
+        body, mesh=mesh,
+        in_specs=(_replicated, _grid_spec, _grid_spec, _grid_spec,
+                  _grid_spec, _replicated),
+        out_specs=_grid_spec)(arrs, policy, seeds, faults, carries, xs)
+
+
+@partial(jax.jit, static_argnames=_GRID_STATICS)
+def _chunk_finish(arrs, policy, seeds, faults, carries, ys, *, mesh,
+                  warm_start, placer, totals_only, easy_eval="batched",
+                  core="arrival", retries=False):
+    """The routed core's result epilogue over final carries (+ the
+    reassembled per-step outputs on the full path; None when
+    ``totals_only``) — the same ops the monolithic scan's finish runs."""
+    def body(arrs_, pol, sd, fv, carry, ys_):
+        return jax.vmap(
+            lambda p_, s_, f_, c_, y_: _sim_pieces(
+                arrs_, p_, warm_start, placer, totals_only, s_, f_,
+                easy_eval, core, retries).finish(c_, y_))(
+            pol, sd, fv, carry, ys_)
+    if mesh is None:
+        return body(arrs, policy, seeds, faults, carries, ys)
+    return _shard_map(
+        body, mesh=mesh,
+        in_specs=(_replicated, _grid_spec, _grid_spec, _grid_spec,
+                  _grid_spec, _grid_spec),
+        out_specs=_grid_spec)(arrs, policy, seeds, faults, carries, ys)
+
+
+def _run_chunked(arrs, policy, seeds, faults, *, chunk, mesh, warm_start,
+                 placer, totals_only, easy_eval="batched", core="arrival",
+                 retries=False):
+    """Stream the campaign scan through fixed-size windows of ``chunk``
+    steps: jitted per-chunk advances thread the carry, per-step outputs
+    (full path only) spill to host per chunk and are reassembled for the
+    shared finish.  The step trace is the monolithic scan's own, so
+    results are bit-identical (asserted per core in
+    tests/test_sharded_campaign.py).  ``totals_only`` keeps O(B) carry
+    state end to end — no [B, J]-shaped intermediate ever materializes,
+    which is what lets a 10^6-job trace stream through device memory."""
+    kw = dict(mesh=mesh, warm_start=warm_start, placer=placer,
+              totals_only=totals_only, easy_eval=easy_eval, core=core,
+              retries=retries)
+    xs, length = _stream_xs(arrs, policy, core, retries)
+    chunk = max(1, int(chunk))
+    carries = _chunk_init(arrs, policy, seeds, faults, **kw)
+    parts = []
+    for lo in range(0, length, chunk):
+        n = min(chunk, length - lo)
+        xs_c = (None if xs is None
+                else jax.tree.map(lambda x: x[lo:lo + n], xs))
+        carries, ys = _chunk_advance(arrs, policy, seeds, faults, carries,
+                                     xs_c, nsteps=n, **kw)
+        if not totals_only:
+            parts.append(jax.device_get(ys))
+    ys_all = None
+    if not totals_only:
+        ys_all = jax.tree.map(lambda *cs: np.concatenate(cs, axis=1),
+                              *parts)
+    return _chunk_finish(arrs, policy, seeds, faults, carries, ys_all,
+                         **kw)
 
 
 def _fault_vec(cfg: SimConfig | FaultConfig):
@@ -1789,6 +1972,22 @@ class Scheduler:
     core:       DEPRECATED spelling of ``engine`` (emits a
                 ``DeprecationWarning``; docs/API.md migration table).
                 Passing both with different values is an error.
+    shards:     partition the flat (fault x policy x seed) batch axis
+                over the local devices via shard_map on a 1-D
+                ``("grid",)`` mesh: "auto" = every local device, or an
+                explicit count; None (default) = single-device vmap.
+                Lanes never communicate, so sharded results are
+                bit-identical to unsharded.  The batch is padded to a
+                multiple of the device count (duplicate tail lanes,
+                sliced off the result).
+    chunk:      stream the scan in windows of ``chunk`` steps instead of
+                one monolithic lax.scan: the carry threads between
+                jitted per-chunk advances, per-job outputs spill to host
+                per chunk (full path), and ``totals_only`` stays O(grid)
+                memory with no [grid, J] intermediate ever materialized
+                — the million-job campaign mode.  Bit-identical to the
+                monolithic scan (same step trace).  None (default) =
+                monolithic.  Composes with ``shards``.
 
     ``run(w)`` returns a ``SimResult`` when no axis is present, else a
     ``CampaignResult`` with ``axes`` ordered (fault, policy, seed) — the
@@ -1801,7 +2000,8 @@ class Scheduler:
                  placer: str | None = None, faults=None, seeds=0,
                  warm_start: bool = False, queue: str | None = None,
                  easy_eval: str = "batched", power_cap=None,
-                 engine: str | None = None, core=_CORE_UNSET):
+                 engine: str | None = None, core=_CORE_UNSET,
+                 shards=None, chunk=None):
         if core is not _CORE_UNSET:
             warnings.warn(
                 "Scheduler(core=...) is deprecated; use engine=... "
@@ -1831,6 +2031,18 @@ class Scheduler:
             raise ValueError("a finite power_cap requires the event-"
                              "granular core (engine='events' or None): the "
                              "arrival-indexed scan cannot defer placements")
+        if shards is not None and shards != "auto":
+            shards = int(shards)
+            if shards < 1:
+                raise ValueError(f"shards must be >= 1 or 'auto', "
+                                 f"got {shards}")
+        self.shards = shards
+        if chunk is not None:
+            chunk = int(chunk)
+            if chunk < 1:
+                raise ValueError(f"chunk must be a positive step count, "
+                                 f"got {chunk}")
+        self.chunk = chunk
         self.engine = engine
         self.easy_eval = easy_eval
         self.placer = placer
@@ -1894,13 +2106,39 @@ class Scheduler:
         fwb = jnp.broadcast_to(fw[None, :, None], (F, G, R)).reshape(B)
         sb = jnp.broadcast_to(seeds[None, None, :], (F, G, R)).reshape(B)
         fb = jnp.broadcast_to(fmat[:, None, None, :], (F, G, R, 4))
+        fbB = fb.reshape(B, 4)
 
-        out = _batched_run(
-            _workload_arrays(w),
-            replace(pol, k=kb, ucb_scale=ub, power_cap=pb, freq_weight=fwb),
-            sb, fb.reshape(B, 4), warm_start=self.warm_start,
-            placer=self.placer, totals_only=totals_only,
-            easy_eval=self.easy_eval, core=core, retries=retries)
+        mesh, pad = None, 0
+        if self.shards is not None:
+            # lazy: core must stay importable without touching device
+            # state (launch.mesh counts devices at call time only)
+            from repro.launch.mesh import make_grid_mesh
+            mesh = make_grid_mesh(self.shards)
+            pad = (-B) % mesh.devices.size
+            if pad:
+                # shard_map needs B % n_devices == 0: duplicate the last
+                # lane (cheapest valid work) and slice it back off below
+                def padb(x):
+                    tail = jnp.broadcast_to(x[-1:], (pad,) + x.shape[1:])
+                    return jnp.concatenate([x, tail])
+                kb, ub, pb, fwb, sb, fbB = map(
+                    padb, (kb, ub, pb, fwb, sb, fbB))
+
+        arrs = _workload_arrays(w)
+        polb = replace(pol, k=kb, ucb_scale=ub, power_cap=pb,
+                       freq_weight=fwb)
+        common = dict(warm_start=self.warm_start, placer=self.placer,
+                      totals_only=totals_only, easy_eval=self.easy_eval,
+                      core=core, retries=retries)
+        if self.chunk is not None:
+            out = _run_chunked(arrs, polb, sb, fbB, chunk=self.chunk,
+                               mesh=mesh, **common)
+        elif mesh is not None:
+            out = _sharded_run(arrs, polb, sb, fbB, mesh=mesh, **common)
+        else:
+            out = _batched_run(arrs, polb, sb, fbB, **common)
+        if pad:
+            out = jax.tree.map(lambda x: x[:B], out)
 
         axes, lead = [], []
         for name, present, size in (("fault", has_fault_axis, F),

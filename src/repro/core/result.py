@@ -20,6 +20,16 @@ other per-job arrays (``None`` when ``totals_only``).
 ``to_dict()`` flattens everything (including the derived metrics) for
 benchmark CSVs and the legacy dict-based callers; per-job arrays are
 ``None`` on results produced with ``totals_only=True``.
+
+Memory model at campaign scale (ISSUE 10): a ``totals_only`` result
+holds only ``[*axes]`` totals and ``[*axes, P, S]`` tables — nothing
+sized by J — which is what lets ``Scheduler(chunk=...)`` stream a
+million-job trace without ever materializing a ``[*axes, J]`` array
+(docs/API.md "Sharded & chunked campaigns").  Full-path results built by
+the chunked driver reassemble their per-job ``[*axes, J]`` fields on the
+HOST (numpy, spilled chunk by chunk), so field arrays may be numpy
+rather than jax arrays; both satisfy the same ``np.asarray`` contract
+every consumer here uses.
 """
 
 from __future__ import annotations

@@ -105,7 +105,16 @@ class _PySim:
         self.w, self.scfg, self.pol = w, scfg, pol
         P, S = w.T_true.shape
         self.S = S
-        self.node_free = [list(np.zeros(int(n))) for n in w.n_nodes]
+        # [S, maxN] float64 free-time table, BIG-padded past each system's
+        # real node count.  Pads sort last and never win an allocation, so
+        # they stay exactly BIG for the whole run; ``counts``/``mask``
+        # bound the real slots.  The array form keeps every hot path
+        # (sort / stable argsort / masked sums) vectorized, which is what
+        # lets differential streams reach >=10k jobs.
+        self.counts = np.asarray(w.n_nodes, np.int64)
+        self.mask = (np.arange(int(self.counts.max()))[None, :]
+                     < self.counts[:, None])
+        self.node_free = np.where(self.mask, 0.0, BIG)
         if scfg.warm_start:
             self.C_tab, self.T_tab = w.C_true.copy(), w.T_true.copy()
             self.runs = np.ones((P, S), np.int64)
@@ -136,18 +145,20 @@ class _PySim:
         return float(self.w_pow[p, s])
 
     def avail_for(self, p: int, arr: float, node_free=None) -> np.ndarray:
-        """Earliest start per system (float64 kth-free + outage push)."""
-        w, S = self.w, self.S
-        node_free = self.node_free if node_free is None else node_free
-        avail = np.empty(S)
-        for s in range(S):
-            free = sorted(node_free[s])
-            need = int(w.n_req[p, s])
-            avail[s] = max(arr, free[need - 1]) if need <= len(free) else BIG
-            if w.outage is not None:
-                for o0, o1 in w.outage[s]:
-                    if o0 <= avail[s] < o1:
-                        avail[s] = o1
+        """Earliest start per system (float64 kth-free + outage push),
+        vectorized over systems: sort the free table, gather the kth free
+        time per system, then push through maintenance windows in order."""
+        w = self.w
+        nf = self.node_free if node_free is None else node_free
+        need = np.asarray(w.n_req[p], np.int64)                      # [S]
+        kidx = np.maximum(np.minimum(need, self.counts) - 1, 0)
+        kth = np.sort(nf, axis=1)[np.arange(self.S), kidx]
+        avail = np.where(need <= self.counts, np.maximum(arr, kth), BIG)
+        if w.outage is not None:
+            og = np.asarray(w.outage, np.float64)
+            for wi in range(og.shape[1]):            # in-order window push
+                o0, o1 = og[:, wi, 0], og[:, wi, 1]
+                avail = np.where((o0 <= avail) & (avail < o1), o1, avail)
         return avail
 
     def choose(self, j: int, node_free=None, arr=None, avail=None):
@@ -200,10 +211,10 @@ class _PySim:
     @staticmethod
     def alloc(node_free, sel: int, need: int, finish: float):
         """Allocate the ``need`` earliest-free nodes (stable argsort ==
-        the engine's first-by-index tie-break)."""
-        idx = np.argsort(node_free[sel])[:need]
-        for i in idx:
-            node_free[sel][int(i)] = finish
+        the engine's first-by-index tie-break; BIG pads sort last, so only
+        real slots are ever written)."""
+        idx = np.argsort(node_free[sel], kind="stable")[:need]
+        node_free[sel, idx] = finish
 
     def place(self, j: int):
         """Place job j (the FCFS step body): allocate, update tables,
@@ -241,7 +252,7 @@ class _PySim:
                         else np.asarray(w.idle_w, np.float64))
         self.w_pow = np.asarray(w.E_true, np.float64) / np.maximum(
             np.asarray(w.T_true, np.float64), 1e-30)
-        self.node_pow = [list(np.zeros(int(n))) for n in w.n_nodes]
+        self.node_pow = np.zeros_like(self.node_free)
         self.ev_out = [None] * J
         self.backfilled = np.zeros(J, bool)
         self.a, self.now = 0, float(w.arrival[0])
@@ -254,19 +265,21 @@ class _PySim:
 
     def power_at(self, t: float) -> float:
         """Cluster draw at ``t``: per-node allocated watts while busy,
-        idle watts otherwise."""
-        return sum(
-            self.node_pow[s][i] if self.node_free[s][i] > t
-            else self.idle_pw[s]
-            for s in range(self.S) for i in range(len(self.node_free[s])))
+        idle watts otherwise (pads contribute 0 via the slot mask)."""
+        draw = np.where(self.node_free > t, self.node_pow,
+                        self.idle_pw[:, None])
+        return float(np.sum(draw, where=self.mask))
 
     def next_event(self, extra=()) -> bool:
         """Advance ``now`` to the next event: the earliest node-free
         time, the next arrival, any ``extra`` times (the conservative
         replay's reservation starts), or an outage end.  Returns whether
-        the clock moved."""
+        the clock moved.  Pad slots sit at exactly BIG and are excluded —
+        they are capacity that never existed, not completions."""
         w = self.w
-        nxt = [t for fl in self.node_free for t in fl if t > self.now]
+        nf = self.node_free
+        cand = nf[(nf > self.now) & (nf < BIG)]
+        nxt = [float(cand.min())] if cand.size else []
         if self.a < len(w.prog) and float(w.arrival[self.a]) > self.now:
             nxt.append(float(w.arrival[self.a]))
         nxt.extend(t for t in extra if t > self.now)
@@ -301,10 +314,9 @@ class _PySim:
         w = self.w
         finish = start + T_act
         need = int(w.n_req[p, sel])
-        idx = np.argsort(self.node_free[sel])[:need]
-        for i in idx:
-            self.node_free[sel][int(i)] = finish
-            self.node_pow[sel][int(i)] = wjob / max(need, 1)
+        idx = np.argsort(self.node_free[sel], kind="stable")[:need]
+        self.node_free[sel, idx] = finish
+        self.node_pow[sel, idx] = wjob / max(need, 1)
         n = self.runs[p, sel]
         C_act = float(w.C_true[p, sel])
         T_upd = float(w.T_true[p, sel])
@@ -350,7 +362,7 @@ def _easy_order_py(sim: _PySim, J: int, window: int):
                 b = pend[ci]
                 p_b, _, avail_b, sel_b, f_b = sim.choose(b)
                 s_b = float(avail_b[sel_b])
-                trial = [list(fl) for fl in sim.node_free]
+                trial = sim.node_free.copy()
                 sim.alloc(trial, sel_b, int(w.n_req[p_b, sel_b]),
                           s_b + sim.T_of(p_b, f_b, sel_b))
                 if sim.avail_for(p_h, arr_h, trial)[sel_h] <= r_h:
@@ -361,8 +373,9 @@ def _easy_order_py(sim: _PySim, J: int, window: int):
 
 
 def _events_py(sim: _PySim, pol):
-    """Float64 replay of the event-granular core (``_scan_sim_events``,
-    fcfs / easy_backfill): merged arrival/completion event clock, bounded
+    """Float64 replay of the event-granular core (``make_event_step``
+    under ``_sim_pieces``, fcfs / easy_backfill): merged
+    arrival/completion event clock, bounded
     pending buffer with stalled admission, per-discipline eligibility,
     and power-cap deferral with the same start rule (capped runs start at
     the current event).  Returns the per-job records plus the power
@@ -394,7 +407,7 @@ def _events_py(sim: _PySim, pol):
         def trial_of(ci):
             p_b, _, avail_b, sel_b, f_b = evals[ci]
             s_b = max(starts_res[ci], now) if capped else starts_res[ci]
-            trial = [list(fl) for fl in sim.node_free]
+            trial = sim.node_free.copy()
             sim.alloc(trial, sel_b, int(w.n_req[p_b, sel_b]),
                       s_b + sim.T_of(p_b, f_b, sel_b))
             return trial
@@ -451,7 +464,8 @@ def _events_py(sim: _PySim, pol):
 
 
 def _cons_py(sim: _PySim, pol, check_reservations: bool = False):
-    """Float64 replay of the conservative core (``_scan_sim_cons``):
+    """Float64 replay of the conservative core (``make_cons_step`` under
+    ``_sim_pieces``):
     hole-aware reservations assigned at admission (earliest capacity fit
     around every pending reservation interval), placements realizing
     reservations as their starts arrive, power-cap deferral in
@@ -471,38 +485,51 @@ def _cons_py(sim: _PySim, pol, check_reservations: bool = False):
     max_iters = 16 * J + 64
 
     def earliest_fit(p, t0, Trow=None):
-        """Float64 twin of the engine's hole-aware earliest fit: per
-        system, the first candidate start whose capacity (free nodes
-        minus reservation occupancy) covers the job's whole window.
+        """Float64 twin of the engine's hole-aware earliest fit,
+        vectorized over the candidate set: per system, the first
+        candidate start whose capacity (free nodes minus reservation
+        occupancy) covers the job's whole window — i.e. capacity holds at
+        the start AND at every reservation start that dips inside it.
         ``Trow`` overrides the per-system durations (the DVFS mirror's
         per-tier evaluation)."""
         out = np.full(S, BIG)
+        r_sel = np.asarray([r["sel"] for r in pend], np.int64)
+        r_start = np.asarray([r["start"] for r in pend], np.float64)
+        r_fin = np.asarray([r["fin"] for r in pend], np.float64)
+        r_need = np.asarray([r["need"] for r in pend], np.float64)
+        fin_c = np.maximum(r_fin, t0)       # candidates shared across S
         for s in range(S):
             n = int(w.n_req[p, s])
             Td = float(w.T_true[p, s] if Trow is None else Trow[s])
-            res = [r for r in pend if r["sel"] == s]
+            free = sim.node_free[s, :int(sim.counts[s])]
+            mine = r_sel == s
+            rs, rf, rn = r_start[mine], r_fin[mine], r_need[mine]
 
-            def availn(t):
-                cnt = sum(1 for f in sim.node_free[s] if f <= t)
-                occ = sum(r["need"] for r in res
-                          if r["start"] <= t < r["fin"])
+            def availn(ts):
+                """Free-node count minus this system's reservation
+                occupancy at each time in ``ts``."""
+                cnt = (free[None, :] <= ts[:, None]).sum(1)
+                occ = (((rs[None, :] <= ts[:, None])
+                        & (ts[:, None] < rf[None, :])) * rn).sum(1)
                 return cnt - occ
 
-            cands = ([t0] + [max(f, t0) for f in sim.node_free[s]]
-                     + [max(r["fin"], t0) for r in pend])
+            cands = np.concatenate(([t0], np.maximum(free, t0), fin_c))
             if w.outage is not None:
-                for wi in range(w.outage.shape[1]):
-                    o0, o1 = w.outage[s, wi]
-                    cands = [float(o1) if o0 <= c < o1 else c
-                             for c in cands]
-            for t in sorted(set(cands)):
-                if availn(t) < n:
-                    continue
-                if any(t < r["start"] < t + Td
-                       and availn(r["start"]) < n for r in res):
-                    continue
-                out[s] = t
-                break
+                og = np.asarray(w.outage, np.float64)
+                for wi in range(og.shape[1]):    # in-order window push
+                    o0, o1 = og[s, wi]
+                    cands = np.where((o0 <= cands) & (cands < o1),
+                                     o1, cands)
+            cands = np.unique(cands)             # == sorted(set(...))
+            ok = availn(cands) >= n
+            if rs.size:
+                dip = availn(rs) < n             # capacity at res starts
+                ok &= ~(((cands[:, None] < rs[None, :])
+                         & (rs[None, :] < cands[:, None] + Td))
+                        & dip[None, :]).any(1)
+            hit = np.flatnonzero(ok)
+            if hit.size:
+                out[s] = cands[hit[0]]
         return out
 
     def reserve(j, t0):

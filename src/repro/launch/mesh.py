@@ -30,6 +30,20 @@ def make_production_mesh(*, multi_pod: bool = False):
     return _make_mesh(shape, axes)
 
 
+def make_grid_mesh(shards="auto"):
+    """1-D ``("grid",)`` mesh over the local devices for campaign-grid
+    sharding (``Scheduler(shards=...)``): the flat (fault x policy x seed)
+    batch axis of a campaign spreads across its devices via shard_map
+    (repro.sharding.grid).  ``shards``: "auto"/None = every local device,
+    or an explicit count <= the local device count."""
+    n_local = len(jax.devices())
+    n = n_local if shards in (None, "auto") else int(shards)
+    if not 1 <= n <= n_local:
+        raise ValueError(f"shards={shards!r} not in 1..{n_local} "
+                         f"(local devices)")
+    return _make_mesh((n,), ("grid",))
+
+
 def make_elastic_mesh(n_devices: int, model_parallel: int = 16):
     """Rebuild a (data, model) mesh from however many devices survive —
     the elastic-restart path (data dim shrinks, model dim is preserved so

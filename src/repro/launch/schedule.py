@@ -41,10 +41,23 @@ Campaign grid — ONE jitted ``Scheduler.run`` simulates the whole
         --jobs 10000 --scenario poisson --arrival-rate 0.5 \
         --campaign-k 0,0.05,0.1,0.2,0.3 --campaign-seeds 4 --totals-only
 
-Trace replay (SWF):
+Trace replay (SWF; ``.gz`` ok, ``--calibrate-trace`` maps classes through
+the phase model instead of raw node throughput):
 
-    PYTHONPATH=src python -m repro.launch.schedule --trace my_log.swf \
+    PYTHONPATH=src python -m repro.launch.schedule --trace my_log.swf.gz \
         --campaign-k 0,0.1,0.3 --campaign-seeds 2
+
+Million-job scale-out: ``--shards auto|N`` spreads the campaign grid over
+the local devices (shard_map on the ("grid",) mesh) and ``--chunk SIZE``
+streams the event scan in fixed windows so a J=10^6 trace never
+materializes a [grid, J] intermediate (pair with ``--totals-only`` for
+O(1) per-job memory):
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+    PYTHONPATH=src python -m repro.launch.schedule \
+        --jobs 1000000 --scenario poisson --arrival-rate 0.5 \
+        --campaign-k 0,0.1 --campaign-seeds 4 --totals-only \
+        --shards auto --chunk 65536
 
 Facade (repro.core.Scheduler):
     Scheduler(policy, placer=..., faults=..., seeds=...).run(w,
@@ -76,7 +89,8 @@ import numpy as np
 
 from repro.core import (JSCC_SYSTEMS, FaultConfig, Scheduler,
                         make_npb_workload)
-from repro.core.cliargs import add_policy_options, build_engine, build_policy
+from repro.core.cliargs import (add_policy_options, add_scale_options,
+                                build_engine, build_policy, build_scale)
 from repro.data.scenarios import (make_stream_workload, maintenance_windows,
                                   load_swf, workload_from_trace,
                                   NPB_SMALL, NPB_LARGE, ARRIVAL_KINDS)
@@ -95,7 +109,8 @@ def _parse_outages(specs, n_systems):
 def build_workload(args):
     outage = _parse_outages(args.outage, len(JSCC_SYSTEMS))
     if args.trace:
-        w = workload_from_trace(load_swf(args.trace), JSCC_SYSTEMS)
+        w = workload_from_trace(load_swf(args.trace), JSCC_SYSTEMS,
+                                calibrate=args.calibrate_trace)
         if outage is not None:
             from dataclasses import replace
             w = replace(w, outage=outage)
@@ -111,6 +126,7 @@ def build_workload(args):
 def main():
     ap = argparse.ArgumentParser()
     add_policy_options(ap, engine=True)     # the shared grammar (cliargs)
+    add_scale_options(ap)                   # --shards / --chunk
     ap.add_argument("--easy-eval", default="batched",
                     choices=("batched", "unrolled"),
                     help="EASY candidate evaluation: batched (one [W, S] "
@@ -128,7 +144,12 @@ def main():
     ap.add_argument("--mix-small", type=float, default=0.5,
                     help="weight of the small NPB job-size class")
     ap.add_argument("--trace", default="",
-                    help="SWF trace file to replay instead of synthetic jobs")
+                    help="SWF trace file to replay instead of synthetic "
+                         "jobs (.gz transparently gunzipped)")
+    ap.add_argument("--calibrate-trace", action="store_true",
+                    help="calibrate replayed job classes against the "
+                         "phase model (workload_model.predict_phases) "
+                         "instead of raw node throughput")
     ap.add_argument("--outage", action="append", default=[],
                     metavar="S:T0:T1",
                     help="maintenance window on system S (repeatable)")
@@ -147,6 +168,7 @@ def main():
     w = build_workload(args)
     pol = build_policy(args)
     engine = build_engine(args)
+    scale = build_scale(args)
     faults = FaultConfig(straggler_prob=args.stragglers,
                          failure_prob=args.failures)
 
@@ -156,7 +178,7 @@ def main():
         seeds = [args.seed + i for i in range(max(args.campaign_seeds, 1))]
         res = Scheduler(pol.with_params(k=ks), faults=faults, seeds=seeds,
                         warm_start=not args.cold, engine=engine,
-                        easy_eval=args.easy_eval).run(
+                        easy_eval=args.easy_eval, **scale).run(
             w, totals_only=args.totals_only)
         E = np.asarray(res.total_energy)            # [K, R]
         M = np.asarray(res.makespan)
@@ -175,7 +197,7 @@ def main():
         res = Scheduler(pol.with_params(k=ks), faults=faults,
                         seeds=args.seed, warm_start=not args.cold,
                         engine=engine,
-                        easy_eval=args.easy_eval).run(w)
+                        easy_eval=args.easy_eval, **scale).run(w)
         E = np.asarray(res.total_energy)
         M = np.asarray(res.makespan)
         print("K,energy_J,makespan_s,dE%,dT%")
@@ -186,7 +208,7 @@ def main():
 
     r = Scheduler(pol, faults=faults, seeds=args.seed,
                   warm_start=not args.cold, engine=engine,
-                  easy_eval=args.easy_eval).run(w)
+                  easy_eval=args.easy_eval, **scale).run(w)
     sel = np.asarray(r.system)
     k_str = np.format_float_positional(float(np.asarray(pol.k)), trim="-")
     q_str = pol.queue if pol.queue == "fcfs" else \

@@ -14,13 +14,15 @@ import numpy as np
 import pytest
 
 from repro.core import make_policy, parse_policy_spec
-from repro.core.cliargs import (add_policy_options, build_engine,
-                                build_fault, build_policy, policy_spec)
+from repro.core.cliargs import (add_policy_options, add_scale_options,
+                                build_engine, build_fault, build_policy,
+                                build_scale, policy_spec)
 
 
 def parse(*argv):
     ap = argparse.ArgumentParser()
     add_policy_options(ap, engine=True)
+    add_scale_options(ap)
     return ap.parse_args(list(argv))
 
 
@@ -119,3 +121,34 @@ def test_fault_flag_resolution():
     assert build_fault(parse("--mode", "paper")) is None
     f = build_fault(parse("--failures", "0.1", "--stragglers", "0.05"))
     assert f.failure_prob == 0.1 and f.straggler_prob == 0.05
+
+
+# ------------------------------------------------------ scale-out flags
+
+def test_scale_flag_round_trip():
+    """--shards/--chunk resolve to Scheduler kwargs; absent flags give
+    the single-device monolithic defaults so **build_scale always
+    composes."""
+    assert build_scale(parse("--mode", "paper")) \
+        == {"shards": None, "chunk": None}
+    assert build_scale(parse("--shards", "auto")) \
+        == {"shards": "auto", "chunk": None}
+    assert build_scale(parse("--shards", "4", "--chunk", "65536")) \
+        == {"shards": 4, "chunk": 65536}
+    assert build_scale(parse("--chunk", "0")) == \
+        {"shards": None, "chunk": None}
+    with pytest.raises(ValueError, match="--shards expects"):
+        build_scale(parse("--shards", "many"))
+    # a parser without the scale options still resolves (the service CLI)
+    ap = argparse.ArgumentParser()
+    add_policy_options(ap, engine=True)
+    assert build_scale(ap.parse_args(["--mode", "paper"])) \
+        == {"shards": None, "chunk": None}
+
+
+def test_scale_flags_accepted_by_scheduler():
+    """The resolved kwargs construct a Scheduler verbatim."""
+    from repro.core import Scheduler
+    sc = Scheduler("paper",
+                   **build_scale(parse("--shards", "1", "--chunk", "128")))
+    assert sc.shards == 1 and sc.chunk == 128

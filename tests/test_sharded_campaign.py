@@ -1,0 +1,209 @@
+"""Sharded & chunked campaigns (the million-job scale-out).
+
+Three contracts, per ISSUE 10's acceptance criteria:
+
+- chunked-vs-monolithic: streaming the event scan in fixed windows with
+  the carry threaded between chunks is the SAME op trace as the
+  monolithic ``lax.scan``, so results are bit-identical on every core —
+  arrival, EASY, event-granular, conservative — for totals and the
+  per-job full path alike.
+- sharded-vs-single-device: the campaign grid axis partitioned over a
+  ``("grid",)`` mesh of 8 host CPU devices (subprocess —
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` must be set
+  before jax initializes, and conftest.py forbids a global override)
+  is bit-identical to the single-device vmap, including non-divisible
+  batch sizes (pad lanes duplicated and sliced back off).
+- J=10^6: a million-job synthetic-SWF campaign completes on the 8-device
+  mesh under ``totals_only`` + chunking without materializing any
+  [grid, J] array (compiled peak-temp asserted well under one such
+  array's footprint).
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import JSCC_SYSTEMS, Scheduler, parse_policy_spec
+from repro.data.scenarios import make_stream_workload
+
+pytestmark = pytest.mark.slow
+
+TOTAL_FIELDS = ("total_energy", "makespan", "total_wait", "slowdown_sum",
+                "max_wait", "peak_power", "capped_delay")
+PERJOB_FIELDS = ("system", "start", "finish", "energy", "backfilled")
+
+CORES = {
+    "fcfs": dict(policy="paper"),
+    "easy": dict(policy="easy_backfill:window=6"),
+    "events": dict(policy="paper", engine="events"),
+    "conservative": dict(policy="conservative:window=6"),
+}
+
+
+@pytest.fixture(scope="module")
+def stream_150():
+    return make_stream_workload(JSCC_SYSTEMS, 150, arrival="poisson",
+                                rate=0.5, seed=3, pred_noise=0.05)
+
+
+def _sched(policy, engine=None, **kw):
+    return Scheduler(parse_policy_spec(policy), warm_start=True,
+                     seeds=[0, 1, 2], engine=engine, **kw)
+
+
+def _dicts_equal(a, b, fields):
+    for f in fields:
+        va, vb = a.get(f), b.get(f)
+        if va is None and vb is None:
+            continue
+        np.testing.assert_array_equal(
+            np.asarray(va), np.asarray(vb), err_msg=f)
+
+
+@pytest.mark.parametrize("core", CORES)
+def test_chunked_bit_identity_totals(stream_150, core):
+    """chunk boundaries must be invisible: same steps, same carries,
+    same totals, bit for bit, on every scan core."""
+    kw = dict(CORES[core])
+    pol, eng = kw.pop("policy"), kw.pop("engine", None)
+    mono = _sched(pol, eng).run(stream_150, totals_only=True).to_dict()
+    chunked = _sched(pol, eng, chunk=37).run(
+        stream_150, totals_only=True).to_dict()
+    _dicts_equal(mono, chunked, TOTAL_FIELDS)
+
+
+@pytest.mark.parametrize("core", ["fcfs", "easy"])
+def test_chunked_bit_identity_full_path(stream_150, core):
+    """Per-job outputs spilled chunk by chunk and reassembled must equal
+    the monolithic scan's stacked ys exactly."""
+    kw = dict(CORES[core])
+    pol, eng = kw.pop("policy"), kw.pop("engine", None)
+    mono = _sched(pol, eng).run(stream_150).to_dict()
+    chunked = _sched(pol, eng, chunk=41).run(stream_150).to_dict()
+    _dicts_equal(mono, chunked, PERJOB_FIELDS + TOTAL_FIELDS)
+
+
+def test_chunk_validation():
+    with pytest.raises(ValueError):
+        Scheduler("paper", chunk=0)
+    with pytest.raises(ValueError):
+        Scheduler("paper", shards=0)
+    with pytest.raises(ValueError):
+        Scheduler("paper", shards="many")
+
+
+def _run_subprocess(script, devices=8, timeout=900):
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={devices} "
+                        + env.get("XLA_FLAGS", "")).strip()
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=timeout,
+                         cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))))
+    assert out.returncode == 0, out.stderr[-4000:]
+    return json.loads(out.stdout.splitlines()[-1])
+
+
+def test_sharded_vs_single_device_bit_identity():
+    """8 host devices: 'auto' sharding, explicit sharding + chunking, and
+    a non-divisible batch (10 lanes on 8 devices -> pad to 16) must all
+    reproduce the single-device vmap bitwise."""
+    rep = _run_subprocess("""
+import json
+import numpy as np
+from repro.core import JSCC_SYSTEMS, Scheduler, make_policy
+from repro.data.scenarios import make_stream_workload
+
+w = make_stream_workload(JSCC_SYSTEMS, 200, arrival="poisson", rate=0.5,
+                         seed=3, pred_noise=0.05)
+ks = np.linspace(0.0, 0.4, 5, dtype=np.float32)      # 5 K x 2 seeds = 10
+def run(**kw):
+    res = Scheduler(make_policy("ucb", k=ks), warm_start=True, seeds=[0, 1],
+                    **kw).run(w, totals_only=True).to_dict()
+    return {f: np.asarray(res[f]) for f in
+            ("total_energy", "makespan", "total_wait", "max_wait")}
+
+base = run()
+eq = {}
+for tag, kw in (("auto", dict(shards="auto")),
+                ("eight_chunked", dict(shards=8, chunk=64)),
+                ("one", dict(shards=1))):
+    got = run(**kw)
+    eq[tag] = all(np.array_equal(base[f], got[f]) for f in base)
+import jax
+print(json.dumps({"devices": len(jax.devices()), "eq": eq}))
+""")
+    assert rep["devices"] == 8
+    assert all(rep["eq"].values()), rep
+
+
+def test_million_job_campaign_8dev():
+    """Acceptance: J=10^6 synthetic-SWF campaign, 8-lane grid sharded
+    over an 8-device host mesh, chunked totals_only — completes, returns
+    finite totals with no J-sized leaf, and the compiled chunk advance's
+    peak temp memory stays far under one [grid, J] f32 array."""
+    rep = _run_subprocess("""
+import json
+import numpy as np
+import jax
+from repro.core import Scheduler, make_policy
+from repro.core import engine as eng
+from repro.core.systems import ComputeSystem
+from repro.data.scenarios import synthetic_swf_arrays, workload_from_arrays
+
+SMALL = (
+    ComputeSystem(name="alpha", n_nodes=8, cores_per_node=64,
+                  peak_flops_node=2e12, mem_bw_node=200e9,
+                  net_bw_node=10e9, disk_bw_node=2e9, idle_w=100.0,
+                  cpu_w=200.0, net_w=20.0, disk_w=10.0, efficiency=0.5),
+    ComputeSystem(name="beta", n_nodes=12, cores_per_node=48,
+                  peak_flops_node=1.2e12, mem_bw_node=150e9,
+                  net_bw_node=8e9, disk_bw_node=1.5e9, idle_w=80.0,
+                  cpu_w=160.0, net_w=15.0, disk_w=8.0, efficiency=0.55),
+)
+J = 1_000_000
+w = workload_from_arrays(*synthetic_swf_arrays(J, seed=11), SMALL)
+
+captured = {}
+orig = eng._chunk_advance
+def spy(*a, **k):
+    captured.setdefault("args", (a, k))
+    return orig(*a, **k)
+eng._chunk_advance = spy
+
+ks = np.linspace(0.0, 0.35, 4, dtype=np.float32)     # 4 K x 2 seeds = 8
+res = Scheduler(make_policy("ucb", k=ks), warm_start=True, seeds=[0, 1],
+                shards="auto", chunk=131_072).run(w, totals_only=True)
+out = res.to_dict()
+leaf_shapes = {f: list(np.shape(v)) for f, v in out.items()
+               if v is not None and np.ndim(np.asarray(v))}
+finite = all(np.isfinite(np.asarray(out[f])).all()
+             for f in ("total_energy", "makespan", "total_wait"))
+no_J_leaf = all(J not in s for s in leaf_shapes.values())
+
+temp_bytes = None
+a, k = captured["args"]
+try:
+    ma = orig.lower(*a, **k).compile().memory_analysis()
+    temp_bytes = int(getattr(ma, "temp_size_in_bytes"))
+except Exception:
+    pass
+
+print(json.dumps({
+    "devices": len(jax.devices()), "finite": bool(finite),
+    "no_J_leaf": bool(no_J_leaf), "leaf_shapes": leaf_shapes,
+    "temp_bytes": temp_bytes,
+    "energy0": float(np.asarray(out["total_energy"]).reshape(-1)[0]),
+}))
+""", timeout=1800)
+    assert rep["devices"] == 8
+    assert rep["finite"] and rep["no_J_leaf"], rep
+    assert rep["energy0"] > 0
+    grid_J_bytes = 8 * 1_000_000 * 4          # one [grid, J] f32 array
+    if rep["temp_bytes"] is not None:         # best-effort on CPU
+        assert rep["temp_bytes"] < grid_J_bytes // 4, rep["temp_bytes"]

@@ -1,0 +1,134 @@
+"""SWF archive replay: the gzipped fixture through the loader, the
+vectorized column builder, and the phase-model calibration path."""
+
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core import JSCC_SYSTEMS, Scheduler
+from repro.core.workload_model import predict_phases
+from repro.data.scenarios import (SWF_PHASE_FRACTIONS, load_swf, swf_lines,
+                                  synthetic_swf_arrays, workload_from_arrays,
+                                  workload_from_swf, workload_from_trace)
+
+FIXTURE = pathlib.Path(__file__).parent / "data" / "jscc_sample.swf.gz"
+
+
+@pytest.fixture(scope="module")
+def fixture_jobs():
+    return load_swf(FIXTURE)
+
+
+def test_fixture_gzip_parse(fixture_jobs):
+    """Gzipped archive file: comments and malformed / unknown-runtime /
+    zero-proc records dropped, submits rebased to the first job."""
+    assert len(fixture_jobs) == 48
+    assert fixture_jobs[0].submit == 0.0
+    assert all(j.runtime > 0 and j.procs > 0 for j in fixture_jobs)
+    subs = [j.submit for j in fixture_jobs]
+    assert subs == sorted(subs)
+
+
+def test_swf_lines_round_trip():
+    """Columns -> SWF text -> loader reproduces the columns."""
+    sub, run, pr = synthetic_swf_arrays(64, seed=5)
+    jobs = load_swf(swf_lines(sub, run, pr))
+    assert len(jobs) == 64
+    np.testing.assert_array_equal([j.runtime for j in jobs], run)
+    np.testing.assert_array_equal([j.procs for j in jobs], pr)
+    # loader rebases submits; relative spacing survives
+    np.testing.assert_array_equal([j.submit for j in jobs], sub - sub[0])
+
+
+def test_arrays_builder_matches_trace_builder(fixture_jobs):
+    """workload_from_arrays is the core workload_from_trace delegates to
+    — identical Workload from columns or TraceJob records."""
+    w_t = workload_from_trace(fixture_jobs, JSCC_SYSTEMS)
+    w_a = workload_from_arrays(
+        np.asarray([j.submit for j in fixture_jobs]),
+        np.asarray([j.runtime for j in fixture_jobs]),
+        np.asarray([j.procs for j in fixture_jobs]), JSCC_SYSTEMS)
+    for f in ("prog", "arrival", "n_req", "T_true", "C_true", "E_true"):
+        np.testing.assert_array_equal(np.asarray(getattr(w_t, f)),
+                                      np.asarray(getattr(w_a, f)))
+    assert w_t.programs == w_a.programs
+    assert w_t.T_comp is None and w_a.T_comp is None
+
+
+def test_calibrated_runtime_round_trips_reference(fixture_jobs):
+    """Calibration inverts each class's JobProfile from its median
+    runtime on the reference system, so predict_phases must reproduce
+    that runtime there (when the node request isn't capacity-clipped)."""
+    w = workload_from_trace(fixture_jobs, JSCC_SYSTEMS, calibrate=True)
+    theta = np.asarray([s.peak_flops_node * s.efficiency
+                        for s in JSCC_SYSTEMS])
+    cores = np.asarray([s.cores_per_node for s in JSCC_SYSTEMS], float)
+    ref = int(np.argmax(theta * cores))
+    runt = np.asarray([j.runtime for j in fixture_jobs])
+    procs = np.asarray([j.procs for j in fixture_jobs], float)
+    prog = np.asarray(w.prog)
+    checked = 0
+    for pi in range(len(w.programs)):
+        m = prog == pi
+        if np.ceil(np.median(procs[m]) / cores[ref]) \
+                <= JSCC_SYSTEMS[ref].n_nodes:
+            np.testing.assert_allclose(w.T_true[pi, ref],
+                                       np.median(runt[m]), rtol=1e-9)
+            checked += 1
+    assert checked > 0
+
+
+def test_calibrated_carries_phase_split(fixture_jobs):
+    """calibrate=True fills the DVFS phase split from predict_phases:
+    T_comp is the compute share everywhere, bounded by T_true, with the
+    reference column matching the assumed compute fraction."""
+    w = workload_from_trace(fixture_jobs, JSCC_SYSTEMS, calibrate=True)
+    assert w.T_comp is not None and w.E_comp is not None
+    T, Tc = np.asarray(w.T_true), np.asarray(w.T_comp)
+    assert ((0 < Tc) & (Tc <= T + 1e-9)).all()
+    assert (np.asarray(w.E_comp) <= np.asarray(w.E_true) + 1e-9).all()
+    theta = np.asarray([s.peak_flops_node * s.efficiency
+                        for s in JSCC_SYSTEMS])
+    cores = np.asarray([s.cores_per_node for s in JSCC_SYSTEMS], float)
+    ref = int(np.argmax(theta * cores))
+    np.testing.assert_allclose(Tc[:, ref] / T[:, ref],
+                               SWF_PHASE_FRACTIONS[0], rtol=1e-9)
+
+
+def test_net_disk_scale_with_system_bandwidth(fixture_jobs):
+    """The calibrated net/disk phases follow each system's bandwidth —
+    the behaviour the first-order throughput model cannot express."""
+    w = workload_from_trace(fixture_jobs, JSCC_SYSTEMS, calibrate=True)
+    from repro.core.workload_model import JobProfile
+    # reconstruct one class's non-compute share per system and check it
+    # moves opposite to net+disk node bandwidth at fixed node count
+    noncomp = np.asarray(w.T_true) - np.asarray(w.T_comp)
+    assert (noncomp > 0).all()
+    # same class, different systems: slower fabric => longer phases
+    for pi in range(noncomp.shape[0]):
+        n = np.asarray(w.n_req)[pi].astype(float)
+        bw = np.asarray([s.net_bw_node for s in JSCC_SYSTEMS])
+        dk = np.asarray([s.disk_bw_node for s in JSCC_SYSTEMS])
+        # t_noncomp * n is volume / per-node-bandwidth mix: verify it is
+        # NOT constant across systems unless bandwidths match
+        spread = (noncomp[pi] * n)
+        if len(set(bw)) > 1 or len(set(dk)) > 1:
+            assert spread.max() / spread.min() > 1.0 + 1e-6
+            break
+
+
+def test_workload_from_swf_end_to_end():
+    """One-call archive replay runs through the engine."""
+    w = workload_from_swf(FIXTURE, JSCC_SYSTEMS)
+    assert w.T_comp is not None          # calibrated by default
+    res = Scheduler("paper", warm_start=True).run(w)
+    assert float(res.total_energy) > 0
+    assert np.asarray(res.system).shape == (48,)
+
+
+def test_uncalibrated_default_unchanged(fixture_jobs):
+    """calibrate defaults off for the legacy builders: first-order
+    tables, no phase split (pinned by the trace-replay suites)."""
+    w = workload_from_trace(fixture_jobs, JSCC_SYSTEMS)
+    assert w.T_comp is None and w.E_comp is None
